@@ -1,0 +1,52 @@
+"""Paper Figures 3 & 4: MCFP vs MCEP accuracy.
+
+Fig 3: RAG@200 vs R (walks per source) for both estimators.
+Fig 4: RAG vs k at matched sample budgets (MCFP R=1000 ~ MCEP R=6700).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, emit, ground_truth, paper_sources, rag, timeit
+from repro.core import mcep, mcfp
+
+
+def run(fast: bool = False) -> dict:
+    g = bench_graph("tiny" if fast else "wiki_like")
+    sources = paper_sources(g, per_bucket=3 if fast else 5)
+    exact = ground_truth(g, sources)
+    key = jax.random.PRNGKey(0)
+    src = jnp.asarray(sources, jnp.int32)
+    out = {}
+
+    # -- Fig 3: RAG@k vs R ---------------------------------------------------
+    k = 50
+    r_values = [100, 400, 1000] if fast else [100, 400, 1000, 2000]
+    for r in r_values:
+        t_fp = timeit(lambda: mcfp.estimate_ppr(g, src, r, key), iters=1)
+        est_fp = mcfp.estimate_ppr(g, src, r, key)
+        est_ep = mcep.estimate_ppr(g, src, r, key)
+        rag_fp = rag(exact, est_fp, k)
+        rag_ep = rag(exact, est_ep, k)
+        out[f"R{r}"] = (rag_fp, rag_ep)
+        emit(f"fig3_mcfp_R{r}", t_fp * 1e6, f"rag@{k}={rag_fp:.4f}")
+        emit(f"fig3_mcep_R{r}", t_fp * 1e6, f"rag@{k}={rag_ep:.4f}")
+
+    # -- Fig 4: matched budgets (MCFP R vs MCEP R/c) --------------------------
+    r = 600 if fast else 1000
+    r_ep = int(r / 0.15)
+    est_fp = mcfp.estimate_ppr(g, src, r, key)
+    est_ep = mcep.estimate_ppr(g, src, r_ep, key)
+    for k in (10, 50, 200):
+        rf, re = rag(exact, est_fp, k), rag(exact, est_ep, k)
+        out[f"fig4_k{k}"] = (rf, re)
+        emit(f"fig4_matched_k{k}", 0.0,
+             f"mcfp_R{r}={rf:.4f};mcep_R{r_ep}={re:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""Paper Table 2: preprocessing time and index size vs R.
+
+Measured on the CPU-scale graph; the paper's billion-edge rows
+(twitter-2010, uk-union) are reported analytically by fitting the measured
+positions/second of the bulk walk engine (the paper observes *sublinear*
+time in R — we check that too).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_graph, emit
+from repro.configs.powerwalk import PAPER_GRAPHS
+from repro.core.index import build_index, preprocessing_cost_model
+
+
+def run(fast: bool = False) -> dict:
+    g = bench_graph("tiny" if fast else "wiki_like")
+    key = jax.random.PRNGKey(2)
+    out = {}
+    rate = None
+    r_values = [10, 100] if fast else [10, 100, 500]
+    for r in r_values:
+        t0 = time.perf_counter()
+        idx, stats = build_index(
+            g, r=r, l=max(16, min(int(r / 0.15), 1024)), key=key,
+            source_batch=512,
+        )
+        dt = time.perf_counter() - t0
+        positions = g.n * r / 0.15
+        rate = positions / dt
+        out[r] = dict(seconds=dt, nbytes=stats["nbytes"], rate=rate)
+        emit(f"table2_R{r}", dt * 1e6,
+             f"index_bytes={stats['nbytes']};positions_per_s={rate:.3e}")
+
+    # analytic extrapolation to the paper's large graphs at measured rate
+    for gname in ("twitter-2010", "uk-union"):
+        gs = PAPER_GRAPHS[gname]
+        for r in (10, 100, 2000):
+            cm = preprocessing_cost_model(gs.n, r, step_rate=rate)
+            emit(
+                f"table2_extrap_{gname}_R{r}", cm["est_seconds"] * 1e6,
+                f"index_bytes={cm['index_bytes_uncapped']};analytic",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

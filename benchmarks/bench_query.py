@@ -1,0 +1,59 @@
+"""Paper Table 3 + Figure 6: online query latency vs batch size and method.
+
+Methods: PI, online MCFP, FPPR (direct index lookup), PowerWalk at
+R in {0, 10, 100}.  Batch sizes scaled to the CPU-tier graph.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import bench_graph, emit
+from repro.core.index import build_index
+from repro.core.query import BatchQueryEngine, QueryConfig
+
+
+def run(fast: bool = False) -> dict:
+    g = bench_graph("tiny" if fast else "wiki_like")
+    key = jax.random.PRNGKey(3)
+    rng = np.random.default_rng(0)
+    out = {}
+
+    idx10, _ = build_index(g, r=10, l=67, key=key, source_batch=512)
+    idx100, _ = build_index(g, r=100, l=256, key=key, source_batch=512)
+
+    engines = {
+        "pi": BatchQueryEngine(g, None, QueryConfig(
+            mode="pi", pi_iterations=50, top_k=50)),
+        "mcfp_online": BatchQueryEngine(g, None, QueryConfig(
+            mode="mcfp", r_online=1000, top_k=50)),
+        "fppr": BatchQueryEngine(g, idx100, QueryConfig(
+            mode="fppr", top_k=50)),
+        "powerwalk_R0": BatchQueryEngine(g, None, QueryConfig(
+            mode="verd", t_iterations=7, top_k=50)),
+        "powerwalk_R10": BatchQueryEngine(g, idx10, QueryConfig(
+            mode="powerwalk", t_iterations=5, top_k=50)),
+        "powerwalk_R100": BatchQueryEngine(g, idx100, QueryConfig(
+            mode="powerwalk", t_iterations=2, top_k=50)),
+    }
+
+    batches = [1, 100, 1000] if fast else [1, 100, 1000, 4000]
+    for name, eng in engines.items():
+        for nq in batches:
+            if name == "pi" and nq > 100:
+                continue  # the paper's PI cannot handle big batches either
+            qs = rng.integers(0, g.n, size=nq).astype(np.int32)
+            res = eng.run(qs)          # includes compile on first call
+            res2 = eng.run(qs)         # steady-state
+            out[(name, nq)] = res2["seconds"]
+            emit(
+                f"table3_{name}_q{nq}",
+                res2["seconds"] / nq * 1e6,
+                f"total_s={res2['seconds']:.4f};qps={res2['qps']:.1f}",
+            )
+    return out
+
+
+if __name__ == "__main__":
+    run()

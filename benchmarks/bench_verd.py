@@ -1,0 +1,52 @@
+"""Paper Figure 5: VERD accuracy vs iterations T at index R in {0, 10, 100}.
+
+The paper's calibration: RAG > 0.99 needs T = 7 / 5 / 2 at R = 0 / 10 / 100.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import bench_graph, emit, ground_truth, paper_sources, rag, timeit
+from repro.core import verd
+from repro.core.index import build_index
+
+
+def run(fast: bool = False) -> dict:
+    g = bench_graph("tiny" if fast else "wiki_like")
+    sources = paper_sources(g, per_bucket=3 if fast else 5)
+    exact = ground_truth(g, sources)
+    src = jnp.asarray(sources, jnp.int32)
+    key = jax.random.PRNGKey(1)
+    k = 50
+    out = {}
+
+    indexes = {0: None}
+    for r in (10, 100):
+        idx, stats = build_index(
+            g, r=r, l=max(16, int(r / 0.15)), key=key,
+            source_batch=512,
+        )
+        indexes[r] = idx
+        emit(f"fig5_index_R{r}_build", 0.0,
+             f"bytes={stats['nbytes']};drop={stats['drop_fraction']:.4f}")
+
+    t_values = [0, 1, 2, 3, 5, 7] if not fast else [0, 2, 5]
+    for r, idx in indexes.items():
+        for t in t_values:
+            if r == 0 and t == 0:
+                continue
+            sec = timeit(
+                lambda: verd.verd_query(g, src, idx, t=t), iters=1
+            )
+            got = verd.verd_query(g, src, idx, t=t)
+            rr = rag(exact, got, k)
+            out[(r, t)] = rr
+            emit(f"fig5_verd_R{r}_T{t}", sec * 1e6, f"rag@{k}={rr:.4f}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

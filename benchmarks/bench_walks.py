@@ -1,0 +1,39 @@
+"""Walk-engine throughput (the DrunkardMob comparison, paper Section 3.1).
+
+Reports positions/second of the bulk walk engine — the number the paper
+quotes against Spark (1728.2 s vs 2967 s for R=100 on twitter-2010).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import bench_graph, emit, timeit
+from repro.core.walks import simulate_walks, walks_for_sources
+
+
+def run(fast: bool = False) -> dict:
+    g = bench_graph("tiny" if fast else "wiki_like")
+    key = jax.random.PRNGKey(4)
+    out = {}
+    for n_src, r in ((256, 10), (256, 100)):
+        sources = jnp.arange(n_src, dtype=jnp.int32)
+        ws, wr = walks_for_sources(sources, r)
+
+        def go():
+            return simulate_walks(
+                g, ws, wr, key, n_rows=n_src, max_steps=64
+            ).moves.sum()
+
+        sec = timeit(go, iters=2)
+        positions = float(go())
+        rate = positions / sec
+        out[(n_src, r)] = rate
+        emit(f"walks_S{n_src}_R{r}", sec * 1e6,
+             f"positions={positions:.0f};per_s={rate:.3e}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,69 @@
+"""Shared benchmark utilities: graphs, ground truth, timing, CSV output."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics
+from repro.core.graph import Graph, bucket_sample_sources
+from repro.core.power_iteration import power_iteration
+from repro.graphs import synthetic
+
+_ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    """Print one CSV row: name,us_per_call,derived."""
+    row = f"{name},{us_per_call:.1f},{derived}"
+    _ROWS.append(row)
+    print(row, flush=True)
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time (seconds) with block_until_ready."""
+    for _ in range(warmup):
+        r = fn(*args)
+        jax.block_until_ready(r)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        r = fn(*args)
+        jax.block_until_ready(r)
+        ts.append(time.perf_counter() - t0)
+    return sorted(ts)[len(ts) // 2]
+
+
+_GRAPH_CACHE: Dict[str, object] = {}
+
+
+def bench_graph(name: str = "wiki_like") -> Graph:
+    """wiki-Vote-scale synthetic power-law graph (the paper's small tier)."""
+    if name not in _GRAPH_CACHE:
+        if name == "wiki_like":
+            _GRAPH_CACHE[name] = synthetic.rmat(12, avg_deg=12.0, seed=1)
+        elif name == "tiny":
+            _GRAPH_CACHE[name] = synthetic.rmat(9, avg_deg=8.0, seed=2)
+        else:
+            raise KeyError(name)
+    return _GRAPH_CACHE[name]
+
+
+def ground_truth(graph: Graph, sources: np.ndarray) -> jnp.ndarray:
+    """PI to residual ~1e-7 (the paper's ground-truth method)."""
+    return power_iteration(
+        graph, jnp.asarray(sources, jnp.int32), n_iter=100
+    )
+
+
+def paper_sources(graph: Graph, per_bucket: int = 10, seed: int = 0) -> np.ndarray:
+    """Paper Section 4.2: 10 random vertices per out-degree bucket."""
+    return bucket_sample_sources(graph, per_bucket=per_bucket, seed=seed)
+
+
+def rag(exact, approx, k: int) -> float:
+    return metrics.mean_rag(exact, approx, k)

@@ -1,0 +1,55 @@
+"""Benchmark driver: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Output: ``name,us_per_call,derived`` CSV rows (one per measurement).
+Mapping to the paper:
+  bench_accuracy   -> Figures 3-4 (MCFP vs MCEP)
+  bench_verd       -> Figure 5    (VERD iterations vs index R)
+  bench_preprocess -> Table 2     (offline indexing cost; analytic big rows)
+  bench_query      -> Table 3 / Figure 6 (online batch-query latency)
+  bench_walks      -> Section 3.1 (walk-engine throughput)
+  bench_kernels    -> Pallas kernel micro-benches + correctness gates
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller graphs / fewer points (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module suffixes to run")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_accuracy, bench_kernels, bench_preprocess,
+                            bench_query, bench_verd, bench_walks)
+    modules = dict(
+        accuracy=bench_accuracy, verd=bench_verd, preprocess=bench_preprocess,
+        query=bench_query, walks=bench_walks, kernels=bench_kernels,
+    )
+    if args.only:
+        keep = set(args.only.split(","))
+        modules = {k: v for k, v in modules.items() if k in keep}
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    failures = 0
+    for name, mod in modules.items():
+        print(f"# --- {name} ---", flush=True)
+        try:
+            mod.run(fast=args.fast)
+        except Exception as e:  # keep the suite going; report at the end
+            failures += 1
+            print(f"# FAILED {name}: {type(e).__name__}: {e}", flush=True)
+    print(f"# total_seconds={time.time() - t0:.1f} failures={failures}")
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""PowerWalk x GNN: PPR-propagation (APPNP/PPRGo style) vs plain GCN.
+
+    PYTHONPATH=src python examples/gnn_ppr.py
+
+Uses the PowerWalk index as the propagation operator of a GNN: instead of
+stacking message-passing layers, each node aggregates an MLP's outputs over
+its top-L PPR neighborhood (the paper's technique as a first-class GNN
+feature).  Trains both models on a synthetic community graph and compares
+accuracy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import build_index
+from repro.graphs import sampler
+from repro.models import gcn as gcn_mod
+from repro.models.gcn import GCNConfig
+from repro.training import optimizer as opt_mod
+
+
+def community_graph(n_comm=6, per_comm=60, d_feat=16, seed=0):
+    """Stochastic block model-ish graph with community-correlated features."""
+    rng = np.random.default_rng(seed)
+    n = n_comm * per_comm
+    labels = np.repeat(np.arange(n_comm), per_comm)
+    src, dst = [], []
+    for i in range(n):
+        same = rng.choice(np.nonzero(labels == labels[i])[0], size=8)
+        other = rng.integers(0, n, size=2)
+        for j in np.concatenate([same, other]):
+            if j != i:
+                src.append(i)
+                dst.append(int(j))
+    feats = rng.normal(size=(n, d_feat)).astype(np.float32)
+    onehot = np.eye(n_comm)[labels].astype(np.float32)  # [n, n_comm]
+    feats[:, : n_comm] += 2.0 * onehot
+    from repro.core.graph import Graph
+    return Graph.from_edges(src, dst, n=n), feats, labels.astype(np.int32)
+
+
+def accuracy(logits, labels, mask):
+    pred = np.asarray(jnp.argmax(logits, -1))
+    return float((pred[mask] == labels[mask]).mean())
+
+
+def main():
+    print("== PPR-propagation GNN vs plain GCN ==")
+    g, feats, labels = community_graph()
+    n = g.n
+    rng = np.random.default_rng(0)
+    train_mask = rng.random(n) < 0.3
+    test_mask = ~train_mask
+
+    cfg = GCNConfig(n_layers=2, d_feat=feats.shape[1], d_hidden=32,
+                    n_classes=labels.max() + 1, aggregator="sym")
+    batch = dict(
+        features=jnp.asarray(feats),
+        edge_src=g.src, edge_dst=g.col_idx,
+        labels=jnp.asarray(labels),
+        label_mask=jnp.asarray(train_mask.astype(np.float32)),
+    )
+
+    def train(loss_fn, params, batch, steps=150, lr=0.05):
+        grad_fn = jax.jit(jax.value_and_grad(loss_fn))
+        for _ in range(steps):
+            loss, grads = grad_fn(params, batch)
+            params = opt_mod.sgd_update(params, grads, lr)
+        return params, float(loss)
+
+    # --- plain GCN -----------------------------------------------------
+    p0 = gcn_mod.init(cfg, jax.random.PRNGKey(0))
+    p_gcn, loss_gcn = train(
+        lambda p, b: gcn_mod.loss_full(cfg, p, b), p0, batch)
+    logits = gcn_mod.forward_full(cfg, p_gcn, batch["features"],
+                                  batch["edge_src"], batch["edge_dst"])
+    acc_gcn = accuracy(logits, labels, test_mask)
+
+    # --- PPR-propagation model ------------------------------------------
+    index, _ = build_index(g, r=100, l=32, key=jax.random.PRNGKey(1),
+                           source_batch=256)
+    nbr, w = sampler.ppr_importance_sample(
+        np.asarray(index.values), np.asarray(index.indices),
+        np.arange(n), budget=16,
+    )
+    ppr_batch = dict(
+        feats=jnp.asarray(feats),
+        ppr_idx=jnp.asarray(nbr), ppr_vals=jnp.asarray(w),
+        labels=jnp.asarray(labels),
+    )
+
+    def ppr_loss(p, b):
+        h = b["feats"]
+        for i in range(cfg.n_layers):
+            from repro.models import layers as L
+            h = L.dense_apply(p[f"layer_{i}"], h)
+            if i < cfg.n_layers - 1:
+                h = jax.nn.relu(h)
+        logits = gcn_mod.ppr_propagate(h, b["ppr_vals"], b["ppr_idx"])
+        from repro.models import layers as L
+        nll = L.softmax_cross_entropy(
+            logits, b["labels"], jnp.asarray(train_mask.astype(np.float32)))
+        return nll
+
+    p1 = gcn_mod.init(cfg, jax.random.PRNGKey(2))
+    p_ppr, loss_ppr = train(ppr_loss, p1, ppr_batch)
+    from repro.models import layers as L
+    h = ppr_batch["feats"]
+    for i in range(cfg.n_layers):
+        h = L.dense_apply(p_ppr[f"layer_{i}"], h)
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+    logits_ppr = gcn_mod.ppr_propagate(
+        h, ppr_batch["ppr_vals"], ppr_batch["ppr_idx"])
+    acc_ppr = accuracy(logits_ppr, labels, test_mask)
+
+    print(f"plain GCN:  loss {loss_gcn:.3f}  test acc {acc_gcn:.3f}")
+    print(f"PPR-prop:   loss {loss_ppr:.3f}  test acc {acc_ppr:.3f}")
+    assert acc_ppr > 0.5 and acc_gcn > 0.5
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

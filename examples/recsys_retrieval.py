@@ -1,0 +1,83 @@
+"""PowerWalk x RecSys: PPR candidate generation + model scoring.
+
+    PYTHONPATH=src python examples/recsys_retrieval.py
+
+The two-stage recommender the paper motivates (Twitter's WTF): PowerWalk
+answers "which items does this user's random walk reach" (candidate
+generation over the user-item bipartite graph), then SASRec scores the
+candidates.  Compares PPR retrieval against random candidates by recall of
+held-out interactions.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.query import BatchQueryEngine, QueryConfig
+from repro.core.index import build_index
+from repro.graphs import synthetic
+from repro.models.recsys import sasrec
+from repro.models.recsys.sasrec import SASRecConfig
+
+
+def main():
+    print("== PPR candidate generation + SASRec scoring ==")
+    n_users, n_items = 500, 400
+    g = synthetic.bipartite_recsys(n_users, n_items, avg_deg=12.0, seed=0)
+
+    # hold out each user's last interaction (the retrieval target)
+    rng = np.random.default_rng(0)
+    held = {}
+    src = np.asarray(g.src)
+    dst = np.asarray(g.col_idx)
+    for u in range(n_users):
+        items = dst[(src == u)]
+        if len(items):
+            held[u] = int(items[-1])
+
+    index, _ = build_index(g, r=100, l=64, key=jax.random.PRNGKey(0),
+                           source_batch=256)
+    engine = BatchQueryEngine(
+        g, index, QueryConfig(mode="powerwalk", t_iterations=2, top_k=60))
+
+    users = np.asarray(sorted(held)[:200], dtype=np.int32)
+    out = engine.run(users)
+    # keep only item vertices among the top-k answers
+    cand = out["indices"]
+    item_mask = cand >= n_users
+
+    hits = 0
+    k_eff = 50
+    rand_hits = 0
+    for i, u in enumerate(users):
+        items = cand[i][item_mask[i]][:k_eff]
+        hits += int(held[u] in set(items.tolist()))
+        rand = rng.integers(n_users, n_users + n_items, size=k_eff)
+        rand_hits += int(held[u] in set(rand.tolist()))
+    recall = hits / len(users)
+    recall_rand = rand_hits / len(users)
+    print(f"recall@{k_eff}: PPR={recall:.3f} vs random={recall_rand:.3f}")
+    assert recall > recall_rand, "PPR retrieval must beat random"
+
+    # --- stage 2: SASRec scores the PPR candidates ----------------------
+    cfg = SASRecConfig(n_items=n_items, embed_dim=32, n_blocks=2,
+                       n_heads=1, seq_len=16, d_ff=64)
+    params = sasrec.init(cfg, jax.random.PRNGKey(1))
+    u = users[0]
+    hist_items = (dst[(src == u)] - n_users)[:16]
+    hist = np.zeros(16, np.int32)
+    hist[-len(hist_items):] = hist_items % n_items
+    cands_u = (cand[0][item_mask[0]][:k_eff] - n_users) % n_items
+    scores = sasrec.retrieval_scores(
+        cfg, params,
+        dict(item_seq=jnp.asarray(hist[None]),
+             candidates=jnp.asarray(cands_u)),
+    )
+    order = np.argsort(-np.asarray(scores))
+    print(f"user {u}: top-5 scored candidates "
+          f"{cands_u[order[:5]].tolist()}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

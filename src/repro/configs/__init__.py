@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_arch("<id>")`` -> :class:`ArchSpec`.
+
+Ten assigned architectures + the paper's own PPR workload configs
+(``powerwalk`` module).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import (
+    command_r_plus_104b,
+    dbrx_132b,
+    dcn_v2,
+    dlrm_rm2,
+    gcn_cora,
+    grok_1_314b,
+    mind,
+    powerwalk,
+    qwen1_5_32b,
+    sasrec,
+    smollm_135m,
+)
+from repro.configs.base import ArchSpec, ShapeSpec  # noqa: F401
+
+_MODULES = (
+    dbrx_132b,
+    grok_1_314b,
+    qwen1_5_32b,
+    command_r_plus_104b,
+    smollm_135m,
+    gcn_cora,
+    dcn_v2,
+    dlrm_rm2,
+    sasrec,
+    mind,
+)
+
+REGISTRY: Dict[str, ArchSpec] = {m.SPEC.id: m.SPEC for m in _MODULES}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in REGISTRY:
+        raise KeyError(
+            f"unknown arch {arch_id!r}; available: {sorted(REGISTRY)}"
+        )
+    return REGISTRY[arch_id]
+
+
+def all_arch_ids() -> List[str]:
+    return list(REGISTRY)
+
+
+def all_cells() -> List[tuple]:
+    """Every (arch_id, shape_name) cell of the assignment (40 total)."""
+    return [
+        (spec.id, shape.name) for spec in REGISTRY.values()
+        for shape in spec.shapes
+    ]

@@ -1,0 +1,12 @@
+"""PowerWalk core: the paper's contribution as composable JAX modules.
+
+Offline:  `walks` (bulk random-walk engine) -> `mcfp` -> `index` (top-L
+fingerprints, budget planner).  Online: `verd` (batched vertex-centric
+decomposition) -> `query` (shared-decomposition batch engine).  Baselines:
+`mcep`, `power_iteration`.  Analysis: `theory` (Theorem 2.1), `metrics`
+(RAG@k).
+"""
+
+from repro.core.graph import Graph  # noqa: F401
+from repro.core.index import PPRIndex, build_index, plan_for_budget  # noqa: F401
+from repro.core.query import BatchQueryEngine, QueryConfig  # noqa: F401

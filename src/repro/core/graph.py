@@ -1,0 +1,183 @@
+"""Graph container used across PowerWalk.
+
+The graph is stored in CSR order (edges sorted by source) together with the
+COO view (``src``/``dst``) because TPU-native message passing is built on
+``jnp.take`` + ``jax.ops.segment_sum`` over edge lists.  All arrays are JAX
+arrays so a :class:`Graph` can be donated to jitted functions and sharded with
+``NamedSharding``; ``n``/``m`` are static aux fields.
+
+Semantics follow the paper (Section 2.1):
+
+* ``A`` is the row-stochastic out-edge matrix, ``A[i, j] = 1/|O(i)|``.
+* A *dangling* vertex (no out-edge) behaves as if it had a single artificial
+  edge back to the personalization source ``u``; operators here expose the
+  dangling mass separately so each personalized source can reclaim it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Directed graph in CSR + COO form.
+
+    Attributes:
+      row_ptr: int32[n + 1] CSR row offsets (by source vertex).
+      col_idx: int32[m] destination of each edge, CSR order.
+      src:     int32[m] source of each edge (expanded row_ptr), CSR order.
+      out_deg: int32[n] out-degree per vertex.
+      n, m:    static vertex / edge counts.
+    """
+
+    row_ptr: jax.Array
+    col_idx: jax.Array
+    src: jax.Array
+    out_deg: jax.Array
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+
+    # -- constructors ------------------------------------------------------
+    @staticmethod
+    def from_edges(src, dst, n: int | None = None) -> "Graph":
+        """Build from (possibly unsorted) edge lists; dedups nothing."""
+        src = np.asarray(src, dtype=np.int64)
+        dst = np.asarray(dst, dtype=np.int64)
+        if src.shape != dst.shape or src.ndim != 1:
+            raise ValueError("src/dst must be 1-D arrays of equal length")
+        if n is None:
+            n = int(max(src.max(initial=-1), dst.max(initial=-1)) + 1)
+        order = np.argsort(src, kind="stable")
+        src = src[order]
+        dst = dst[order]
+        out_deg = np.bincount(src, minlength=n).astype(np.int32)
+        row_ptr = np.zeros(n + 1, dtype=np.int32)
+        np.cumsum(out_deg, out=row_ptr[1:])
+        return Graph(
+            row_ptr=jnp.asarray(row_ptr),
+            col_idx=jnp.asarray(dst.astype(np.int32)),
+            src=jnp.asarray(src.astype(np.int32)),
+            out_deg=jnp.asarray(out_deg),
+            n=int(n),
+            m=int(src.shape[0]),
+        )
+
+    @staticmethod
+    def from_dense(adj: np.ndarray) -> "Graph":
+        src, dst = np.nonzero(np.asarray(adj))
+        return Graph.from_edges(src, dst, n=adj.shape[0])
+
+    # -- derived quantities ------------------------------------------------
+    @property
+    def dangling_mask(self) -> jax.Array:
+        """bool[n], True where the vertex has no out-edge."""
+        return self.out_deg == 0
+
+    @property
+    def inv_out_deg(self) -> jax.Array:
+        """f32[n] = 1/out_deg with 0 for dangling vertices."""
+        deg = self.out_deg.astype(jnp.float32)
+        return jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
+
+    @property
+    def edge_weight(self) -> jax.Array:
+        """f32[m] = 1/out_deg[src e] — the CSR value array of ``A``."""
+        return jnp.take(self.inv_out_deg, self.src)
+
+    def out_neighbors(self, v: int) -> np.ndarray:
+        lo = int(self.row_ptr[v])
+        hi = int(self.row_ptr[v + 1])
+        return np.asarray(self.col_idx[lo:hi])
+
+    # -- dense reference (tests / tiny graphs only) ------------------------
+    def dense_transition(self, source: int | None = None) -> np.ndarray:
+        """Dense row-stochastic ``A`` with dangling rows sent to ``source``.
+
+        If ``source`` is None dangling rows are left all-zero (the
+        "substochastic" view); callers then handle dangling mass themselves.
+        """
+        a = np.zeros((self.n, self.n), dtype=np.float64)
+        src = np.asarray(self.src)
+        dst = np.asarray(self.col_idx)
+        deg = np.asarray(self.out_deg).astype(np.float64)
+        np.add.at(a, (src, dst), 1.0 / deg[src])
+        if source is not None:
+            dang = np.asarray(self.dangling_mask)
+            a[dang, :] = 0.0
+            a[dang, source] = 1.0
+        return a
+
+
+def push_forward(graph: Graph, frontier: jax.Array) -> jax.Array:
+    """One substochastic push ``frontier @ A0``.
+
+    ``frontier`` is ``f32[..., n]`` (a batch of row vectors).  Dangling mass
+    is *dropped* here; use :func:`dangling_mass` to reclaim it per-source.
+    Edge-parallel formulation: gather source values, weight by 1/deg, and
+    segment-sum into destinations — the TPU-native SpMM.
+    """
+    vals = jnp.take(frontier, graph.src, axis=-1) * graph.edge_weight
+    return jax.ops.segment_sum(
+        vals.swapaxes(-1, 0), graph.col_idx, num_segments=graph.n
+    ).swapaxes(-1, 0)
+
+
+def dangling_mass(graph: Graph, frontier: jax.Array) -> jax.Array:
+    """Total frontier mass sitting on dangling vertices, shape ``[...]``."""
+    return jnp.sum(
+        jnp.where(graph.dangling_mask, frontier, 0.0), axis=-1
+    )
+
+
+def transition_with_dangling(
+    graph: Graph, frontier: jax.Array, sources: jax.Array
+) -> jax.Array:
+    """``frontier @ A`` where dangling rows of ``A`` point at ``sources``.
+
+    ``frontier``: f32[q, n]; ``sources``: int32[q] personalization vertex of
+    each batch row.  Returns f32[q, n].
+    """
+    pushed = push_forward(graph, frontier)
+    dm = dangling_mass(graph, frontier)
+    q = frontier.shape[0]
+    return pushed.at[jnp.arange(q), sources].add(dm)
+
+
+def reverse(graph: Graph) -> Graph:
+    """Graph with every edge reversed (used by pull-mode kernels)."""
+    return Graph.from_edges(
+        np.asarray(graph.col_idx), np.asarray(graph.src), n=graph.n
+    )
+
+
+def degree_histogram(graph: Graph, n_buckets: int = 10) -> np.ndarray:
+    """Paper Section 4.2 bucketing: bucket i holds out-degrees in
+    ``[2^(i-1), 2^i)``; the last bucket is unbounded."""
+    deg = np.asarray(graph.out_deg)
+    edges = [0] + [2 ** i for i in range(n_buckets - 1)] + [np.inf]
+    return np.histogram(deg, bins=edges)[0]
+
+
+def bucket_sample_sources(
+    graph: Graph, per_bucket: int, n_buckets: int = 10, seed: int = 0
+) -> np.ndarray:
+    """Sample query vertices stratified by out-degree (paper Section 4.2)."""
+    rng = np.random.default_rng(seed)
+    deg = np.asarray(graph.out_deg)
+    picks = []
+    for i in range(1, n_buckets + 1):
+        lo = 2 ** (i - 1) if i > 1 else 0
+        hi = np.inf if i == n_buckets else 2 ** i
+        pool = np.nonzero((deg >= lo) & (deg < hi))[0]
+        if pool.size == 0:
+            continue
+        k = min(per_bucket, pool.size)
+        picks.append(rng.choice(pool, size=k, replace=False))
+    return np.concatenate(picks) if picks else np.zeros(0, dtype=np.int64)

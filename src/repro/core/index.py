@@ -1,0 +1,182 @@
+"""The PPR index: top-L truncated fingerprints (paper Section 3.1/3.3).
+
+The paper stores each approximate vector sparsely (hash tables / sorted
+vectors) and discards entries below a threshold.  The TPU-native analogue is
+a *fixed-width* top-L representation: ``values f32[n, L]`` + ``indices
+int32[n, L]`` — dense, regular, vertex-shardable over the ``model`` mesh
+axis.  An MCFP run with ``R`` walks yields at most ``~R/c`` nonzeros per
+vertex, so ``L ~ R/c`` loses nothing; smaller ``L`` trades memory for the
+truncated tail (bounded by the dropped mass, reported by the builder).
+
+The memory-budget planner implements the paper's core knob: "the computation
+can be shifted to the offline stage as much as the memory budget allows".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mcfp
+from repro.core.graph import Graph
+from repro.core.walks import DEFAULT_C
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PPRIndex:
+    """Top-L truncated PPR fingerprints for every vertex.
+
+    values:  f32[n, L] PPR estimates, descending within a row, 0-padded.
+    indices: int32[n, L] target vertex of each value (0 at padding).
+    l: static width; n: static vertex count.
+    """
+
+    values: jax.Array
+    indices: jax.Array
+    l: int = dataclasses.field(metadata=dict(static=True))
+    n: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def nbytes(self) -> int:
+        return self.n * self.l * 8  # f32 + int32
+
+    def lookup_dense(self, vertices: jax.Array) -> jax.Array:
+        """Densify rows: f32[len(vertices), n] (FPPR-style direct answer)."""
+        vals = jnp.take(self.values, vertices, axis=0)
+        idxs = jnp.take(self.indices, vertices, axis=0)
+        out = jnp.zeros((vertices.shape[0], self.n), dtype=vals.dtype)
+        rows = jnp.arange(vertices.shape[0])[:, None]
+        return out.at[rows, idxs].add(vals)
+
+
+def truncate_topl(estimates: jax.Array, l: int) -> Tuple[jax.Array, jax.Array]:
+    """Keep the top-``l`` entries of each dense row. Returns (vals, idxs)."""
+    vals, idxs = jax.lax.top_k(estimates, l)
+    vals = jnp.maximum(vals, 0.0)
+    # zero-value slots point at vertex 0 but carry weight 0 -> harmless
+    idxs = jnp.where(vals > 0, idxs, 0)
+    return vals, idxs.astype(jnp.int32)
+
+
+def build_index(
+    graph: Graph,
+    r: int,
+    l: int,
+    key: jax.Array,
+    *,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    source_batch: int = 256,
+    sources: Optional[np.ndarray] = None,
+) -> Tuple[PPRIndex, dict]:
+    """Offline preprocessing: MCFP for every vertex, truncated to top-L.
+
+    Returns (index, stats) where stats reports the truncated tail mass —
+    the accuracy cost of the memory budget.
+    """
+    n = graph.n
+    if sources is None:
+        sources = np.arange(n, dtype=np.int32)
+    values = np.zeros((n, l), dtype=np.float32)
+    indices = np.zeros((n, l), dtype=np.int32)
+    dropped = 0.0
+    kept = 0.0
+    trunc = jax.jit(lambda e: truncate_topl(e, l))
+    for chunk_ids, est in mcfp.estimate_ppr_batched(
+        graph, sources, r, key, c=c, max_steps=max_steps,
+        source_batch=source_batch,
+    ):
+        vals, idxs = trunc(est)
+        values[chunk_ids] = np.asarray(vals)
+        indices[chunk_ids] = np.asarray(idxs)
+        total = float(jnp.sum(est))
+        k = float(jnp.sum(vals))
+        kept += k
+        dropped += total - k
+    stats = dict(
+        r=r,
+        l=l,
+        kept_mass=kept,
+        dropped_mass=dropped,
+        drop_fraction=dropped / max(kept + dropped, 1e-12),
+        nbytes=n * l * 8,
+    )
+    return (
+        PPRIndex(
+            values=jnp.asarray(values), indices=jnp.asarray(indices), l=l, n=n
+        ),
+        stats,
+    )
+
+
+def index_from_dense(estimates: jax.Array, l: int) -> PPRIndex:
+    """Build an index from precomputed dense vectors (tests/baselines)."""
+    vals, idxs = truncate_topl(estimates, l)
+    return PPRIndex(
+        values=vals, indices=idxs, l=l, n=int(estimates.shape[1])
+    )
+
+
+# ---------------------------------------------------------------------------
+# Memory-budget planning (paper Section 3: offline/online trade-off knob)
+# ---------------------------------------------------------------------------
+
+# Paper Figure 5 / Section 4.2: iterations needed for RAG > 0.99 at R.
+_PAPER_T_FOR_R = ((0, 7), (10, 5), (100, 2))
+
+
+@dataclasses.dataclass(frozen=True)
+class IndexPlan:
+    r: int              # walks per vertex offline
+    l: int              # index width (top-L)
+    t_online: int       # VERD iterations online
+    index_bytes: int
+    budget_bytes: int
+
+
+def plan_for_budget(
+    n: int,
+    budget_bytes: int,
+    *,
+    c: float = DEFAULT_C,
+    bytes_per_entry: int = 8,
+) -> IndexPlan:
+    """Choose (R, L, T) for a memory budget.
+
+    ``L = budget / (n * 8B)``; an MCFP vector from ``R`` walks has ``<= R/c``
+    support, so ``R = floor(c * L)`` saturates the width; the online
+    iteration count interpolates the paper's measured (R -> T) table.
+    """
+    l = max(int(budget_bytes // (max(n, 1) * bytes_per_entry)), 0)
+    r = int(c * l)
+    t = 7
+    for r_ref, t_ref in _PAPER_T_FOR_R:
+        if r >= r_ref:
+            t = t_ref
+    return IndexPlan(
+        r=r, l=l, t_online=t,
+        index_bytes=n * l * bytes_per_entry, budget_bytes=budget_bytes,
+    )
+
+
+def preprocessing_cost_model(
+    n: int, r: int, *, c: float = DEFAULT_C, step_rate: float = 5e8
+) -> dict:
+    """Analytic preprocessing cost (paper Table 2 extrapolation).
+
+    Total walk positions ~ n*R/c; ``step_rate`` is positions/sec for the
+    bulk engine (fitted from measured small-graph runs by the benchmark).
+    Index size is n*min(R/c, L)*8 bytes before compression.
+    """
+    positions = n * r / c
+    return dict(
+        walk_positions=positions,
+        est_seconds=positions / step_rate,
+        index_bytes_uncapped=int(n * (r / c) * 8),
+    )

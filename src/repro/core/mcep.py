@@ -1,0 +1,37 @@
+"""Monte-Carlo End-Point estimator (paper Algorithm 2; Fogaras et al. 2005).
+
+The baseline PowerWalk improves on: only the terminal vertex of each walk is
+counted, ``p_u(v) ~ y(v) / R``.  Shares the walk engine with MCFP so the
+paper's MCFP-vs-MCEP comparison (Figures 3-4) is apples-to-apples.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+from repro.core.walks import DEFAULT_C, simulate_walks, walks_for_sources
+
+
+def estimate_ppr(
+    graph: Graph,
+    sources: jax.Array,
+    r: int,
+    key: jax.Array,
+    *,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+) -> jax.Array:
+    """MCEP estimate ``f32[S, n]`` of the PPR vectors of ``sources``."""
+    walk_sources, walk_rows = walks_for_sources(sources, r)
+    counts = simulate_walks(
+        graph,
+        walk_sources,
+        walk_rows,
+        key,
+        n_rows=sources.shape[0],
+        c=c,
+        max_steps=max_steps,
+    )
+    return counts.ep_counts / jnp.maximum(counts.walks[:, None], 1.0)

@@ -1,0 +1,64 @@
+"""Monte-Carlo Full-Path estimator (paper Algorithm 1).
+
+``p_u(v) ~ x_n(v) / n`` where ``x_n`` counts *every* position on every walk
+and ``n`` is the total number of positions.  Theorem 2.1 gives the
+exponential concentration; see :mod:`repro.core.theory`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+from repro.core.walks import DEFAULT_C, simulate_walks, walks_for_sources
+
+
+def estimate_ppr(
+    graph: Graph,
+    sources: jax.Array,
+    r: int,
+    key: jax.Array,
+    *,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+) -> jax.Array:
+    """MCFP estimate ``f32[S, n]`` of the PPR vectors of ``sources``."""
+    walk_sources, walk_rows = walks_for_sources(sources, r)
+    counts = simulate_walks(
+        graph,
+        walk_sources,
+        walk_rows,
+        key,
+        n_rows=sources.shape[0],
+        c=c,
+        max_steps=max_steps,
+    )
+    return counts.fp_counts / jnp.maximum(counts.moves[:, None], 1.0)
+
+
+def estimate_ppr_batched(
+    graph: Graph,
+    sources,
+    r: int,
+    key: jax.Array,
+    *,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    source_batch: int = 256,
+):
+    """Host-chunked MCFP for many sources (bounds the [S*R] walk array).
+
+    Yields ``(chunk_sources, estimates)`` pairs so callers (the index
+    builder) can stream results into the truncated index without ever
+    holding all dense vectors.
+    """
+    import numpy as np
+
+    sources = np.asarray(sources)
+    for i in range(0, len(sources), source_batch):
+        chunk = jnp.asarray(sources[i : i + source_batch])
+        sub_key = jax.random.fold_in(key, i)
+        yield sources[i : i + source_batch], estimate_ppr(
+            graph, chunk, r, sub_key, c=c, max_steps=max_steps
+        )

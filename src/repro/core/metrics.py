@@ -1,0 +1,49 @@
+"""Accuracy metrics: RAG@k (paper Section 4.2) and friends."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rag_at_k(exact: jax.Array, approx: jax.Array, k: int) -> jax.Array:
+    """Relative Aggregated Goodness per query row.
+
+    ``RAG(k, u) = sum_{v in T_hat_k} p_u(v) / sum_{v in T_k} p_u(v)`` where
+    ``T_hat_k`` is the approximate top-k set and ``T_k`` the exact one.
+    exact/approx: f32[Q, n].  Returns f32[Q] in [0, 1].
+    """
+    _, approx_top = jax.lax.top_k(approx, k)
+    exact_topv, _ = jax.lax.top_k(exact, k)
+    num = jnp.take_along_axis(exact, approx_top, axis=1).sum(axis=1)
+    den = jnp.maximum(exact_topv.sum(axis=1), 1e-30)
+    return num / den
+
+
+def mean_rag(exact, approx, k: int) -> float:
+    return float(jnp.mean(rag_at_k(exact, approx, k)))
+
+
+def l1_error(exact: jax.Array, approx: jax.Array) -> jax.Array:
+    return jnp.abs(exact - approx).sum(axis=-1)
+
+
+def linf_error(exact: jax.Array, approx: jax.Array) -> jax.Array:
+    return jnp.abs(exact - approx).max(axis=-1)
+
+
+def precision_at_k(exact: jax.Array, approx: jax.Array, k: int) -> jax.Array:
+    """|top_k(exact) ∩ top_k(approx)| / k per row."""
+    _, et = jax.lax.top_k(exact, k)
+    _, at = jax.lax.top_k(approx, k)
+    hit = (et[:, :, None] == at[:, None, :]).any(axis=-1)
+    return hit.mean(axis=-1)
+
+
+def is_stochastic(p: jax.Array, atol: float = 1e-4) -> np.ndarray:
+    """Row-wise check that p is a probability vector."""
+    p = np.asarray(p)
+    return (p >= -atol).all(axis=-1) & (
+        np.abs(p.sum(axis=-1) - 1.0) <= atol * max(p.shape[-1], 1)
+    )

@@ -1,0 +1,151 @@
+"""Vertex-Centric Decomposition (paper Algorithm 4 + Section 3.3 batching).
+
+A batch of queries ``S`` keeps two row vectors per query; stacked they form
+dense matrices ``F, S in R^{Q x n}`` and one VERD iteration is
+
+    S <- S + c * F
+    F <- (1 - c) * (F @ A)        (dangling rows of A -> each query's source)
+
+i.e. one shared sparse-matrix product per iteration for the *whole batch* —
+exactly the paper's "shared decomposition" that amortizes graph access
+across queries, here realized as a single segment-sum push (or the Pallas
+``ell_spmm`` kernel).  After ``T`` iterations the refined answer is
+
+    p~ = S + F @ P_hat                     (P_hat = the top-L PPR index)
+
+which is Algorithm 4 line 10.  ``recursive_decomp`` (Algorithm 3) is kept as
+the oracle for the Theorem 2.3 equivalence tests.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph, transition_with_dangling
+from repro.core.index import PPRIndex
+from repro.core.walks import DEFAULT_C
+
+
+@functools.partial(jax.jit, static_argnames=("t", "c", "threshold"))
+def verd_iterate(
+    graph: Graph,
+    sources: jax.Array,
+    *,
+    t: int,
+    c: float = DEFAULT_C,
+    threshold: float = 0.0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Run ``t`` VERD iterations for a batch of query vertices.
+
+    Returns ``(s, f)``, both ``f32[Q, n]``.  ``threshold`` optionally drops
+    tiny frontier entries (the paper's epsilon sparsification) — exactness
+    tests use 0.0.
+    """
+    q = sources.shape[0]
+    f = jnp.zeros((q, graph.n), dtype=jnp.float32)
+    f = f.at[jnp.arange(q), sources].set(1.0)
+    s = jnp.zeros_like(f)
+
+    def body(carry, _):
+        s, f = carry
+        s = s + c * f
+        f = (1.0 - c) * transition_with_dangling(graph, f, sources)
+        if threshold > 0.0:
+            f = jnp.where(f >= threshold, f, 0.0)
+        return (s, f), ()
+
+    (s, f), _ = jax.lax.scan(body, (s, f), None, length=t)
+    return s, f
+
+
+def combine_with_index(
+    s: jax.Array,
+    f: jax.Array,
+    index: PPRIndex,
+    *,
+    vertex_chunk: int = 4096,
+) -> jax.Array:
+    """Algorithm 4 line 10: ``p~ = s + sum_v f(v) * p_hat_v``.
+
+    Chunked over index rows so the ``[Q, chunk*L]`` scatter intermediate
+    stays bounded; the Pallas ``index_combine`` kernel is the fused
+    equivalent.
+    """
+    q, n = f.shape
+    l = index.l
+    n_chunks = (n + vertex_chunk - 1) // vertex_chunk
+    pad_n = n_chunks * vertex_chunk
+    vals = jnp.pad(index.values, ((0, pad_n - n), (0, 0)))
+    idxs = jnp.pad(index.indices, ((0, pad_n - n), (0, 0)))
+    f_pad = jnp.pad(f, ((0, 0), (0, pad_n - n)))
+    vals = vals.reshape(n_chunks, vertex_chunk, l)
+    idxs = idxs.reshape(n_chunks, vertex_chunk, l)
+    f_chunks = f_pad.reshape(q, n_chunks, vertex_chunk).transpose(1, 0, 2)
+
+    def body(acc, args):
+        v, ix, fc = args  # [chunk, L], [chunk, L], [Q, chunk]
+        contrib = fc[:, :, None] * v[None, :, :]      # [Q, chunk, L]
+        acc = acc.at[:, ix.reshape(-1)].add(
+            contrib.reshape(q, -1)
+        )
+        return acc, ()
+
+    out, _ = jax.lax.scan(body, s, (vals, idxs, f_chunks))
+    return out
+
+
+def verd_query(
+    graph: Graph,
+    sources: jax.Array,
+    index: Optional[PPRIndex],
+    *,
+    t: int,
+    c: float = DEFAULT_C,
+    threshold: float = 0.0,
+) -> jax.Array:
+    """Full online query: iterate then combine (index=None -> return s,
+    the paper's R=0 mode)."""
+    s, f = verd_iterate(graph, sources, t=t, c=c, threshold=threshold)
+    if index is None:
+        return s
+    return combine_with_index(s, f, index)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 (recursive decomposition) — oracle for Theorem 2.3 tests.
+# ---------------------------------------------------------------------------
+
+def recursive_decomp(
+    graph: Graph,
+    u: int,
+    t: int,
+    base_vectors: np.ndarray,
+    c: float = DEFAULT_C,
+) -> np.ndarray:
+    """Literal Algorithm 3 on host numpy.
+
+    ``base_vectors[v]`` plays the role of the precomputed ``p_hat_v``; pass
+    exact PPR vectors to check Theorem 2.2, or index rows for Theorem 2.3.
+    Dangling vertices follow the paper's convention O(u) = {u}'s source --
+    i.e. an artificial edge back to the *queried* vertex; since recursion
+    re-roots at each vertex, the artificial edge of a dangling v points at
+    the recursion root v itself (p_v = e_v for dangling v).
+    """
+    if t == 0:
+        return np.asarray(base_vectors[u], dtype=np.float64)
+    out_nbrs = graph.out_neighbors(u)
+    n = graph.n
+    e_u = np.zeros(n, dtype=np.float64)
+    e_u[u] = 1.0
+    if len(out_nbrs) == 0:
+        # dangling: artificial self-edge => p_u solves p = c e_u + (1-c) p
+        return e_u
+    acc = np.zeros(n, dtype=np.float64)
+    for v in out_nbrs:
+        acc += recursive_decomp(graph, int(v), t - 1, base_vectors, c)
+    return c * e_u + (1.0 - c) / len(out_nbrs) * acc

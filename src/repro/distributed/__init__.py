@@ -1,0 +1,2 @@
+"""Distributed runtime: sharding policy, checkpointing, elasticity,
+gradient compression, collective helpers."""

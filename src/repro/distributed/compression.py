@@ -1,0 +1,81 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+At pod scale the gradient all-reduce crosses the slow DCN links; casting
+grads to bf16 (or int8-scaled) halves (quarters) that traffic.  Naive
+casting biases training; **error feedback** (Seide et al. 2014; Karimireddy
+et al. 2019) keeps a residual accumulator so quantization error is re-added
+next step — unbiased in the long run.
+
+Usage: ``state = init(params);  grads, state = compress(grads, state)`` and
+pass the compressed grads to the optimizer; plug via train_loop's
+``grad_transform`` or call explicitly in a custom loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    method: str = "bf16_ef"      # none | bf16 | bf16_ef | int8_ef
+    int8_clip: float = 6.0        # stddevs kept before int8 saturation
+
+
+def init(params: Any) -> Any:
+    """Error-feedback residuals, zeros like params (fp32)."""
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def _quant_bf16(g):
+    return g.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def _quant_int8(g, clip_sigmas: float):
+    sigma = jnp.std(g) + 1e-12
+    scale = clip_sigmas * sigma / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127)
+    return q * scale
+
+
+def compress(
+    cfg: CompressionConfig, grads: Any, residual: Any
+) -> Tuple[Any, Any]:
+    """Returns (decompressed-after-quantization grads, new residual).
+
+    The returned grads are exactly what the receiving side reconstructs, so
+    using them in the optimizer models the lossy collective faithfully.
+    """
+    if cfg.method == "none":
+        return grads, residual
+
+    def one(g, r):
+        g32 = g.astype(jnp.float32)
+        if cfg.method == "bf16":
+            return _quant_bf16(g32), r
+        if cfg.method == "bf16_ef":
+            target = g32 + r
+            q = _quant_bf16(target)
+            return q, target - q
+        if cfg.method == "int8_ef":
+            target = g32 + r
+            q = _quant_int8(target, cfg.int8_clip)
+            return q, target - q
+        raise ValueError(cfg.method)
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = treedef.flatten_up_to(residual)
+    pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = treedef.unflatten([p[0] for p in pairs])
+    new_r = treedef.unflatten([p[1] for p in pairs])
+    return new_g, new_r
+
+
+def wire_bytes(grads: Any, cfg: CompressionConfig) -> int:
+    """Bytes this gradient pytree puts on the wire per all-reduce."""
+    per = {"none": 4, "bf16": 2, "bf16_ef": 2, "int8_ef": 1}[cfg.method]
+    return sum(x.size * per for x in jax.tree_util.tree_leaves(grads))

@@ -1,0 +1,202 @@
+"""Per-arch sharding policy: param/batch/cache PartitionSpecs.
+
+Axis roles (see DESIGN.md §5):
+  * ``model`` — tensor/expert/vertex parallelism (TP/EP + PPR vertex dim),
+  * ``data``  — batch data-parallel + ZeRO/FSDP shard of params & optimizer,
+  * ``pod``   — additional data parallelism across pods (slowest links).
+
+Rules are path-based over the param pytree so models stay mesh-agnostic.
+Divisibility is *preferred* but not required: GSPMD pads uneven dims (e.g.
+qwen's 40 heads on a 16-way axis); the policy only demands that the large
+dims (ff, vocab, experts, embedding rows) divide exactly, which every
+assigned config satisfies.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """The data-parallel axes: ('pod', 'data') on multi-pod meshes."""
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def data_axis_size(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in batch_axes(mesh)]))
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return int(mesh.shape["model"])
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+# ---------------------------------------------------------------------------
+# LM transformer params
+# ---------------------------------------------------------------------------
+
+def _lm_spec(path: str, ndim: int, stacked: bool) -> P:
+    """PartitionSpec for one transformer param.
+
+    ``stacked`` params carry a leading n_layers dim (inside params['layers']).
+    2-D policy: TP over 'model' on the contraction-free big dim, FSDP over
+    'data' on the other — every large tensor is fully sharded.
+    """
+    lead: Tuple = (None,) if stacked else ()
+
+    def spec(*axes):
+        return P(*(lead + axes))
+
+    if "embed" in path:                       # [V, d]
+        return P("model", "data")
+    if "lm_head" in path:                     # [d, V]
+        return P("data", "model")
+    if re.search(r"w[qkv]/w$", path):         # [d, H*hd]
+        return spec("data", "model")
+    if re.search(r"w[qkv]/b$", path):         # [H*hd]
+        return spec("model")
+    if path.endswith("wo/w"):                 # [H*hd, d]
+        return spec("model", "data")
+    if path.endswith("wo/b"):
+        return spec("data")
+    if "router" in path:                      # [d, E] small
+        return spec(None, None)
+    if re.search(r"w_(gate|up)/w$", path):    # dense ffn [d, ff]
+        return spec("data", "model")
+    if path.endswith("w_down/w"):             # [ff, d]
+        return spec("model", "data")
+    if re.search(r"w_(gate|up)/b$", path):
+        return spec("model")
+    if path.endswith("w_down/b"):
+        return spec("data")
+    if re.search(r"w_(gate|up)$", path):      # MoE [E, d, ffs]
+        return spec("model", "data", None)
+    if path.endswith("w_down"):               # MoE [E, ffs, d]
+        return spec("model", None, "data")
+    # norms / scalars / anything small: replicate
+    return P(*([None] * ndim))
+
+
+def lm_is_small(config) -> bool:
+    """Models too narrow for 16-way TP (smollm): the model axis is better
+    spent on sequence parallelism with replicated params."""
+    return getattr(config, "d_model", 1 << 30) < 2048
+
+
+def lm_param_specs(params_shape: Any, config=None) -> Any:
+    if config is not None and lm_is_small(config):
+        return jax.tree_util.tree_map(
+            lambda leaf: P(*([None] * leaf.ndim)), params_shape
+        )
+
+    def one(path, leaf):
+        p = _path_str(path)
+        stacked = "layers" in p
+        base = _lm_spec(p, leaf.ndim, stacked)
+        # pad spec to leaf.ndim
+        axes = tuple(base) + (None,) * (leaf.ndim - len(tuple(base)))
+        return P(*axes[: leaf.ndim])
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# GNN / RecSys params
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(params_shape: Any) -> Any:
+    """GCN weights are tiny (d_hidden 16): replicate everything."""
+    return jax.tree_util.tree_map(
+        lambda leaf: P(*([None] * leaf.ndim)), params_shape
+    )
+
+
+def recsys_param_specs(params_shape: Any) -> Any:
+    """Embedding tables row-sharded over 'model' + FSDP'd big MLPs.
+
+    Explicit in_shardings require exact divisibility (unlike constraint
+    propagation), so each dim is sharded only if the 16-way axis divides it.
+    """
+    def one(path, leaf):
+        p = _path_str(path)
+        if ("table" in p and leaf.ndim == 2 and leaf.shape[0] >= 4096
+                and leaf.shape[0] % 16 == 0):
+            return P("model", None)
+        if leaf.ndim == 2 and leaf.shape[0] * leaf.shape[1] >= 1 << 18:
+            d0 = "data" if leaf.shape[0] % 16 == 0 else None
+            d1 = "model" if leaf.shape[1] % 16 == 0 else None
+            return P(d0, d1)
+        return P(*([None] * leaf.ndim))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def param_specs(family: str, params_shape: Any, config=None) -> Any:
+    if family == "lm":
+        return lm_param_specs(params_shape, config)
+    return {
+        "gnn": gnn_param_specs,
+        "recsys": recsys_param_specs,
+    }[family](params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer state & batches
+# ---------------------------------------------------------------------------
+
+def opt_state_specs(pspec_tree: Any) -> Any:
+    """AdamState(step, mu, nu): moments follow their param's spec."""
+    from repro.training.optimizer import AdamState
+    return AdamState(step=P(), mu=pspec_tree, nu=pspec_tree)
+
+
+def batch_spec_lm(mesh: Mesh, kind: str, batch: int) -> dict:
+    ba = batch_axes(mesh)
+    b_ax = ba if batch >= data_axis_size(mesh) else None
+    if kind == "lm_train":
+        return dict(tokens=P(b_ax, None), labels=P(b_ax, None),
+                    mask=P(b_ax, None))
+    if kind == "lm_prefill":
+        return dict(tokens=P(b_ax, None))
+    raise ValueError(kind)
+
+
+def cache_spec(mesh: Mesh, batch: int, quantized: bool = False) -> dict:
+    """KV cache [L, B, S, H, hd]: B over data (if it divides), S over model.
+
+    When the batch can't use the data axes (long_500k: B=1), the head_dim
+    takes them instead (always 64/128, so always divisible — kv-head
+    counts like 8 or 40 are not) — otherwise 15/16 of the pod idles while
+    one model group holds the whole cache.  The hd-sharded attention
+    contractions psum over data (split-K style).
+    """
+    ba = batch_axes(mesh)
+    small_b = batch < data_axis_size(mesh)
+    b_ax = None if small_b else ba
+    d_ax = ba if small_b else None
+    kv = P(None, b_ax, "model", None, d_ax)
+    out = dict(k=kv, v=kv, length=P())
+    if quantized:
+        out["k_scale"] = P(None, b_ax, "model", None)
+        out["v_scale"] = P(None, b_ax, "model", None)
+    return out
+
+
+def named(mesh: Mesh, spec_tree: Any) -> Any:
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,3 @@
+"""Graph substrate: formats, synthetic generators, partitioning, sampling."""
+
+from repro.graphs import formats, partition, sampler, synthetic  # noqa: F401

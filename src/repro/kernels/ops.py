@@ -1,0 +1,114 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle tile padding, fold hub-split ELL rows back to vertices, and
+expose drop-in replacements for the pure-jnp core ops:
+
+* :func:`ell_push`      <-> :func:`repro.graphs.formats.ell_pull`
+* :func:`index_combine` <-> :func:`repro.core.verd.combine_with_index`
+* :func:`embedding_bag` <-> :func:`repro.models.recsys.embedding` bag path
+
+``interpret=True`` (default here) runs the kernel bodies in Python on CPU —
+the validation mode for this container; on TPU pass ``interpret=False``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.graphs.formats import EllChunks
+from repro.kernels import ell_spmm as _ell
+from repro.kernels import embedding_bag as _bag
+from repro.kernels import index_combine as _comb
+
+
+def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
+    size = x.shape[axis]
+    target = ((size + multiple - 1) // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads, constant_values=value)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("q_tile", "r_tile", "interpret")
+)
+def ell_push(
+    frontier: jax.Array,
+    ell: EllChunks,
+    *,
+    q_tile: int = 8,
+    r_tile: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """``frontier @ A0`` via the Pallas kernel; f32[Q, n] -> f32[Q, n].
+
+    Pads Q and the ELL rows to tile multiples, then folds hub chunks with a
+    segment-sum keyed by ``row2vertex``.
+    """
+    q, n = frontier.shape
+    f = _pad_to(frontier, 0, q_tile)
+    nbr = _pad_to(ell.nbr, 0, r_tile)
+    w = _pad_to(ell.weight, 0, r_tile)
+    r2v = _pad_to(ell.row2vertex, 0, r_tile)  # pad rows -> vertex 0, weight 0
+    partial = _ell.ell_spmm(
+        f, nbr, w, q_tile=q_tile, r_tile=r_tile, interpret=interpret
+    )
+    out = jax.ops.segment_sum(partial.T, r2v, num_segments=n).T
+    return out[:q]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("q_tile", "v_tile", "interpret")
+)
+def index_combine(
+    s: jax.Array,
+    f: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    *,
+    q_tile: int = 8,
+    v_tile: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused ``s + f @ P_hat``; pads Q and the vertex axis to tiles."""
+    q, n = s.shape
+    s_p = _pad_to(s, 0, q_tile)
+    f_p = _pad_to(_pad_to(f, 0, q_tile), 1, v_tile)
+    vals_p = _pad_to(vals, 0, v_tile)
+    idx_p = _pad_to(idx, 0, v_tile)
+    out = _comb.index_combine(
+        s_p, f_p, vals_p, idx_p, q_tile=q_tile, v_tile=v_tile,
+        interpret=interpret,
+    )
+    return out[:q]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("b_tile", "d_tile", "interpret")
+)
+def embedding_bag(
+    ids: jax.Array,
+    mask: jax.Array,
+    table: jax.Array,
+    *,
+    b_tile: int = 64,
+    d_tile: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Bag-sum lookup; pads batch and embedding dims to tiles."""
+    b, _ = ids.shape
+    v, d = table.shape
+    ids_p = _pad_to(ids, 0, b_tile)
+    mask_p = _pad_to(mask, 0, b_tile)
+    d_t = min(d_tile, d) if d % min(d_tile, d) == 0 else d
+    table_p = _pad_to(table, 1, d_t)
+    out = _bag.embedding_bag(
+        ids_p, mask_p, table_p, b_tile=b_tile, d_tile=d_t,
+        interpret=interpret,
+    )
+    return out[:b, :d]

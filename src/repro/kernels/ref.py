@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ell_spmm_ref(f: jax.Array, nbr: jax.Array, w: jax.Array) -> jax.Array:
+    """partial[q, r] = sum_k w[r, k] * f[q, nbr[r, k]]."""
+    q = f.shape[0]
+    rows, k = nbr.shape
+    gathered = jnp.take(f, nbr.reshape(-1), axis=1).reshape(q, rows, k)
+    return jnp.sum(gathered * w[None, :, :], axis=-1)
+
+
+def index_combine_ref(
+    s: jax.Array, f: jax.Array, vals: jax.Array, idx: jax.Array
+) -> jax.Array:
+    """out[q, :] = s[q, :] + sum_{v,l} f[q, v] * vals[v, l] at column idx[v, l]."""
+    q, n = s.shape
+    nv, l = vals.shape
+    contrib = f[:, :, None] * vals[None, :, :]          # [q, nv, l]
+    return s.at[:, idx.reshape(-1)].add(contrib.reshape(q, nv * l))
+
+
+def embedding_bag_ref(
+    ids: jax.Array, mask: jax.Array, table: jax.Array
+) -> jax.Array:
+    """out[b, :] = sum_i mask[b, i] * table[ids[b, i], :]."""
+    b, bag = ids.shape
+    rows = jnp.take(table, ids.reshape(-1), axis=0).reshape(b, bag, -1)
+    return (rows * mask[:, :, None]).sum(axis=1)

@@ -1,0 +1,343 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines, before any jax-importing module: jax locks
+# the device count at first init; only the dry-run sees 512 host devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * build the full-size StepBundle (ShapeDtypeStruct inputs, no allocation),
+  * shard params/optimizer/batch/cache via the per-arch policy,
+  * ``jax.jit(step).lower(...).compile()`` on the 16x16 pod mesh and the
+    2x16x16 multi-pod mesh,
+  * record ``memory_analysis()`` (fits-HBM proof), ``cost_analysis()``
+    (FLOPs/bytes) and the HLO collective bytes for §Roofline.
+
+Usage:
+    python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+    python -m repro.launch.dryrun --all --mesh pod --out results/dryrun
+    python -m repro.launch.dryrun --all --mesh multipod
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, get_arch
+from repro.distributed import sharding as shpol
+from repro.launch import steps as steps_mod
+from repro.launch.mesh import describe, make_production_mesh
+from repro.roofline import analysis as roof
+from repro.training import train_loop
+
+
+def _batch_pspecs(arch, shape, bundle, mesh):
+    """PartitionSpec per input tensor (see DESIGN.md §5)."""
+    ba = shpol.batch_axes(mesh)
+    dsize = shpol.data_axis_size(mesh)
+    kind = shape.kind
+
+    def bshard(b):
+        return ba if b >= dsize and b % dsize == 0 else None
+
+    small_lm = arch.family == "lm" and shpol.lm_is_small(arch.config)
+    specs = {}
+    for name, sds in bundle.batch_spec.items():
+        if arch.family == "lm":
+            # small models: sequence-parallel over the model axis (TP gains
+            # nothing at d_model < 2k; replicating attention 16x is worse)
+            seq_ax = "model" if (small_lm and len(sds.shape) > 1
+                                 and sds.shape[-1] > 1) else None
+            specs[name] = P(bshard(sds.shape[0]),
+                            *([None] * (len(sds.shape) - 2) + [seq_ax]
+                              if len(sds.shape) > 1 else []))
+        elif arch.family == "gnn":
+            if kind == "gnn_full" and name in ("features", "labels",
+                                               "label_mask"):
+                specs[name] = P("model", *([None] * (len(sds.shape) - 1)))
+            elif kind == "gnn_minibatch" and name == "feats":
+                specs[name] = P("model", None)
+            else:  # edge arrays, minibatch labels, molecule tensors
+                specs[name] = P(bshard(sds.shape[0]),
+                                *([None] * (len(sds.shape) - 1)))
+        else:  # recsys
+            if name == "candidates":
+                specs[name] = P(bshard(sds.shape[0]))
+            else:
+                specs[name] = P(bshard(sds.shape[0]),
+                                *([None] * (len(sds.shape) - 1)))
+    return specs
+
+
+def _serve_params(params_shape):
+    """Serving holds bf16 weights (no optimizer): cast float leaves."""
+    def cast(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return s
+    return jax.tree.map(cast, params_shape)
+
+
+def lower_cell(arch_id: str, shape_name: str, mesh, *, donate: bool = True,
+               config_overrides=None):
+    """Returns (lowered, compiled, context dict)."""
+    arch = get_arch(arch_id)
+    shape = arch.shape(shape_name)
+    overrides = dict(config_overrides or {})
+    if (arch.family == "lm" and "act_shard" not in overrides
+            and not shpol.lm_is_small(arch.config)):
+        from repro.models.transformer import ActSharding
+        overrides["act_shard"] = ActSharding(
+            batch=shpol.batch_axes(mesh), mesh=mesh
+        )
+    bundle = steps_mod.build(arch, shape_name, reduced=False,
+                             config_overrides=overrides or None)
+
+    params_shape = jax.eval_shape(bundle.init_fn, jax.random.PRNGKey(0))
+    pspecs = shpol.param_specs(arch.family, params_shape, arch.config)
+    p_sh = shpol.named(mesh, pspecs)
+    batch_specs = _batch_pspecs(arch, shape, bundle, mesh)
+    b_sh = {k: NamedSharding(mesh, v) for k, v in batch_specs.items()}
+    batch_sds = bundle.batch_spec
+
+    with mesh:
+        if bundle.kind == "train":
+            opt_shape = jax.eval_shape(
+                lambda p: train_loop.init_state(
+                    bundle.opt_cfg or steps_mod.DEFAULT_OPT, p),
+                params_shape,
+            )
+            o_sh = shpol.named(mesh, shpol.opt_state_specs(pspecs))
+            jitted = jax.jit(
+                bundle.step_fn,
+                in_shardings=(p_sh, o_sh, b_sh),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params_shape, opt_shape, batch_sds)
+        elif bundle.cache_spec is not None:
+            sparams = _serve_params(params_shape)
+            c_sh = shpol.named(
+                mesh, shpol.cache_spec(
+                    mesh, shape.global_batch,
+                    quantized="k_scale" in bundle.cache_spec,
+                )
+            )
+            jitted = jax.jit(
+                bundle.step_fn,
+                in_shardings=(p_sh, c_sh, b_sh),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(sparams, bundle.cache_spec, batch_sds)
+        else:
+            sparams = _serve_params(params_shape)
+            jitted = jax.jit(bundle.step_fn, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(sparams, batch_sds)
+        compiled = lowered.compile()
+    ctx = dict(
+        arch=arch_id, shape=shape_name, kind=bundle.kind,
+        model_flops=bundle.model_flops_per_step,
+        mesh=describe(mesh),
+    )
+    return lowered, compiled, ctx
+
+
+def run_cell(arch_id, shape_name, mesh, out_dir=None, mesh_tag="pod"):
+    t0 = time.time()
+    try:
+        lowered, compiled, ctx = lower_cell(arch_id, shape_name, mesh)
+        hlo = compiled.as_text()
+        terms = roof.roofline_from_compiled(
+            compiled, hlo,
+            model_flops_total=ctx["model_flops"],
+            n_devices=ctx["mesh"]["n_devices"],
+        )
+        fits, used = roof.fit_check(terms)
+        rec = dict(
+            ok=True, seconds=round(time.time() - t0, 1), **ctx,
+            roofline=terms.as_dict(), hbm_used=used, hbm_fits=fits,
+        )
+    except Exception as e:  # recorded, not raised: the sweep must finish
+        rec = dict(
+            ok=False, seconds=round(time.time() - t0, 1),
+            arch=arch_id, shape=shape_name, mesh_tag=mesh_tag,
+            error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-2000:],
+        )
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_tag}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    status = "OK " if rec.get("ok") else "FAIL"
+    extra = ""
+    if rec.get("ok"):
+        r = rec["roofline"]
+        extra = (f"dom={r['dominant']} comp={r['compute_s']:.3e}s "
+                 f"mem={r['memory_s']:.3e}s coll={r['collective_s']:.3e}s "
+                 f"hbm={rec['hbm_used']/1e9:.1f}GB fits={rec['hbm_fits']}")
+    else:
+        extra = rec["error"][:160]
+    print(f"[{status}] {arch_id:22s} {shape_name:14s} {mesh_tag:8s} "
+          f"{rec['seconds']:7.1f}s  {extra}", flush=True)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# The paper's own workload: distributed PPR engine cells
+# ---------------------------------------------------------------------------
+
+# (name, n, m, q_tile, index_l, compress_k, walks)
+PPR_CELLS = {
+    # twitter-2010: 41.65M vertices / 1.47B edges; VERD batch-query tile
+    "ppr_verd_twitter": dict(n=41_652_240, m=1_468_365_182, q_tile=8,
+                             index_l=256, compress_k=0),
+    # beyond-paper variant: top-k-compressed frontier exchange
+    "ppr_verd_twitter_ck": dict(n=41_652_240, m=1_468_365_182, q_tile=4,
+                                index_l=256, compress_k=4096),
+    # uk-union: 133.6M vertices / 5.51B edges
+    "ppr_verd_ukunion": dict(n=133_633_040, m=5_507_679_822, q_tile=2,
+                             index_l=48, compress_k=4096),
+    # MCFP offline indexing step on twitter (graph replicated: 6.2 GB)
+    "ppr_walk_twitter": dict(n=41_652_240, m=1_468_365_182, q_tile=32,
+                             walks=True),
+}
+
+
+def lower_ppr_cell(name: str, mesh):
+    from repro.core import distributed_engine as de
+
+    spec = PPR_CELLS[name]
+    ep = int(mesh.shape["model"])
+    ba = shpol.batch_axes(mesh)
+    n = ((spec["n"] + ep - 1) // ep) * ep
+    cfg = de.DistConfig(
+        n=n, ep=ep, q_tile=spec["q_tile"], t_iterations=2,
+        index_l=spec.get("index_l", 0),
+        compress_k=spec.get("compress_k", 0),
+        wire_dtype=jnp.bfloat16,
+        batch_axes=ba,
+    )
+    sds = jax.ShapeDtypeStruct
+    if spec.get("walks"):
+        w_per_shard = 1 << 16
+        w = w_per_shard * shpol.data_axis_size(mesh)
+        step = de.make_walk_counts_step(cfg, mesh, max_steps=64)
+        args = (
+            sds((spec["n"] + 1,), jnp.int32),      # row_ptr (replicated)
+            sds((spec["m"],), jnp.int32),          # col_idx
+            sds((spec["n"],), jnp.int32),          # out_deg
+            sds((w,), jnp.int32),                  # walk sources
+            sds((w,), jnp.int32),                  # walk count rows
+            sds((2,), jnp.uint32),                 # key
+        )
+        shards = (
+            NamedSharding(mesh, P(None)), NamedSharding(mesh, P(None)),
+            NamedSharding(mesh, P(None)), NamedSharding(mesh, P(ba)),
+            NamedSharding(mesh, P(ba)), NamedSharding(mesh, P()),
+        )
+        with mesh:
+            lowered = jax.jit(step, in_shardings=shards).lower(*args)
+            compiled = lowered.compile()
+        model_flops = 8.0 * w * 64   # gather/PRNG bound; nominal flop count
+    else:
+        m_shard = (spec["m"] + ep - 1) // ep
+        m_shard = ((m_shard + 1023) // 1024) * 1024
+        slabs = de.ShardedGraph.specs(cfg, m_shard)
+        slab_sh = de.ShardedGraph.shardings(cfg, mesh)
+        step = de.make_verd_tile_step(cfg, mesh)
+        ivals = sds((ep, cfg.n_shard, cfg.index_l), jnp.bfloat16)
+        iidx = sds((ep, cfg.n_shard, cfg.index_l), jnp.int32)
+        args = (slabs, sds((cfg.q_tile,), jnp.int32), ivals, iidx)
+        ish = NamedSharding(mesh, P("model", None, None))
+        shards = (slab_sh, NamedSharding(mesh, P()), ish, ish)
+        with mesh:
+            lowered = jax.jit(step, in_shardings=shards).lower(*args)
+            compiled = lowered.compile()
+        model_flops = (cfg.t_iterations * 2.0 * spec["m"] * cfg.q_tile
+                       + 2.0 * cfg.q_tile * n * cfg.index_l)
+    ctx = dict(arch="powerwalk-engine", shape=name, kind="serve",
+               model_flops=model_flops, mesh=describe(mesh))
+    return lowered, compiled, ctx
+
+
+def run_ppr_cell(name, mesh, out_dir=None, mesh_tag="pod"):
+    t0 = time.time()
+    try:
+        lowered, compiled, ctx = lower_ppr_cell(name, mesh)
+        hlo = compiled.as_text()
+        terms = roof.roofline_from_compiled(
+            compiled, hlo, model_flops_total=ctx["model_flops"],
+            n_devices=ctx["mesh"]["n_devices"],
+        )
+        fits, used = roof.fit_check(terms)
+        rec = dict(ok=True, seconds=round(time.time() - t0, 1), **ctx,
+                   roofline=terms.as_dict(), hbm_used=used, hbm_fits=fits)
+    except Exception as e:
+        rec = dict(ok=False, seconds=round(time.time() - t0, 1),
+                   arch="powerwalk-engine", shape=name, mesh_tag=mesh_tag,
+                   error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fn = os.path.join(out_dir, f"powerwalk__{name}__{mesh_tag}.json")
+        with open(fn, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    status = "OK " if rec.get("ok") else "FAIL"
+    extra = (rec["error"][:160] if not rec.get("ok") else
+             f"dom={rec['roofline']['dominant']} "
+             f"coll={rec['roofline']['collective_s']:.3e}s "
+             f"hbm={rec['hbm_used']/1e9:.1f}GB fits={rec['hbm_fits']}")
+    print(f"[{status}] powerwalk-engine       {name:22s} {mesh_tag:8s} "
+          f"{rec['seconds']:7.1f}s  {extra}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["pod", "multipod", "both"],
+                    default="pod")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--ppr", action="store_true",
+                    help="run the PowerWalk engine cells")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    meshes = []
+    if args.mesh in ("pod", "both"):
+        meshes.append(("pod", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multipod", "both"):
+        meshes.append(("multipod", make_production_mesh(multi_pod=True)))
+
+    n_fail = 0
+    if args.ppr:
+        for mesh_tag, mesh in meshes:
+            for name in PPR_CELLS:
+                rec = run_ppr_cell(name, mesh, args.out, mesh_tag)
+                n_fail += 0 if rec.get("ok") else 1
+        print(f"done; failures: {n_fail}", flush=True)
+        raise SystemExit(1 if n_fail else 0)
+
+    if args.all:
+        cells = [(s.id, sh.name) for s in REGISTRY.values()
+                 for sh in s.shapes]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    for mesh_tag, mesh in meshes:
+        for arch_id, shape_name in cells:
+            rec = run_cell(arch_id, shape_name, mesh, args.out, mesh_tag)
+            n_fail += 0 if rec.get("ok") else 1
+    print(f"done; failures: {n_fail}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

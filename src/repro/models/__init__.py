@@ -1,0 +1,3 @@
+"""Model zoo: transformer LM (dense + MoE), GCN, recsys models."""
+
+from repro.models import attention, gcn, layers, recsys, transformer  # noqa: F401

@@ -1,0 +1,123 @@
+"""GQA attention: chunked (flash-style) training path + KV-cache decode.
+
+The training/prefill path scans over KV chunks with an online softmax, so
+peak memory is O(S * chunk) instead of O(S^2) — required for the
+``prefill_32k`` cells and keeps the HLO small (a scan, not 32k unrolled).
+This is the TPU analogue of FlashAttention: the chunk loop is sequential in
+HLO but XLA pipelines the matmuls through the MXU; VMEM tiling happens at
+the XLA level for jnp einsums (a hand-Pallas attention kernel is not the
+paper's contribution, so we stay at the jnp layer here).
+
+Decode: one new token against a length-sharded cache.  The partial-softmax
+carry (m, l, acc) is associative, so GSPMD turns the seq-sharded reduction
+into the flash-decoding split-K pattern (psum of rescaled partials).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    """Decode cache. k/v: [layers, batch, max_seq, kv_heads, head_dim]."""
+    k: jax.Array
+    v: jax.Array
+    length: jax.Array  # int32 [] tokens currently valid
+
+
+def _gqa_scores(q, k):
+    """q: [B, Sq, Hkv, G, hd]; k: [B, C, Hkv, hd] -> [B, Hkv, G, Sq, C]."""
+    return jnp.einsum(
+        "bqhgd,bchd->bhgqc", q, k, preferred_element_type=jnp.float32
+    )
+
+
+def chunked_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    n_kv_heads: int,
+    causal: bool = True,
+    chunk: int = 1024,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Online-softmax attention.
+
+    q: [B, Sq, Hq, hd]; k, v: [B, Skv, Hkv, hd]. Returns [B, Sq, Hq, hd].
+    """
+    b, sq, hq, hd = q.shape
+    skv = k.shape[1]
+    g = hq // n_kv_heads
+    qg = q.reshape(b, sq, n_kv_heads, g, hd) * (hd ** -0.5)
+    chunk = min(chunk, skv)
+    assert skv % chunk == 0, (skv, chunk)
+    n_chunks = skv // chunk
+    kc = k.reshape(b, n_chunks, chunk, n_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, chunk, n_kv_heads, hd).transpose(1, 0, 2, 3, 4)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        ci, kb, vb = inputs
+        s = _gqa_scores(qg, kb)  # [B, Hkv, G, Sq, C] fp32
+        if causal:
+            k_pos = ci * chunk + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]  # [Sq, C]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l = l * scale + p.sum(axis=-1)
+        # probabilities in compute dtype for the PV matmul (f32 accumulate):
+        # the score-shaped buffers dominate HBM traffic on memory-bound
+        # cells; bf16 p is the standard flash-attention trade.
+        acc = acc * scale[..., None] + jnp.einsum(
+            "bhgqc,bchd->bhgqd", p.astype(q.dtype), vb,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), ()
+
+    m0 = jnp.full((b, n_kv_heads, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, n_kv_heads, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, n_kv_heads, g, sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc)
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, hq, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    cache_length: jax.Array,
+    *,
+    n_kv_heads: int,
+) -> jax.Array:
+    """One-token attention against the cache.
+
+    q: [B, 1, Hq, hd]; k_cache/v_cache: [B, S, Hkv, hd];
+    positions >= cache_length are masked.  The softmax reduction over the
+    (possibly seq-sharded) cache is a single fused pass; GSPMD inserts the
+    split-K combine when S is sharded.
+    """
+    b, _, hq, hd = q.shape
+    s = k_cache.shape[1]
+    g = hq // n_kv_heads
+    qg = q.reshape(b, n_kv_heads, g, hd) * (hd ** -0.5)
+    scores = jnp.einsum(
+        "bhgd,bshd->bhgs", qg, k_cache, preferred_element_type=jnp.float32
+    )
+    valid = jnp.arange(s)[None, :] < cache_length
+    scores = jnp.where(valid[:, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)

@@ -1,0 +1,139 @@
+"""Shared neural-net layers: pure-jax, pytree params, no framework.
+
+Conventions: params are nested dicts of jnp arrays; every ``init_*`` takes a
+PRNG key; every ``apply`` is a pure function.  Compute dtype is configurable
+(bf16 on TPU); params stay in their stored dtype until cast at use.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, *, bias: bool = False,
+               dtype=jnp.float32, scale: Optional[float] = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = jax.random.normal(key, (d_in, d_out), dtype=jnp.float32) * scale
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense_apply(p, x, *, compute_dtype=None):
+    dt = compute_dtype or x.dtype
+    y = x.astype(dt) @ p["w"].astype(dt)
+    if "b" in p:
+        y = y + p["b"].astype(dt)
+    return y
+
+
+def embedding_init(key, vocab: int, dim: int, dtype=jnp.float32):
+    return {"table": jax.random.normal(key, (vocab, dim), jnp.float32)
+            .astype(dtype) * 0.02}
+
+
+def embedding_apply(p, ids, *, compute_dtype=None):
+    dt = compute_dtype or p["table"].dtype
+    return jnp.take(p["table"].astype(dt), ids, axis=0)
+
+
+def rmsnorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p, x, *, eps: float = 1e-6):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p, x, *, eps: float = 1e-5):
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def mlp_init(key, dims: Sequence[int], *, bias: bool = True,
+             dtype=jnp.float32):
+    """Plain MLP tower (recsys towers, GCN heads)."""
+    keys = jax.random.split(key, len(dims) - 1)
+    return {
+        f"layer_{i}": dense_init(k, dims[i], dims[i + 1], bias=bias, dtype=dtype)
+        for i, k in enumerate(keys)
+    }
+
+
+def mlp_apply(p, x, *, act=jax.nn.relu, final_act=None, compute_dtype=None):
+    n = len(p)
+    for i in range(n):
+        x = dense_apply(p[f"layer_{i}"], x, compute_dtype=compute_dtype)
+        if i < n - 1:
+            x = act(x)
+        elif final_act is not None:
+            x = final_act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / (
+        theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim)
+    )
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: broadcastable to [..., seq]."""
+    freqs = rope_frequencies(x.shape[-1], theta)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean token NLL.  logits [..., V] fp any; labels int [...]."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, labels[..., None], axis=-1
+    ).squeeze(-1)
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def binary_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    labels = labels.astype(jnp.float32)
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels
+        + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )

@@ -1,0 +1,3 @@
+"""RecSys model zoo: DCN-v2, DLRM-RM2, SASRec, MIND + embedding substrate."""
+
+from repro.models.recsys import dcn, dlrm, embedding, mind, sasrec  # noqa: F401

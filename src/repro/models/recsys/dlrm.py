@@ -1,0 +1,91 @@
+"""DLRM RM2 (arXiv:1906.00091): bottom MLP + dot interaction + top MLP."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.recsys import embedding as E
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    n_dense: int = 13
+    n_sparse: int = 26
+    embed_dim: int = 64
+    bot_mlp: Sequence[int] = (13, 512, 256, 64)
+    top_mlp: Sequence[int] = (512, 512, 256, 1)
+    vocab_per_field: int = 1_000_000
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    @property
+    def n_vectors(self) -> int:
+        return self.n_sparse + 1  # embeddings + bottom-MLP output
+
+    @property
+    def n_interactions(self) -> int:
+        return self.n_vectors * (self.n_vectors - 1) // 2
+
+    @property
+    def top_in(self) -> int:
+        return self.n_interactions + self.embed_dim
+
+    @property
+    def embedding(self) -> E.EmbeddingConfig:
+        return E.EmbeddingConfig(
+            self.n_sparse, self.vocab_per_field, self.embed_dim,
+            param_dtype=self.param_dtype,
+        )
+
+    def param_count(self) -> int:
+        bot = sum(a * b + b for a, b in zip(self.bot_mlp[:-1], self.bot_mlp[1:]))
+        dims = [self.top_in] + list(self.top_mlp)
+        top = sum(a * b + b for a, b in zip(dims[:-1], dims[1:]))
+        return self.embedding.param_count() + bot + top
+
+
+def init(cfg: DLRMConfig, key) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "embedding": E.init(cfg.embedding, k1),
+        "bot": L.mlp_init(k2, list(cfg.bot_mlp), dtype=cfg.param_dtype),
+        "top": L.mlp_init(k3, [cfg.top_in] + list(cfg.top_mlp),
+                          dtype=cfg.param_dtype),
+    }
+
+
+def _interact(vectors: jax.Array) -> jax.Array:
+    """Pairwise dots, lower triangle. vectors [B, V, d] -> [B, V(V-1)/2]."""
+    b, v, d = vectors.shape
+    gram = jnp.einsum("bvd,bwd->bvw", vectors, vectors)
+    ii, jj = jnp.tril_indices(v, k=-1)
+    return gram[:, ii, jj]
+
+
+def forward(cfg: DLRMConfig, params, batch) -> jax.Array:
+    dt = cfg.compute_dtype
+    d0 = L.mlp_apply(params["bot"], batch["dense"].astype(dt),
+                     act=jax.nn.relu, final_act=jax.nn.relu, compute_dtype=dt)
+    emb = E.lookup(cfg.embedding, params["embedding"], batch["sparse_ids"], dt)
+    vectors = jnp.concatenate([d0[:, None, :], emb], axis=1)  # [B, 27, 64]
+    inter = _interact(vectors)
+    top_in = jnp.concatenate([inter, d0], axis=-1)
+    return L.mlp_apply(params["top"], top_in, compute_dtype=dt)[:, 0]
+
+
+def loss_fn(cfg: DLRMConfig, params, batch) -> jax.Array:
+    return L.binary_cross_entropy(forward(cfg, params, batch), batch["label"])
+
+
+def retrieval_scores(cfg: DLRMConfig, params, batch) -> jax.Array:
+    """1 user vs n_candidates (candidate id -> sparse field 0)."""
+    n_cand = batch["candidates"].shape[0]
+    ids = jnp.broadcast_to(batch["sparse_ids"], (n_cand, cfg.n_sparse))
+    ids = ids.at[:, 0].set(batch["candidates"])
+    dense = jnp.broadcast_to(batch["dense"], (n_cand, cfg.n_dense))
+    return forward(cfg, params, dict(dense=dense, sparse_ids=ids))

@@ -1,0 +1,75 @@
+"""Sharded sparse-embedding substrate for the recsys archs.
+
+JAX has no ``nn.EmbeddingBag`` and no CSR — we build the lookup from
+``jnp.take`` + mask/segment reductions (this *is* part of the system).  All
+categorical fields share one fused table ``[n_fields * vocab_per_field, dim]``
+with per-field offsets; row-sharding that single table over the ``model``
+axis is the DLRM-style table placement (GSPMD turns the sharded ``take``
+into the expected all-to-all / all-gather pair).
+
+The Pallas ``embedding_bag`` kernel is the fused VMEM path for the per-shard
+local lookup; this module is the portable production path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class EmbeddingConfig:
+    n_fields: int
+    vocab_per_field: int
+    dim: int
+    combiner: str = "sum"      # sum | mean (for multi-hot bags)
+    param_dtype: Any = jnp.float32
+
+    @property
+    def total_rows(self) -> int:
+        return self.n_fields * self.vocab_per_field
+
+    def param_count(self) -> int:
+        return self.total_rows * self.dim
+
+
+def init(cfg: EmbeddingConfig, key) -> Dict[str, jax.Array]:
+    table = jax.random.normal(
+        key, (cfg.total_rows, cfg.dim), jnp.float32
+    ) * (cfg.dim ** -0.5)
+    return {"table": table.astype(cfg.param_dtype)}
+
+
+def field_offsets(cfg: EmbeddingConfig) -> jax.Array:
+    return (jnp.arange(cfg.n_fields, dtype=jnp.int32) * cfg.vocab_per_field)
+
+
+def lookup(cfg: EmbeddingConfig, params, ids: jax.Array,
+           compute_dtype=jnp.float32) -> jax.Array:
+    """One-hot fields: ids int32[B, n_fields] -> [B, n_fields, dim]."""
+    flat = (ids + field_offsets(cfg)[None, :]).reshape(-1)
+    rows = jnp.take(params["table"].astype(compute_dtype), flat, axis=0)
+    return rows.reshape(ids.shape[0], cfg.n_fields, cfg.dim)
+
+
+def bag_lookup(cfg: EmbeddingConfig, params, ids: jax.Array,
+               mask: jax.Array, compute_dtype=jnp.float32) -> jax.Array:
+    """Multi-hot: ids int32[B, n_fields, bag], mask f32 same shape ->
+    [B, n_fields, dim] (sum or mean combiner)."""
+    b, nf, bag = ids.shape
+    flat = (ids + field_offsets(cfg)[None, :, None]).reshape(-1)
+    rows = jnp.take(params["table"].astype(compute_dtype), flat, axis=0)
+    rows = rows.reshape(b, nf, bag, cfg.dim) * mask[..., None]
+    out = rows.sum(axis=2)
+    if cfg.combiner == "mean":
+        out = out / jnp.maximum(mask.sum(axis=2), 1.0)[..., None]
+    return out
+
+
+def item_lookup(table: jax.Array, ids: jax.Array,
+                compute_dtype=jnp.float32) -> jax.Array:
+    """Plain row gather (sequence models / candidate scoring)."""
+    return jnp.take(table.astype(compute_dtype), ids, axis=0)

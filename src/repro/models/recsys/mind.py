@@ -1,0 +1,109 @@
+"""MIND (arXiv:1904.08030): multi-interest capsule network for retrieval."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    pow_p: float = 2.0          # label-aware attention sharpness
+    n_negatives: int = 127      # sampled-softmax negatives (the paper's
+                                # serving-scale alternative to in-batch)
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        return self.n_items * d + d * d + 2 * d * d
+
+
+def init(cfg: MINDConfig, key) -> Dict[str, Any]:
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "item_embed": L.embedding_init(k1, cfg.n_items, d, cfg.param_dtype),
+        # shared bilinear map S of B2I routing (behavior -> interest space)
+        "s_map": L.dense_init(k2, d, d, dtype=cfg.param_dtype),
+        "out": L.mlp_init(k3, [d, 2 * d, d], dtype=cfg.param_dtype),
+    }
+
+
+def _squash(x: jax.Array, axis: int = -1) -> jax.Array:
+    n2 = jnp.sum(jnp.square(x), axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x * jax.lax.rsqrt(n2 + 1e-9)
+
+
+def user_interests(cfg: MINDConfig, params, hist: jax.Array,
+                   hist_mask: jax.Array) -> jax.Array:
+    """B2I dynamic routing. hist int32[B, H] -> interests [B, K, d]."""
+    dt = cfg.compute_dtype
+    b, hlen = hist.shape
+    e = L.embedding_apply(params["item_embed"], hist, compute_dtype=dt)
+    eh = L.dense_apply(params["s_map"], e, compute_dtype=dt)      # [B, H, d]
+    eh = eh * hist_mask[..., None].astype(dt)
+    # routing logits fixed-init at 0 (the paper samples; 0 is deterministic)
+    blog = jnp.zeros((b, hlen, cfg.n_interests), jnp.float32)
+    interests = jnp.zeros((b, cfg.n_interests, cfg.embed_dim), dt)
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(blog, axis=-1) * hist_mask[..., None]  # [B, H, K]
+        z = jnp.einsum("bhk,bhd->bkd", w.astype(dt), eh)
+        interests = _squash(z)
+        blog = blog + jnp.einsum("bhd,bkd->bhk", eh, interests).astype(jnp.float32)
+    # per-interest output MLP (H-layers of the paper's two-layer head)
+    return L.mlp_apply(params["out"], interests, compute_dtype=dt)
+
+
+def label_aware_scores(cfg: MINDConfig, interests: jax.Array,
+                       target_e: jax.Array) -> jax.Array:
+    """Label-aware attention: softmax(pow(u.e, p)) weighted score. [B]."""
+    sims = jnp.einsum("bkd,bd->bk", interests, target_e)
+    att = jax.nn.softmax(cfg.pow_p * sims, axis=-1)
+    return jnp.sum(att * sims, axis=-1)
+
+
+def loss_fn(cfg: MINDConfig, params, batch) -> jax.Array:
+    """Sampled-softmax: target vs ``n_negatives`` sampled items per row.
+
+    batch: hist [B, H], hist_mask [B, H], target [B], neg [B, n_negatives].
+    (In-batch negatives would build a [B, K, B] tensor — 17 GB at the
+    assigned B=65536 — so negatives are sampled, as the paper's production
+    setting does.)
+    """
+    dt = cfg.compute_dtype
+    interests = user_interests(cfg, params, batch["hist"], batch["hist_mask"])
+    table = params["item_embed"]["table"].astype(dt)
+    cand = jnp.concatenate(
+        [batch["target"][:, None], batch["neg"]], axis=1
+    )                                                             # [B, 1+N]
+    ce = jnp.take(table, cand.reshape(-1), axis=0).reshape(
+        cand.shape + (cfg.embed_dim,)
+    )                                                             # [B, C, d]
+    sims = jnp.einsum("bkd,bcd->bkc", interests, ce)              # [B, K, C]
+    att = jax.nn.softmax(cfg.pow_p * sims, axis=1)
+    scores = jnp.sum(att * sims, axis=1)                          # [B, C]
+    labels = jnp.zeros((scores.shape[0],), jnp.int32)  # target at column 0
+    return L.softmax_cross_entropy(scores, labels)
+
+
+def retrieval_scores(cfg: MINDConfig, params, batch) -> jax.Array:
+    """1 user vs n_candidates: max over interests (the paper's serving rule).
+
+    batch: hist [1, H], hist_mask [1, H], candidates int32 [n_cand].
+    """
+    interests = user_interests(cfg, params, batch["hist"], batch["hist_mask"])
+    table = params["item_embed"]["table"].astype(interests.dtype)
+    cand = jnp.take(table, batch["candidates"], axis=0)           # [n_cand, d]
+    sims = jnp.einsum("kd,cd->kc", interests[0], cand)
+    return sims.max(axis=0)

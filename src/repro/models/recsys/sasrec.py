@@ -1,0 +1,113 @@
+"""SASRec (arXiv:1808.09781): self-attentive sequential recommendation."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.attention import chunked_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class SASRecConfig:
+    n_items: int = 1_000_000
+    embed_dim: int = 50
+    n_blocks: int = 2
+    n_heads: int = 1
+    seq_len: int = 50
+    d_ff: int = 200
+    compute_dtype: Any = jnp.float32
+    param_dtype: Any = jnp.float32
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        attn = 4 * d * d
+        ffn = 2 * d * self.d_ff
+        per_block = attn + ffn + 4 * d
+        return (self.n_items + self.seq_len) * d + self.n_blocks * per_block
+
+
+def init(cfg: SASRecConfig, key) -> Dict[str, Any]:
+    keys = jax.random.split(key, 2 + cfg.n_blocks)
+    p: Dict[str, Any] = {
+        "item_embed": L.embedding_init(keys[0], cfg.n_items, cfg.embed_dim,
+                                       cfg.param_dtype),
+        "pos_embed": L.embedding_init(keys[1], cfg.seq_len, cfg.embed_dim,
+                                      cfg.param_dtype),
+    }
+    d = cfg.embed_dim
+    for i, k in enumerate(keys[2:]):
+        ks = jax.random.split(k, 6)
+        p[f"block_{i}"] = {
+            "ln1": L.layernorm_init(d, cfg.param_dtype),
+            "ln2": L.layernorm_init(d, cfg.param_dtype),
+            "wq": L.dense_init(ks[0], d, d, dtype=cfg.param_dtype),
+            "wk": L.dense_init(ks[1], d, d, dtype=cfg.param_dtype),
+            "wv": L.dense_init(ks[2], d, d, dtype=cfg.param_dtype),
+            "wo": L.dense_init(ks[3], d, d, dtype=cfg.param_dtype),
+            "ff1": L.dense_init(ks[4], d, cfg.d_ff, bias=True, dtype=cfg.param_dtype),
+            "ff2": L.dense_init(ks[5], cfg.d_ff, d, bias=True, dtype=cfg.param_dtype),
+        }
+    return p
+
+
+def encode(cfg: SASRecConfig, params, item_seq: jax.Array) -> jax.Array:
+    """item_seq int32[B, S] -> hidden [B, S, d] (causal)."""
+    b, s = item_seq.shape
+    dt = cfg.compute_dtype
+    hd = cfg.embed_dim // cfg.n_heads
+    h = L.embedding_apply(params["item_embed"], item_seq, compute_dtype=dt)
+    h = h + L.embedding_apply(
+        params["pos_embed"], jnp.arange(s)[None, :], compute_dtype=dt
+    )
+    for i in range(cfg.n_blocks):
+        p = params[f"block_{i}"]
+        x = L.layernorm_apply(p["ln1"], h)
+        q = L.dense_apply(p["wq"], x, compute_dtype=dt).reshape(b, s, cfg.n_heads, hd)
+        k = L.dense_apply(p["wk"], x, compute_dtype=dt).reshape(b, s, cfg.n_heads, hd)
+        v = L.dense_apply(p["wv"], x, compute_dtype=dt).reshape(b, s, cfg.n_heads, hd)
+        o = chunked_attention(q, k, v, n_kv_heads=cfg.n_heads, causal=True,
+                              chunk=min(s, 512))
+        h = h + L.dense_apply(p["wo"], o.reshape(b, s, -1), compute_dtype=dt)
+        x = L.layernorm_apply(p["ln2"], h)
+        h = h + L.dense_apply(
+            p["ff2"], jax.nn.relu(L.dense_apply(p["ff1"], x, compute_dtype=dt)),
+            compute_dtype=dt,
+        )
+    return h
+
+
+def loss_fn(cfg: SASRecConfig, params, batch) -> jax.Array:
+    """Next-item BPR-style loss with sampled negatives.
+
+    batch: item_seq [B, S], pos [B, S], neg [B, S], mask [B, S].
+    """
+    h = encode(cfg, params, batch["item_seq"])
+    table = params["item_embed"]["table"].astype(h.dtype)
+    pos_e = jnp.take(table, batch["pos"], axis=0)
+    neg_e = jnp.take(table, batch["neg"], axis=0)
+    pos_s = jnp.sum(h * pos_e, axis=-1)
+    neg_s = jnp.sum(h * neg_e, axis=-1)
+    mask = batch["mask"]
+    nll = -jnp.log(jax.nn.sigmoid(pos_s - neg_s) + 1e-9) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def user_embedding(cfg: SASRecConfig, params, item_seq: jax.Array) -> jax.Array:
+    """Last hidden state = the user representation for retrieval."""
+    return encode(cfg, params, item_seq)[:, -1, :]
+
+
+def retrieval_scores(cfg: SASRecConfig, params, batch) -> jax.Array:
+    """1 user history vs n_candidates: one dot per candidate.
+
+    batch: item_seq [1, S], candidates int32 [n_cand] -> [n_cand].
+    """
+    u = user_embedding(cfg, params, batch["item_seq"])  # [1, d]
+    table = params["item_embed"]["table"].astype(u.dtype)
+    cand = jnp.take(table, batch["candidates"], axis=0)  # [n_cand, d]
+    return cand @ u[0]

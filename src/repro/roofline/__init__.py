@@ -1,0 +1,8 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+
+from repro.roofline.analysis import (  # noqa: F401
+    HW,
+    RooflineTerms,
+    collective_bytes_from_hlo,
+    roofline_from_compiled,
+)

@@ -1,0 +1,188 @@
+"""Three-term roofline from the compiled dry-run artifact.
+
+    compute    = HLO_FLOPs / peak_FLOPs            (per chip)
+    memory     = HLO_bytes / HBM_bw                (per chip)
+    collective = collective_bytes / link_bw        (per chip)
+
+``cost_analysis()`` on the SPMD-partitioned executable reports *per-device*
+flops/bytes.  Collective bytes are not in cost_analysis: we parse the
+post-optimization HLO text and sum operand sizes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional, Tuple
+
+# TPU v5e-class hardware constants (per chip), per the assignment.
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12        # bf16 FLOP/s
+    hbm_bw: float = 819e9             # B/s
+    ici_bw: float = 50e9              # B/s per link
+    hbm_bytes: float = 16e9           # capacity, for fit checks
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1,
+    "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*))\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M,
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum *output* shape bytes per collective kind.
+
+    The output shape of a collective is what lands on the wire per device
+    (all-gather output = gathered bytes received; all-reduce ~ tensor size;
+    reduce-scatter output = reduced shard;
+    all-to-all = exchanged buffer).  ``-start``/``-done`` async pairs are
+    counted once (on start).
+    """
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        line = m.group(0)
+        if "-done(" in line:
+            continue  # counted at -start
+        out[kind] += _shape_bytes(shape_str)
+        counts[kind] += 1
+    out["_counts"] = counts  # type: ignore[assignment]
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops: float                   # per-device HLO flops
+    hbm_bytes: float               # per-device HLO bytes accessed
+    collective_bytes: float        # per-device bytes on the wire
+    collective_breakdown: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float = 0.0
+    useful_flops_ratio: float = 0.0
+    per_device_mem: Optional[dict] = None
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+
+def roofline_from_compiled(
+    compiled,
+    hlo_text: Optional[str] = None,
+    *,
+    hw: Hardware = HW,
+    model_flops_total: float = 0.0,
+    n_devices: int = 1,
+) -> RooflineTerms:
+    """Build the three terms from a compiled executable.
+
+    Uses the trip-count-aware HLO parser (:mod:`repro.roofline.hlo_parse`) —
+    XLA's own cost_analysis counts while-loop bodies once, which undercounts
+    every ``lax.scan`` in the framework.  ``model_flops_total`` is the
+    *global* useful-model FLOPs per step (6*N*D etc.); divided by
+    ``n_devices`` for the per-device ratio.
+    """
+    from repro.roofline import hlo_parse
+
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = hlo_parse.analyze(text)
+    flops = cost.flops
+    hbm = cost.hbm_bytes
+    coll = dict(cost.collective_breakdown)
+    counts = dict(n_while_loops=cost.n_while_loops)
+    coll_bytes = float(cost.collective_bytes)
+    # XLA's own (loop-body-once) numbers kept for cross-checking
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, list):
+        ca = ca[0] if ca else {}
+    counts["xla_flops_body_once"] = float(ca.get("flops", 0.0))
+    counts["xla_bytes_body_once"] = float(ca.get("bytes accessed", 0.0))
+
+    compute_s = flops / hw.peak_flops
+    memory_s = hbm / hw.hbm_bw
+    collective_s = coll_bytes / hw.ici_bw
+    terms = dict(compute=compute_s, memory=memory_s, collective=collective_s)
+    dominant = max(terms, key=terms.get)
+
+    mem = None
+    try:
+        ma = compiled.memory_analysis()
+        if ma is not None:
+            mem = dict(
+                argument_bytes=getattr(ma, "argument_size_in_bytes", None),
+                output_bytes=getattr(ma, "output_size_in_bytes", None),
+                temp_bytes=getattr(ma, "temp_size_in_bytes", None),
+                generated_code_bytes=getattr(
+                    ma, "generated_code_size_in_bytes", None),
+                alias_bytes=getattr(ma, "alias_size_in_bytes", None),
+            )
+    except Exception:
+        mem = None
+
+    model_flops_dev = model_flops_total / max(n_devices, 1)
+    return RooflineTerms(
+        flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=coll_bytes,
+        collective_breakdown={**coll, "counts": counts},
+        compute_s=compute_s,
+        memory_s=memory_s,
+        collective_s=collective_s,
+        dominant=dominant,
+        model_flops=model_flops_dev,
+        useful_flops_ratio=(model_flops_dev / flops) if flops else 0.0,
+        per_device_mem=mem,
+    )
+
+
+def fit_check(terms: RooflineTerms, hw: Hardware = HW) -> Tuple[bool, float]:
+    """Does (args + outputs + temps) fit per-chip HBM?"""
+    m = terms.per_device_mem or {}
+    used = sum(
+        v for k, v in m.items()
+        if k in ("argument_bytes", "output_bytes", "temp_bytes")
+        and isinstance(v, (int, float))
+    )
+    # alias'd (donated) buffers are counted in both args and outputs
+    alias = m.get("alias_bytes") or 0
+    used -= alias
+    return used <= hw.hbm_bytes, used

@@ -1,0 +1,111 @@
+"""Roofline report generator: results/dryrun/*.json -> markdown tables.
+
+    PYTHONPATH=src python -m repro.roofline.report [--dir results/dryrun]
+
+Emits the §Dry-run and §Roofline tables consumed by EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(dir_: str) -> List[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        r = json.load(open(f))
+        r["mesh_tag"] = "multipod" if "multipod" in f else "pod"
+        out.append(r)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6)):
+        if x >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def roofline_table(recs: List[dict], mesh_tag: str) -> str:
+    rows = [
+        "| arch | shape | dominant | compute | memory | collective | "
+        "useful-FLOPs | HBM GB | fits |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok") or r["mesh_tag"] != mesh_tag:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | **{rf['dominant']}** | "
+            f"{fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} | "
+            f"{fmt_s(rf['collective_s'])} | "
+            f"{rf['useful_flops_ratio']:.3f} | "
+            f"{r['hbm_used'] / 1e9:.1f} | "
+            f"{'yes' if r['hbm_fits'] else 'no*'} |"
+        )
+    return "\n".join(rows)
+
+
+def dryrun_table(recs: List[dict]) -> str:
+    rows = [
+        "| arch | shape | pod compile | multipod compile | per-dev FLOPs | "
+        "per-dev HBM bytes | collective bytes |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    by_key: Dict[tuple, dict] = {}
+    for r in recs:
+        if r.get("ok"):
+            by_key[(r["arch"], r["shape"], r["mesh_tag"])] = r
+    seen = []
+    for (arch, shape, _), r in by_key.items():
+        if (arch, shape) in seen:
+            continue
+        seen.append((arch, shape))
+        pod = by_key.get((arch, shape, "pod"))
+        mp = by_key.get((arch, shape, "multipod"))
+        rf = (pod or mp)["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | "
+            f"{'ok ' + str(pod['seconds']) + 's' if pod else '-'} | "
+            f"{'ok ' + str(mp['seconds']) + 's' if mp else '-'} | "
+            f"{rf['flops']:.2e} | {rf['hbm_bytes']:.2e} | "
+            f"{rf['collective_bytes']:.2e} |"
+        )
+    return "\n".join(rows)
+
+
+def summary(recs: List[dict]) -> dict:
+    ok = [r for r in recs if r.get("ok")]
+    fails = [r for r in recs if not r.get("ok")]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    return dict(total=len(recs), ok=len(ok), failed=len(fails),
+                dominant_counts=doms)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Summary\n")
+    print(json.dumps(summary(recs), indent=1))
+    print("\n## Dry-run table\n")
+    print(dryrun_table(recs))
+    print("\n## Roofline (single pod, 16x16)\n")
+    print(roofline_table(recs, "pod"))
+    print("\n## Roofline (multi-pod, 2x16x16)\n")
+    print(roofline_table(recs, "multipod"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Serving: request batching + the online PPR query service."""
+
+from repro.serving.engine import PPRService, ServiceConfig  # noqa: F401

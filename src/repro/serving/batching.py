@@ -1,0 +1,64 @@
+"""Request buffering (paper Section 3.3: "PowerWalk buffers the incoming
+PPR queries and computes a batch of PPR queries at a time").
+
+The buffer flushes on either (a) reaching ``max_batch`` or (b) a deadline —
+the standard latency/throughput knob for online services.  Deterministic
+and clock-injectable for tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    vertex: int
+    arrival: float
+
+
+@dataclasses.dataclass
+class BatchingConfig:
+    max_batch: int = 4096
+    max_wait_s: float = 0.010     # flush deadline
+    pad_to_power_of_two: bool = True   # avoid jit recompiles per size
+
+
+class RequestBuffer:
+    def __init__(self, cfg: BatchingConfig,
+                 clock: Optional[Callable[[], float]] = None):
+        self.cfg = cfg
+        self.clock = clock or time.monotonic
+        self._pending: List[Request] = []
+        self._next_id = 0
+
+    def submit(self, vertex: int) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._pending.append(Request(rid, int(vertex), self.clock()))
+        return rid
+
+    def ready(self) -> bool:
+        if not self._pending:
+            return False
+        if len(self._pending) >= self.cfg.max_batch:
+            return True
+        return (self.clock() - self._pending[0].arrival) >= self.cfg.max_wait_s
+
+    def drain(self) -> Tuple[List[Request], int]:
+        """Pop up to max_batch requests; returns (requests, padded_size)."""
+        batch = self._pending[: self.cfg.max_batch]
+        self._pending = self._pending[self.cfg.max_batch:]
+        n = len(batch)
+        padded = n
+        if self.cfg.pad_to_power_of_two and n > 0:
+            padded = 1
+            while padded < n:
+                padded *= 2
+        return batch, padded
+
+    def __len__(self) -> int:
+        return len(self._pending)

@@ -1,0 +1,4 @@
+"""Training substrate: optimizer, train-step factory, compression."""
+
+from repro.training.optimizer import AdamState, AdamWConfig  # noqa: F401
+from repro.training.train_loop import init_state, make_train_step  # noqa: F401

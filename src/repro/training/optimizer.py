@@ -1,0 +1,133 @@
+"""AdamW + schedules, from scratch (no optax in this environment).
+
+Production details that matter at pod scale:
+
+* **Mixed-precision states**: master weights fp32; first/second moments can
+  be stored bf16 (halves optimizer HBM — the difference between grok-314B
+  fitting one pod or not).  Error from bf16 moments is second-order; widely
+  used (e.g. 8-bit Adam goes further).
+* **Global-norm clipping** fused into the update (one psum'd norm).
+* **Decoupled weight decay** (AdamW).
+* States are plain pytrees so the checkpointer and the sharding policy treat
+  them like params (2-D sharded over (data, model) by default).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array          # int32 []
+    mu: Any                  # pytree like params (maybe bf16)
+    nu: Any                  # pytree like params (maybe bf16)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # Split moment dtypes: mu tolerates fp8 (FP8-LM, arXiv:2310.18313);
+    # nu needs more range -> bf16 floor.  Both fp32 by default.
+    moment_dtype: Any = jnp.float32   # sets both when mu/nu not given
+    mu_dtype: Any = None
+    nu_dtype: Any = None
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+    @property
+    def mu_dt(self):
+        return self.mu_dtype if self.mu_dtype is not None else self.moment_dtype
+
+    @property
+    def nu_dt(self):
+        return self.nu_dtype if self.nu_dtype is not None else self.moment_dtype
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup -> cosine decay to min_lr_ratio * lr."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip(
+        (step - cfg.warmup_steps)
+        / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    scale = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def init(cfg: AdamWConfig, params: Any) -> AdamState:
+    return AdamState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.mu_dt), params),
+        nu=jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.nu_dt), params),
+    )
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def update(
+    cfg: AdamWConfig,
+    grads: Any,
+    state: AdamState,
+    params: Any,
+) -> Tuple[Any, AdamState, dict]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+    step = state.step + 1
+    lr = lr_schedule(cfg, step)
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def one(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m32 = m.astype(jnp.float32)
+        v32 = v.astype(jnp.float32)
+        m32 = cfg.b1 * m32 + (1.0 - cfg.b1) * g
+        v32 = cfg.b2 * v32 + (1.0 - cfg.b2) * jnp.square(g)
+        upd = (m32 / b1c) / (jnp.sqrt(v32 / b2c) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        p32 = p32 - lr * (upd + cfg.weight_decay * p32)
+        return (
+            p32.astype(p.dtype),
+            m32.astype(cfg.mu_dt),
+            v32.astype(cfg.nu_dt),
+        )
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [one(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    metrics = dict(grad_norm=gnorm, lr=lr)
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v), metrics
+
+
+def sgd_update(params: Any, grads: Any, lr: float) -> Any:
+    """Plain SGD (tiny tests / GCN full-batch baselines)."""
+    return jax.tree.map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)).astype(p.dtype),
+        params,
+        grads,
+    )

@@ -1,0 +1,106 @@
+"""Train-step factory: value_and_grad -> (compressed) grads -> AdamW.
+
+Production features:
+  * optional micro-batch **gradient accumulation** (scan over microbatches;
+    activation memory / grad-noise knob),
+  * pluggable **gradient transform** hook (the compression module registers
+    bf16 + error-feedback here),
+  * metrics (loss, grad-norm, lr) returned every step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.training import optimizer as opt_mod
+from repro.training.optimizer import AdamState, AdamWConfig
+
+
+def _constrain_tree(tree, pspecs):
+    """Guarded with_sharding_constraint (no-op outside a mesh context)."""
+    if pspecs is None:
+        return tree
+    def one(x, spec):
+        try:
+            return jax.lax.with_sharding_constraint(x, spec)
+        except (ValueError, RuntimeError, TypeError):
+            return x
+    return jax.tree.map(one, tree, pspecs)
+
+
+def make_train_step(
+    loss_fn: Callable[[Any, Any], Any],
+    opt_cfg: AdamWConfig,
+    *,
+    grad_transform: Optional[Callable[[Any], Any]] = None,
+    microbatches: int = 1,
+    accum_dtype=jnp.float32,
+    grad_pspecs: Any = None,
+):
+    """loss_fn(params, batch) -> scalar or (scalar, metrics dict).
+
+    ``grad_pspecs``: PartitionSpec tree matching params.  Without it the
+    grad-accumulation buffer is unsharded and GSPMD replicates it — every
+    microbatch then ALL-REDUCES full per-layer gradients (measured 6.4 TB
+    per step on command-r) instead of reduce-scattering 1/16th.
+    """
+
+    def scalar_loss(params, batch):
+        out = loss_fn(params, batch)
+        if isinstance(out, tuple):
+            return out[0], out[1]
+        return out, {}
+
+    def grads_of(params, batch):
+        (loss, aux), grads = jax.value_and_grad(scalar_loss, has_aux=True)(
+            params, batch
+        )
+        return loss, aux, grads
+
+    def train_step(params, opt_state: AdamState, batch):
+        if microbatches > 1:
+            def mb(carry, micro):
+                loss_acc, grad_acc = carry
+                loss, _, grads = grads_of(params, micro)
+                grad_acc = jax.tree.map(
+                    lambda a, g: (a.astype(jnp.float32)
+                                  + g.astype(jnp.float32)).astype(a.dtype),
+                    grad_acc, grads,
+                )
+                return (loss_acc + loss, grad_acc), ()
+
+            micro = jax.tree.map(
+                lambda x: x.reshape((microbatches, x.shape[0] // microbatches)
+                                    + x.shape[1:]),
+                batch,
+            )
+            zero = _constrain_tree(
+                jax.tree.map(lambda p: jnp.zeros(p.shape, accum_dtype),
+                             params),
+                grad_pspecs,
+            )
+            (loss, grads), _ = jax.lax.scan(
+                mb, (jnp.zeros((), jnp.float32), zero), micro
+            )
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            aux = {}
+        else:
+            loss, aux, grads = grads_of(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_state, om = opt_mod.update(
+            opt_cfg, grads, opt_state, params
+        )
+        metrics = dict(loss=loss, **{k: v for k, v in aux.items()}, **om)
+        return new_params, new_state, metrics
+
+    return train_step
+
+
+def init_state(opt_cfg: AdamWConfig, params) -> AdamState:
+    return opt_mod.init(opt_cfg, params)

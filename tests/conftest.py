@@ -1,0 +1,21 @@
+import os
+
+# Tests run on the single real CPU device; the 512-device dry-run sets its
+# own XLA_FLAGS in a subprocess (launch/dryrun.py) and must NOT leak here.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("JAX_ENABLE_X64", "0")
+
+import numpy as np
+import pytest
+
+import jax
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)

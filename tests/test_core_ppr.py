@@ -1,0 +1,299 @@
+"""Accuracy/semantics tests for MCFP, MCEP, VERD, PI, index, query engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mcep, mcfp, metrics, theory
+from repro.core import verd as verd_mod
+from repro.core.graph import Graph
+from repro.core.index import (
+    PPRIndex,
+    build_index,
+    index_from_dense,
+    plan_for_budget,
+)
+from repro.core.power_iteration import exact_ppr_dense, power_iteration
+from repro.core.query import BatchQueryEngine, QueryConfig
+from repro.core.walks import sample_walk_lengths, simulate_walks, walks_for_sources
+from repro.graphs import synthetic
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return synthetic.erdos_renyi(48, 4.0, seed=7)
+
+
+@pytest.fixture(scope="module")
+def exact_small(small_graph):
+    return exact_ppr_dense(small_graph)
+
+
+def test_power_iteration_matches_solve(small_graph, exact_small):
+    sources = jnp.arange(8, dtype=jnp.int32)
+    got = np.asarray(power_iteration(small_graph, sources, n_iter=200))
+    np.testing.assert_allclose(got, exact_small[:8], atol=2e-5)
+
+
+def test_pi_rows_stochastic(small_graph):
+    sources = jnp.asarray([0, 5, 11], dtype=jnp.int32)
+    p = power_iteration(small_graph, sources, n_iter=100)
+    assert metrics.is_stochastic(p).all()
+
+
+def test_mcfp_converges(small_graph, exact_small, key):
+    sources = jnp.asarray([0, 1, 2, 3], dtype=jnp.int32)
+    est = mcfp.estimate_ppr(small_graph, sources, r=3000, key=key)
+    rag = metrics.mean_rag(jnp.asarray(exact_small[:4], jnp.float32), est, k=10)
+    assert rag > 0.97
+    assert metrics.is_stochastic(est, atol=1e-3).all()
+
+
+def test_mcep_converges_but_slower(small_graph, exact_small, key):
+    sources = jnp.asarray([0, 1, 2, 3], dtype=jnp.int32)
+    r = 800
+    fp = mcfp.estimate_ppr(small_graph, sources, r=r, key=key)
+    ep = mcep.estimate_ppr(small_graph, sources, r=r, key=key)
+    ex = jnp.asarray(exact_small[:4], jnp.float32)
+    l1_fp = float(metrics.l1_error(ex, fp).mean())
+    l1_ep = float(metrics.l1_error(ex, ep).mean())
+    # Full-path uses ~1/c more samples; must be clearly better at equal R.
+    assert l1_fp < l1_ep
+
+
+def test_walk_lengths_geometric(key):
+    lens = np.asarray(sample_walk_lengths(key, 20000, c=0.15, max_steps=200))
+    mean = lens.mean()
+    assert abs(mean - 1 / 0.15) < 0.4  # 1/c = 6.67
+
+
+def test_walk_counts_consistency(small_graph, key):
+    sources = jnp.asarray([0, 1], dtype=jnp.int32)
+    ws, wr = walks_for_sources(sources, 50)
+    counts = simulate_walks(
+        small_graph, ws, wr, key, n_rows=2, max_steps=64
+    )
+    # every walk terminates exactly once
+    np.testing.assert_allclose(np.asarray(counts.walks), 50.0)
+    # moves >= walks (every walk has at least one position)
+    assert (np.asarray(counts.moves) >= 50.0).all()
+    # endpoint counts sum to R per row
+    np.testing.assert_allclose(
+        np.asarray(counts.ep_counts.sum(axis=1)), 50.0
+    )
+    # full-path counts sum to moves
+    np.testing.assert_allclose(
+        np.asarray(counts.fp_counts.sum(axis=1)),
+        np.asarray(counts.moves),
+    )
+
+
+def test_dangling_walk_returns_to_source(key):
+    # 0 -> 1, 1 dangling: PPR(0) must put all non-teleport mass on {0, 1}
+    g = Graph.from_edges([0], [1], n=3)
+    est = mcfp.estimate_ppr(g, jnp.asarray([0], jnp.int32), r=500, key=key)
+    assert float(est[0, 2]) == 0.0
+    assert float(est[0, 0] + est[0, 1]) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_dangling_ppr_is_self(key):
+    # dangling source: p_u = e_u exactly (walk always returns home)
+    g = Graph.from_edges([0], [1], n=2)
+    est = mcfp.estimate_ppr(g, jnp.asarray([1], jnp.int32), r=200, key=key)
+    np.testing.assert_allclose(np.asarray(est[0]), [0.0, 1.0], atol=1e-6)
+    p = power_iteration(g, jnp.asarray([1], jnp.int32), n_iter=50)
+    np.testing.assert_allclose(np.asarray(p[0]), [0.0, 1.0], atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# VERD
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def nodangle_graph():
+    """Strongly-connected-ish graph with no dangling vertices."""
+    g = synthetic.erdos_renyi(40, 5.0, seed=3)
+    # add a cycle so every vertex has out-degree >= 1
+    src = np.concatenate([np.asarray(g.src), np.arange(40)])
+    dst = np.concatenate([np.asarray(g.col_idx), (np.arange(40) + 1) % 40])
+    return Graph.from_edges(src, dst, n=40)
+
+
+def test_decomposition_theorem_exact(nodangle_graph):
+    """Theorem 2.2: p_u = c e_u + (1-c)/|O(u)| sum p_v for exact vectors."""
+    ex = exact_ppr_dense(nodangle_graph)
+    g = nodangle_graph
+    for u in [0, 7, 13]:
+        nbrs = g.out_neighbors(u)
+        rhs = 0.15 * np.eye(g.n)[u] + 0.85 / len(nbrs) * sum(
+            ex[int(v)] for v in nbrs
+        )
+        np.testing.assert_allclose(ex[u], rhs, atol=1e-10)
+
+
+def test_verd_equals_recursive_decomp(nodangle_graph):
+    """Theorem 2.3: vc-decomp(u, T) == decomp(u, T) with shared base."""
+    g = nodangle_graph
+    rng = np.random.default_rng(0)
+    base = rng.random((g.n, g.n)).astype(np.float64)
+    base /= base.sum(axis=1, keepdims=True)
+    sources = jnp.asarray([0, 5, 9], dtype=jnp.int32)
+    for t in [0, 1, 2, 3]:
+        s, f = verd_mod.verd_iterate(g, sources, t=t)
+        idx = index_from_dense(jnp.asarray(base, jnp.float32), l=g.n)
+        got = np.asarray(verd_mod.combine_with_index(s, f, idx))
+        for row, u in enumerate([0, 5, 9]):
+            want = verd_mod.recursive_decomp(g, u, t, base)
+            np.testing.assert_allclose(got[row], want, atol=1e-5)
+
+
+def test_verd_with_exact_index_is_exact(nodangle_graph):
+    """Combining with exact PPR vectors reproduces them exactly (any T)."""
+    g = nodangle_graph
+    ex = jnp.asarray(exact_ppr_dense(g), jnp.float32)
+    idx = index_from_dense(ex, l=g.n)
+    sources = jnp.asarray([1, 2, 3], dtype=jnp.int32)
+    for t in [0, 2, 4]:
+        got = verd_mod.verd_query(g, sources, idx, t=t)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ex[1:4]), atol=1e-4
+        )
+
+
+def test_verd_no_index_converges_to_ppr(nodangle_graph):
+    g = nodangle_graph
+    ex = exact_ppr_dense(g)
+    sources = jnp.asarray([0, 4], dtype=jnp.int32)
+    prev_err = None
+    for t in [2, 8, 48]:
+        got = np.asarray(verd_mod.verd_query(g, sources, None, t=t))
+        err = np.abs(got - ex[[0, 4]]).sum(axis=1).mean()
+        # residual frontier mass is exactly (1-c)^t
+        assert err < 2.0 * 0.85 ** t + 1e-4
+        if prev_err is not None:
+            assert err < prev_err
+        prev_err = err
+    assert prev_err < 1e-3
+
+
+def test_verd_improves_on_raw_index(small_graph, exact_small, key):
+    """The paper's key claim: VERD(T) on a low-R index beats the index."""
+    g = small_graph
+    idx, _ = build_index(g, r=30, l=32, key=key, source_batch=64)
+    ex = jnp.asarray(exact_small, jnp.float32)
+    sources = jnp.arange(16, dtype=jnp.int32)
+    raw = idx.lookup_dense(sources)
+    refined = verd_mod.verd_query(g, sources, idx, t=2)
+    rag_raw = metrics.mean_rag(ex[:16], raw, k=10)
+    rag_ref = metrics.mean_rag(ex[:16], refined, k=10)
+    assert rag_ref > rag_raw - 1e-6
+    assert rag_ref > 0.98
+
+
+# ---------------------------------------------------------------------------
+# Index + planner
+# ---------------------------------------------------------------------------
+
+def test_index_build_and_lookup(small_graph, key):
+    idx, stats = build_index(small_graph, r=100, l=16, key=key)
+    assert idx.values.shape == (small_graph.n, 16)
+    assert stats["drop_fraction"] < 0.5
+    dense = idx.lookup_dense(jnp.asarray([0, 1], jnp.int32))
+    assert dense.shape == (2, small_graph.n)
+    # kept mass is a sub-probability
+    assert float(dense.sum(axis=1).max()) <= 1.0 + 1e-4
+
+
+def test_truncation_drops_recorded(small_graph, key):
+    idx_wide, s_wide = build_index(small_graph, r=200, l=48, key=key)
+    idx_narrow, s_narrow = build_index(small_graph, r=200, l=4, key=key)
+    assert s_narrow["drop_fraction"] > s_wide["drop_fraction"]
+
+
+def test_plan_for_budget_monotone():
+    p1 = plan_for_budget(n=1000, budget_bytes=1 << 20)
+    p2 = plan_for_budget(n=1000, budget_bytes=1 << 24)
+    assert p2.l > p1.l and p2.r >= p1.r and p2.t_online <= p1.t_online
+    assert p1.index_bytes <= p1.budget_bytes
+
+
+# ---------------------------------------------------------------------------
+# Theory
+# ---------------------------------------------------------------------------
+
+def test_theorem_bound_monotone():
+    assert theory.overestimate_bound(0.1, 2000) < theory.overestimate_bound(
+        0.1, 500
+    )
+    assert theory.overestimate_bound(0.2, 500) < theory.overestimate_bound(
+        0.1, 500
+    )
+
+
+def test_walks_required_inverts_bound():
+    r = theory.walks_required(gamma=0.1, delta=0.01)
+    assert theory.two_sided_bound(0.1, r) <= 0.01
+    assert theory.two_sided_bound(0.1, r // 2) > 0.01
+
+
+def test_mcep_equivalent_ratio_matches_paper():
+    # paper: 1000 MCFP walks ~ 6700 MCEP walks at c=0.15
+    assert theory.mcep_equivalent_walks(1000) == pytest.approx(6667, abs=40)
+
+
+def test_empirical_error_within_bound(small_graph, exact_small, key):
+    """Monte-Carlo error should respect Theorem 2.1 at small failure prob."""
+    sources = jnp.arange(8, dtype=jnp.int32)
+    r = 1600
+    est = np.asarray(mcfp.estimate_ppr(small_graph, sources, r=r, key=key))
+    err = np.abs(est - exact_small[:8]).max()
+    # pick gamma where the bound is tiny; empirical max error must be below
+    gamma = 0.35
+    assert theory.two_sided_bound(gamma, r) < 0.01
+    assert err < gamma
+
+
+# ---------------------------------------------------------------------------
+# Query engine
+# ---------------------------------------------------------------------------
+
+def test_query_engine_modes(small_graph, exact_small, key):
+    idx, _ = build_index(small_graph, r=100, l=32, key=key)
+    ex = jnp.asarray(exact_small, jnp.float32)
+    sources = np.arange(12, dtype=np.int32)
+    for mode, min_rag in [
+        ("powerwalk", 0.97),
+        ("verd", 0.90),
+        ("fppr", 0.80),
+        ("mcfp", 0.97),
+        ("pi", 0.999),
+    ]:
+        cfg = QueryConfig(mode=mode, t_iterations=3, top_k=10)
+        eng = BatchQueryEngine(small_graph, idx, cfg)
+        out = eng.run(sources)
+        assert out["values"].shape == (12, 10)
+        dense = eng.query_dense(jnp.asarray(sources))
+        rag = metrics.mean_rag(ex[:12], dense, k=10)
+        assert rag > min_rag, (mode, rag)
+
+
+def test_query_engine_requires_index():
+    g = synthetic.cycle(8)
+    with pytest.raises(ValueError):
+        BatchQueryEngine(g, None, QueryConfig(mode="powerwalk"))
+
+
+def test_batching_equivalence(small_graph, key):
+    """Chunked execution must equal single-shot (shared decomposition is
+    exact, not approximate)."""
+    idx, _ = build_index(small_graph, r=50, l=16, key=key)
+    cfg = QueryConfig(mode="powerwalk", t_iterations=2, top_k=5, max_batch=4)
+    eng = BatchQueryEngine(small_graph, idx, cfg)
+    srcs = np.arange(10, dtype=np.int32)
+    out_chunked = eng.run(srcs)
+    cfg2 = QueryConfig(mode="powerwalk", t_iterations=2, top_k=5, max_batch=64)
+    out_single = BatchQueryEngine(small_graph, idx, cfg2).run(srcs)
+    np.testing.assert_allclose(
+        out_chunked["values"], out_single["values"], rtol=1e-6
+    )

@@ -1,0 +1,21 @@
+"""Distributed-engine equivalence: runs the 4-device check in a subprocess
+(the main test process must keep seeing exactly 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_distributed_engine_matches_dense():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(os.path.dirname(__file__), "dist_engine_check.py")
+    res = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True,
+        timeout=900,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL OK" in res.stdout

@@ -1,0 +1,91 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import (
+    Graph,
+    dangling_mass,
+    push_forward,
+    reverse,
+    transition_with_dangling,
+    bucket_sample_sources,
+    degree_histogram,
+)
+from repro.graphs import synthetic
+
+
+def test_from_edges_csr_structure():
+    g = Graph.from_edges([0, 0, 1, 2], [1, 2, 2, 0], n=3)
+    assert g.n == 3 and g.m == 4
+    np.testing.assert_array_equal(np.asarray(g.out_deg), [2, 1, 1])
+    np.testing.assert_array_equal(np.asarray(g.row_ptr), [0, 2, 3, 4])
+    assert set(map(int, g.out_neighbors(0))) == {1, 2}
+
+
+def test_dangling_detection():
+    g = synthetic.figure2_graph()
+    dang = np.asarray(g.dangling_mask)
+    # v5..v8 (ids 4..7) are dangling in our figure-2 rendering
+    assert dang[4] and dang[5] and dang[6] and dang[7]
+    assert not dang[0]
+
+
+def test_push_forward_matches_dense():
+    g = synthetic.erdos_renyi(32, 4.0, seed=1)
+    a = g.dense_transition(source=None)
+    f = np.random.default_rng(0).random((5, 32)).astype(np.float32)
+    got = np.asarray(push_forward(g, jnp.asarray(f)))
+    want = f @ a.astype(np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_transition_with_dangling_conserves_mass():
+    g = synthetic.figure2_graph()
+    sources = jnp.asarray([0, 3], dtype=jnp.int32)
+    f = jnp.zeros((2, g.n)).at[jnp.arange(2), sources].set(1.0)
+    for _ in range(5):
+        f = transition_with_dangling(g, f, sources)
+        np.testing.assert_allclose(np.asarray(f.sum(axis=1)), 1.0, rtol=1e-5)
+
+
+def test_dangling_mass_value():
+    g = Graph.from_edges([0], [1], n=2)  # 1 is dangling
+    f = jnp.asarray([[0.25, 0.75]])
+    assert float(dangling_mass(g, f)[0]) == pytest.approx(0.75)
+
+
+def test_reverse_roundtrip():
+    g = synthetic.erdos_renyi(64, 3.0, seed=2)
+    rg = reverse(g)
+    assert rg.m == g.m
+    rrg = reverse(rg)
+    # same edge multiset
+    e1 = sorted(zip(np.asarray(g.src).tolist(), np.asarray(g.col_idx).tolist()))
+    e2 = sorted(zip(np.asarray(rrg.src).tolist(), np.asarray(rrg.col_idx).tolist()))
+    assert e1 == e2
+
+
+def test_degree_histogram_and_bucket_sampling():
+    g = synthetic.rmat(10, avg_deg=8.0, seed=3)
+    hist = degree_histogram(g)
+    assert hist.sum() == g.n
+    srcs = bucket_sample_sources(g, per_bucket=5, seed=0)
+    assert len(srcs) > 0
+    deg = np.asarray(g.out_deg)[srcs]
+    assert (deg >= 0).all()
+
+
+def test_rmat_power_law_ish():
+    g = synthetic.rmat(12, avg_deg=8.0, seed=0)
+    deg = np.asarray(g.out_deg)
+    # heavy tail: max degree far above mean
+    assert deg.max() > 10 * max(deg.mean(), 1.0)
+
+
+def test_bipartite_shapes():
+    g = synthetic.bipartite_recsys(100, 50, avg_deg=4.0, seed=0)
+    assert g.n == 150
+    src = np.asarray(g.src)
+    dst = np.asarray(g.col_idx)
+    users = src < 100
+    assert (dst[users] >= 100).all()  # user edges go to items

@@ -1,0 +1,229 @@
+"""Model-level correctness: decode/forward consistency, KV quant accuracy,
+attention oracle checks, GCN numerics, recsys invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.attention import chunked_attention, decode_attention
+from repro.models.recsys import dcn, dlrm, mind, sasrec
+
+
+@pytest.fixture(scope="module")
+def small_cfg():
+    return T.TransformerConfig(
+        n_layers=3, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=211, compute_dtype=jnp.float32, attn_chunk=16, remat=False,
+    )
+
+
+@pytest.fixture(scope="module")
+def small_params(small_cfg):
+    return T.init(small_cfg, jax.random.PRNGKey(0))
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _ref_attention(q, k, v, n_kv, causal):
+    b, s, hq, hd = q.shape
+    g = hq // n_kv
+    qg = q.reshape(b, s, n_kv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k) / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(b, s, hq, hd)
+
+
+@pytest.mark.parametrize("s,chunk,causal", [
+    (32, 8, True), (32, 32, True), (64, 16, False), (48, 16, True),
+])
+def test_chunked_attention_matches_reference(s, chunk, causal, rng):
+    b, hq, hkv, hd = 2, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    got = chunked_attention(q, k, v, n_kv_heads=hkv, causal=causal,
+                            chunk=chunk)
+    want = _ref_attention(q, k, v, hkv, causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_decode_attention_matches_full(rng):
+    """One-token decode == last row of full causal attention."""
+    b, s, hq, hkv, hd = 2, 24, 4, 2, 16
+    q_full = jnp.asarray(rng.standard_normal((b, s, hq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((b, s, hkv, hd)), jnp.float32)
+    full = _ref_attention(q_full, k, v, hkv, causal=True)
+    got = decode_attention(q_full[:, -1:], k, v, jnp.asarray(s),
+                           n_kv_heads=hkv)
+    np.testing.assert_allclose(np.asarray(got[:, 0]),
+                               np.asarray(full[:, -1]),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# decode == forward (the KV-cache consistency contract)
+# ---------------------------------------------------------------------------
+
+def test_decode_matches_forward(small_cfg, small_params):
+    """Token-by-token decode reproduces the parallel forward's logits."""
+    cfg, params = small_cfg, small_params
+    b, s = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(3), (b, s), 0, cfg.vocab)
+    h, _ = T.forward(cfg, params, toks)
+    logits_full = L.dense_apply(params["lm_head"], h)
+
+    cache = T.init_cache(cfg, b, 16, jnp.float32)
+    outs = []
+    for t in range(s):
+        logits, cache = T.decode_step(cfg, params, cache, toks[:, t:t + 1])
+        outs.append(logits[:, 0])
+    got = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(logits_full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_decode_int8_kv_close_to_fp(small_cfg, small_params):
+    """int8 KV quantization must stay close to the fp cache path."""
+    cfg, params = small_cfg, small_params
+    qcfg = T.TransformerConfig(
+        **{**cfg.__dict__, "kv_quant": True}
+    )
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(4), (b, s), 0, cfg.vocab)
+    cache_f = T.init_cache(cfg, b, 12, jnp.float32)
+    cache_q = T.init_cache(qcfg, b, 12)
+    for t in range(s):
+        lf, cache_f = T.decode_step(cfg, params, cache_f, toks[:, t:t + 1])
+        lq, cache_q = T.decode_step(qcfg, params, cache_q, toks[:, t:t + 1])
+    assert cache_q["k"].dtype == jnp.int8
+    # logits agree to int8-quantization tolerance
+    pf = jax.nn.softmax(lf[:, 0].astype(jnp.float32))
+    pq = jax.nn.softmax(lq[:, 0].astype(jnp.float32))
+    assert float(jnp.abs(pf - pq).max()) < 0.05
+    # top-1 prediction preserved
+    np.testing.assert_array_equal(
+        np.asarray(jnp.argmax(lf, -1)), np.asarray(jnp.argmax(lq, -1)))
+
+
+def test_moe_decode_matches_forward():
+    cfg = T.TransformerConfig(
+        n_layers=2, d_model=32, n_heads=2, n_kv_heads=2, d_ff=64, vocab=101,
+        moe=T.MoEConfig(n_experts=4, top_k=2, capacity_factor=4.0),
+        compute_dtype=jnp.float32, attn_chunk=8, remat=False,
+    )
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    b, s = 2, 6
+    toks = jax.random.randint(jax.random.PRNGKey(5), (b, s), 0, cfg.vocab)
+    h, _ = T.forward(cfg, params, toks)
+    logits_full = L.dense_apply(params["lm_head"], h)
+    cache = T.init_cache(cfg, b, 8, jnp.float32)
+    outs = []
+    for t in range(s):
+        lg, cache = T.decode_step(cfg, params, cache, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    got = jnp.stack(outs, axis=1)
+    # generous capacity => no token drops => decode == forward
+    np.testing.assert_allclose(np.asarray(got), np.asarray(logits_full),
+                               rtol=5e-3, atol=5e-3)
+
+
+def test_loss_chunking_equivalence(small_cfg, small_params):
+    cfg0 = small_cfg
+    cfg1 = T.TransformerConfig(**{**cfg0.__dict__, "loss_chunk": 5})
+    toks = jax.random.randint(jax.random.PRNGKey(6), (2, 10), 0, cfg0.vocab)
+    batch = dict(tokens=toks, labels=toks, mask=jnp.ones((2, 10)))
+    l0, _ = T.loss_fn(cfg0, small_params, batch)
+    l1, _ = T.loss_fn(cfg1, small_params, batch)
+    np.testing.assert_allclose(float(l0), float(l1), rtol=1e-5)
+
+
+def test_moe_capacity_drops_are_bounded():
+    """At capacity_factor 1.0 some tokens drop; output stays finite and
+    the kept fraction is >= 1/top_k of slots."""
+    cfg = T.TransformerConfig(
+        n_layers=1, d_model=16, n_heads=2, n_kv_heads=2, d_ff=32, vocab=50,
+        moe=T.MoEConfig(n_experts=2, top_k=2, capacity_factor=1.0),
+        compute_dtype=jnp.float32, attn_chunk=8, remat=False,
+    )
+    params = T.init(cfg, jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    layer0 = jax.tree.map(lambda p: p[0], params["layers"])
+    out, aux = T._moe_ffn(cfg, layer0, x)
+    assert bool(jnp.isfinite(out).all())
+    assert float(aux) >= 0.0
+
+
+# ---------------------------------------------------------------------------
+# recsys invariants
+# ---------------------------------------------------------------------------
+
+def test_dcn_cross_is_not_linear(rng):
+    """The cross tower must be quadratic in x0 (its whole point)."""
+    cfg = dcn.DCNConfig(n_dense=4, n_sparse=3, embed_dim=4,
+                        n_cross_layers=2, mlp=(8,), vocab_per_field=10)
+    p = dcn.init(cfg, jax.random.PRNGKey(0))
+    base = dict(
+        dense=jnp.asarray(rng.standard_normal((2, 4)), jnp.float32),
+        sparse_ids=jnp.asarray(rng.integers(0, 10, (2, 3)), jnp.int32),
+    )
+    y1 = dcn.forward(cfg, p, base)
+    y2 = dcn.forward(cfg, p, dict(dense=2 * base["dense"],
+                                  sparse_ids=base["sparse_ids"]))
+    # not homogeneous of degree 1 in the dense features
+    assert not np.allclose(np.asarray(y2), 2 * np.asarray(y1), rtol=0.2)
+
+
+def test_dlrm_interaction_count():
+    cfg = dlrm.DLRMConfig(n_sparse=5, embed_dim=8, bot_mlp=(13, 8),
+                          top_mlp=(4, 1), vocab_per_field=10)
+    assert cfg.n_vectors == 6 and cfg.n_interactions == 15
+
+
+def test_sasrec_causality(rng):
+    """Future items must not influence earlier positions."""
+    cfg = sasrec.SASRecConfig(n_items=50, embed_dim=16, n_blocks=1,
+                              n_heads=1, seq_len=8, d_ff=32)
+    p = sasrec.init(cfg, jax.random.PRNGKey(0))
+    seq1 = jnp.asarray(rng.integers(0, 50, (1, 8)), jnp.int32)
+    seq2 = seq1.at[0, -1].set((seq1[0, -1] + 7) % 50)
+    h1 = sasrec.encode(cfg, p, seq1)
+    h2 = sasrec.encode(cfg, p, seq2)
+    np.testing.assert_allclose(np.asarray(h1[:, :-1]),
+                               np.asarray(h2[:, :-1]), atol=1e-5)
+    assert not np.allclose(np.asarray(h1[:, -1]), np.asarray(h2[:, -1]))
+
+
+def test_mind_interests_shape_and_masking(rng):
+    cfg = mind.MINDConfig(n_items=40, embed_dim=8, n_interests=3,
+                          capsule_iters=2, hist_len=6)
+    p = mind.init(cfg, jax.random.PRNGKey(0))
+    hist = jnp.asarray(rng.integers(0, 40, (2, 6)), jnp.int32)
+    mask = jnp.asarray([[1, 1, 1, 0, 0, 0], [1, 1, 1, 1, 1, 1]], jnp.float32)
+    ints = mind.user_interests(cfg, p, hist, mask)
+    assert ints.shape == (2, 3, 8)
+    # fully-masked history still finite
+    ints0 = mind.user_interests(cfg, p, hist, jnp.zeros_like(mask))
+    assert bool(jnp.isfinite(ints0).all())
+
+
+def test_rope_relative_property(rng):
+    """RoPE: <q_m, k_n> depends only on m - n."""
+    q = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 1, 1, 32)), jnp.float32)
+    def dot_at(m, n):
+        qm = L.apply_rope(q, jnp.asarray([[m]]))
+        kn = L.apply_rope(k, jnp.asarray([[n]]))
+        return float(jnp.sum(qm * kn))
+    assert dot_at(5, 3) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), rel=1e-3)

@@ -1,0 +1,177 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import mcfp, metrics, theory
+from repro.core import verd as verd_mod
+from repro.core.graph import Graph, push_forward, transition_with_dangling
+from repro.core.index import index_from_dense, plan_for_budget, truncate_topl
+from repro.core.power_iteration import exact_ppr_dense, power_iteration
+from repro.core.walks import sample_walk_lengths
+from repro.graphs import formats, synthetic
+
+SETTINGS = dict(
+    deadline=None, max_examples=12,
+    suppress_health_check=[HealthCheck.too_slow, HealthCheck.data_too_large],
+)
+
+
+@st.composite
+def graphs(draw, max_n=24):
+    n = draw(st.integers(3, max_n))
+    m = draw(st.integers(n, 4 * n))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    if not keep.any():
+        src, dst = np.array([0]), np.array([1 % n])
+        keep = np.array([True])
+    return Graph.from_edges(src[keep], dst[keep], n=n)
+
+
+@given(graphs())
+@settings(**SETTINGS)
+def test_exact_ppr_rows_are_stochastic(g):
+    p = exact_ppr_dense(g)
+    assert np.all(p >= -1e-12)
+    np.testing.assert_allclose(p.sum(axis=1), 1.0, atol=1e-9)
+
+
+@given(graphs())
+@settings(**SETTINGS)
+def test_transition_preserves_mass(g):
+    sources = jnp.asarray([0, g.n - 1], jnp.int32)
+    f = jnp.zeros((2, g.n)).at[jnp.arange(2), sources].set(1.0)
+    for _ in range(3):
+        f = transition_with_dangling(g, f, sources)
+        np.testing.assert_allclose(np.asarray(f.sum(1)), 1.0, rtol=1e-5)
+
+
+@given(graphs())
+@settings(**SETTINGS)
+def test_decomposition_theorem_on_dangling_free(g):
+    """Thm 2.2 holds exactly on dangling-free graphs.
+
+    (With dangling vertices the per-source adjustment of Section 2.1 makes
+    each p_v solve a *different* transition matrix, and the identity is
+    only approximate — the same reason Algorithm 4 drops dangling mass.
+    We close every dangling vertex with a cycle edge first.)
+    """
+    deg = np.asarray(g.out_deg)
+    if (deg == 0).any():
+        extra = np.nonzero(deg == 0)[0]
+        src = np.concatenate([np.asarray(g.src), extra])
+        dst = np.concatenate([np.asarray(g.col_idx), (extra + 1) % g.n])
+        g = Graph.from_edges(src, dst, n=g.n)
+    p = exact_ppr_dense(g)
+    for u in range(g.n):
+        nbrs = g.out_neighbors(u)
+        rhs = 0.15 * np.eye(g.n)[u] + 0.85 / len(nbrs) * sum(
+            p[int(v)] for v in nbrs)
+        np.testing.assert_allclose(p[u], rhs, atol=1e-9)
+        break  # one vertex per example keeps runtime bounded
+
+
+@given(graphs(), st.integers(0, 3))
+@settings(**SETTINGS)
+def test_verd_matches_recursion(g, t):
+    """Thm 2.3 on arbitrary random graphs (incl. dangling-free subcases)."""
+    if np.asarray(g.dangling_mask).any():
+        # recursion's dangling convention differs (see verd.py docstring);
+        # restrict the equivalence property to non-dangling graphs
+        return
+    rng = np.random.default_rng(0)
+    base = rng.random((g.n, g.n))
+    base /= base.sum(1, keepdims=True)
+    srcs = jnp.asarray([0], jnp.int32)
+    s, f = verd_mod.verd_iterate(g, srcs, t=t)
+    idx = index_from_dense(jnp.asarray(base, jnp.float32), l=g.n)
+    got = np.asarray(verd_mod.combine_with_index(s, f, idx))[0]
+    want = verd_mod.recursive_decomp(g, 0, t, base)
+    np.testing.assert_allclose(got, want, atol=5e-5)
+
+
+@given(graphs(), st.integers(1, 6))
+@settings(**SETTINGS)
+def test_ell_pull_equals_push(g, k):
+    ell = formats.to_ell_chunks(g, k=k)
+    rng = np.random.default_rng(0)
+    f = jnp.asarray(rng.random((2, g.n)), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(formats.ell_pull(ell, f)),
+        np.asarray(push_forward(g, f)),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+@given(st.integers(1, 64), st.integers(2, 32))
+@settings(**SETTINGS)
+def test_truncation_keeps_largest(l, n):
+    rng = np.random.default_rng(l * 31 + n)
+    est = jnp.asarray(rng.random((3, n)), jnp.float32)
+    vals, idx = truncate_topl(est, min(l, n))
+    # kept values are the top ones
+    want = np.sort(np.asarray(est), axis=1)[:, ::-1][:, : min(l, n)]
+    np.testing.assert_allclose(np.asarray(vals), want, rtol=1e-6)
+
+
+@given(st.floats(0.02, 0.5), st.integers(10, 5000))
+@settings(**SETTINGS)
+def test_theory_bound_in_unit_range_and_monotone(gamma, r):
+    b = theory.overestimate_bound(gamma, r)
+    assert b >= 0
+    assert theory.overestimate_bound(gamma, r + 100) <= b + 1e-12
+
+
+@given(st.integers(1, 10 ** 9), st.integers(0, 2 ** 40))
+@settings(**SETTINGS)
+def test_budget_plan_within_budget(n, budget):
+    plan = plan_for_budget(n, budget)
+    assert plan.index_bytes <= max(budget, 0)
+    assert plan.r <= plan.l  # R = c*L < L
+
+
+@given(st.integers(2, 100))
+@settings(**SETTINGS)
+def test_rag_exact_is_one(k):
+    rng = np.random.default_rng(k)
+    p = jnp.asarray(rng.random((4, 200)), jnp.float32)
+    rag = metrics.rag_at_k(p, p, min(k, 200))
+    np.testing.assert_allclose(np.asarray(rag), 1.0, rtol=1e-6)
+
+
+@given(st.integers(2, 50))
+@settings(**SETTINGS)
+def test_rag_scale_invariant(k):
+    rng = np.random.default_rng(k)
+    exact = jnp.asarray(rng.random((3, 100)), jnp.float32)
+    approx = jnp.asarray(rng.random((3, 100)), jnp.float32)
+    r1 = metrics.rag_at_k(exact, approx, k)
+    r2 = metrics.rag_at_k(exact, approx * 7.3, k)
+    np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-6)
+
+
+def test_walk_lengths_match_geometric_distribution(key):
+    lens = np.asarray(sample_walk_lengths(key, 50000, c=0.2, max_steps=300))
+    # P(len = k) = c (1-c)^{k-1}: check mean and P(1)
+    assert abs(lens.mean() - 5.0) < 0.15
+    assert abs((lens == 1).mean() - 0.2) < 0.01
+
+
+@given(graphs(max_n=16), st.integers(1, 3))
+@settings(**SETTINGS)
+def test_mcfp_error_shrinks_with_r(g, seed):
+    key = jax.random.PRNGKey(seed)
+    exact = exact_ppr_dense(g)[:1]
+    src = jnp.asarray([0], jnp.int32)
+    e_small = np.abs(np.asarray(
+        mcfp.estimate_ppr(g, src, 50, key)) - exact).sum()
+    e_big = np.abs(np.asarray(
+        mcfp.estimate_ppr(g, src, 800, key)) - exact).sum()
+    assert e_big <= e_small + 0.05

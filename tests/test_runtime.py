@@ -1,0 +1,240 @@
+"""Distributed-runtime substrate tests: checkpoint, elastic, compression,
+optimizer, serving/batching, partitioner."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import compression as comp
+from repro.distributed.checkpoint import Checkpointer
+from repro.distributed.elastic import StepTimer, degraded_sequence, plan_mesh
+from repro.graphs import partition, synthetic
+from repro.serving.batching import BatchingConfig, RequestBuffer
+from repro.training import optimizer as opt_mod
+from repro.training.optimizer import AdamWConfig
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "b": {"c": jnp.arange(10, dtype=jnp.int32),
+              "d": jax.random.normal(k, (4,), jnp.float32).astype(jnp.bfloat16)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ckpt.save(5, tree, extra=dict(data_step=5))
+    restored, extra = ckpt.restore(5, tree)
+    assert extra["data_step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    ckpt = Checkpointer(str(tmp_path), keep=2)
+    for step in (1, 2, 3, 4):
+        ckpt.save(step, _tree(step), blocking=False)
+    ckpt.wait()
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_checkpoint_ignores_partial(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    ckpt.save(7, _tree())
+    os.makedirs(str(tmp_path / "step_9.tmp"))  # simulated crash mid-write
+    assert ckpt.latest_step() == 7
+
+
+def test_checkpoint_reshard_hook(tmp_path):
+    ckpt = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ckpt.save(1, tree)
+    calls = []
+    restored, _ = ckpt.restore(1, tree, shard_fn=lambda t: (calls.append(1), t)[1])
+    assert calls == [1]
+
+
+# ---------------------------------------------------------------------------
+# elastic
+# ---------------------------------------------------------------------------
+
+def test_plan_mesh_full():
+    p = plan_mesh(256, model_parallel=16)
+    assert p.shape == (16, 16) and p.devices_idle == 0
+
+
+def test_plan_mesh_degraded_keeps_model_axis():
+    p = plan_mesh(240, model_parallel=16, prior_data_parallel=16)
+    assert p.shape == (15, 16)
+    assert p.microbatch_scale == 2  # 16 -> 15 data ranks: accumulate more
+
+
+def test_plan_mesh_catastrophic():
+    p = plan_mesh(8, model_parallel=16)
+    assert p.shape[1] <= 8 and p.devices_used <= 8
+
+
+def test_degraded_sequence_monotone():
+    plans = degraded_sequence(256, [16, 16, 32], model_parallel=16)
+    used = [p.devices_used for p in plans]
+    assert used == sorted(used, reverse=True)
+
+
+def test_step_timer_flags_stragglers():
+    t = StepTimer(window=16, threshold=2.0)
+    advice = [t.record(0.1) for _ in range(10)]
+    assert all(a is None for a in advice)
+    assert t.record(0.5) == "rebalance"
+    t.record(0.5)
+    assert t.record(0.5) == "checkpoint"
+
+
+# ---------------------------------------------------------------------------
+# compression
+# ---------------------------------------------------------------------------
+
+def test_bf16_error_feedback_unbiased():
+    cfg = comp.CompressionConfig(method="bf16_ef")
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.normal(size=(64, 64)) * 1e-3, jnp.float32)}
+    residual = comp.init(g)
+    total_q = np.zeros((64, 64), np.float32)
+    steps = 50
+    for _ in range(steps):
+        q, residual = comp.compress(cfg, g, residual)
+        total_q += np.asarray(q["w"])
+    # accumulated quantized grads converge to accumulated true grads
+    want = np.asarray(g["w"]) * steps
+    np.testing.assert_allclose(total_q, want, rtol=2e-2, atol=1e-4)
+
+
+def test_plain_bf16_is_biased_relative_to_ef():
+    cfg_plain = comp.CompressionConfig(method="bf16")
+    cfg_ef = comp.CompressionConfig(method="bf16_ef")
+    rng = np.random.default_rng(1)
+    g = {"w": jnp.asarray(rng.normal(size=(128,)) * 1e-4, jnp.float32)}
+    r_p, r_e = comp.init(g), comp.init(g)
+    acc_p = np.zeros(128, np.float32)
+    acc_e = np.zeros(128, np.float32)
+    for _ in range(100):
+        qp, r_p = comp.compress(cfg_plain, g, r_p)
+        qe, r_e = comp.compress(cfg_ef, g, r_e)
+        acc_p += np.asarray(qp["w"])
+        acc_e += np.asarray(qe["w"])
+    want = np.asarray(g["w"]) * 100
+    err_p = np.abs(acc_p - want).mean()
+    err_e = np.abs(acc_e - want).mean()
+    assert err_e <= err_p + 1e-9
+
+
+def test_int8_ef_roundtrip():
+    cfg = comp.CompressionConfig(method="int8_ef")
+    g = {"w": jnp.asarray(np.linspace(-1, 1, 256), jnp.float32)}
+    q, r = comp.compress(cfg, g, comp.init(g))
+    assert float(jnp.abs(q["w"] - g["w"]).max()) < 0.1
+    assert comp.wire_bytes(g, cfg) == 256
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, warmup_steps=0,
+                      total_steps=200, grad_clip=100.0)
+    params = {"x": jnp.asarray([5.0, -3.0])}
+    state = opt_mod.init(cfg, params)
+    for _ in range(200):
+        grads = {"x": 2 * params["x"]}
+        params, state, m = opt_mod.update(cfg, grads, state, params)
+    assert float(jnp.abs(params["x"]).max()) < 0.1
+
+
+def test_adamw_mixed_moment_dtypes():
+    cfg = AdamWConfig(mu_dtype=jnp.float8_e4m3fn, nu_dtype=jnp.bfloat16)
+    params = {"x": jnp.ones((32,), jnp.float32)}
+    state = opt_mod.init(cfg, params)
+    assert state.mu["x"].dtype == jnp.float8_e4m3fn
+    assert state.nu["x"].dtype == jnp.bfloat16
+    grads = {"x": jnp.full((32,), 0.5)}
+    p2, s2, _ = opt_mod.update(cfg, grads, state, params)
+    assert bool(jnp.isfinite(p2["x"]).all())
+    assert float(p2["x"][0]) < 1.0
+
+
+def test_grad_clipping():
+    cfg = AdamWConfig(grad_clip=1.0, lr=1.0, warmup_steps=0)
+    params = {"x": jnp.zeros((4,))}
+    state = opt_mod.init(cfg, params)
+    _, _, m = opt_mod.update(cfg, {"x": jnp.full((4,), 100.0)}, state, params)
+    assert float(m["grad_norm"]) == pytest.approx(200.0)
+
+
+# ---------------------------------------------------------------------------
+# serving buffer
+# ---------------------------------------------------------------------------
+
+def test_buffer_flush_on_size():
+    clock = iter(np.arange(0, 100, 0.001)).__next__
+    buf = RequestBuffer(BatchingConfig(max_batch=4, max_wait_s=10.0),
+                        clock=clock)
+    for v in range(3):
+        buf.submit(v)
+    assert not buf.ready()
+    buf.submit(3)
+    assert buf.ready()
+    reqs, padded = buf.drain()
+    assert len(reqs) == 4 and padded == 4
+
+
+def test_buffer_flush_on_deadline():
+    t = [0.0]
+    buf = RequestBuffer(BatchingConfig(max_batch=100, max_wait_s=0.01),
+                        clock=lambda: t[0])
+    buf.submit(1)
+    assert not buf.ready()
+    t[0] = 0.02
+    assert buf.ready()
+    reqs, padded = buf.drain()
+    assert len(reqs) == 1 and padded == 1
+
+
+def test_buffer_pads_to_power_of_two():
+    clock = lambda: 0.0
+    buf = RequestBuffer(BatchingConfig(max_batch=16), clock=clock)
+    for v in range(5):
+        buf.submit(v)
+    reqs, padded = buf.drain()
+    assert len(reqs) == 5 and padded == 8
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+
+def test_edge_balanced_beats_vertex_balanced_on_skew():
+    g = synthetic.rmat(11, avg_deg=16.0, seed=3)
+    v_parts = partition.vertex_intervals(g, 8)
+    e_parts = partition.edge_balanced_intervals(g, 8)
+    _, v_imb = partition.balance_stats(v_parts)
+    _, e_imb = partition.balance_stats(e_parts)
+    assert e_imb <= v_imb
+    assert sum(p.size for p in e_parts) == g.n
+
+
+def test_source_round_robin():
+    shards = partition.assign_sources_to_shards(np.arange(10), 3)
+    assert sorted(np.concatenate(shards).tolist()) == list(range(10))
