@@ -1,0 +1,22 @@
+# Developer entry points.  Everything pins PYTHONPATH=src so the targets work
+# from a clean checkout without an editable install.
+
+PY ?= python
+
+.PHONY: test test-fast bench bench-smoke
+
+# tier-1 verify: the full suite (ROADMAP.md)
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+# quick subset: skips tests marked `slow` (see pytest.ini)
+test-fast:
+	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+# full paper-table benchmark sweep
+bench:
+	PYTHONPATH=src $(PY) -m benchmarks.run
+
+# CI-sized smoke: small graphs, query + kernel tables only
+bench-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only query,kernels

@@ -1,4 +1,5 @@
-"""Paper Table 3 + Figure 6: online query latency vs batch size and method.
+"""Paper Table 3 + Figure 6: online query latency vs batch size and method,
+plus the dense-vs-sparse frontier-path sweep (docs/query_path.md).
 
 Methods: PI, online MCFP, FPPR (direct index lookup), PowerWalk at
 R in {0, 10, 100}.  Batch sizes scaled to the CPU-tier graph.
@@ -7,11 +8,13 @@ R in {0, 10, 100}.  Batch sizes scaled to the CPU-tier graph.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import bench_graph, emit
-from repro.core.index import build_index
+from benchmarks.common import bench_graph, emit, timeit
+from repro.core.index import PPRIndex, build_index
 from repro.core.query import BatchQueryEngine, QueryConfig
+from repro.graphs import synthetic
 
 
 def run(fast: bool = False) -> dict:
@@ -52,6 +55,68 @@ def run(fast: bool = False) -> dict:
                 res2["seconds"] / nq * 1e6,
                 f"total_s={res2['seconds']:.4f};qps={res2['qps']:.1f}",
             )
+    out.update(run_sparse_sweep(fast=fast))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# dense vs sparse frontier path (the Q x n -> Q x K refactor)
+# ---------------------------------------------------------------------------
+
+def _random_index(n: int, l: int, key: jax.Array) -> PPRIndex:
+    """Synthetic sub-stochastic top-L index: building a real MCFP index for
+    a 100k-vertex graph would dominate the benchmark; path-relative speed
+    and L1-vs-dense-oracle do not depend on the index contents."""
+    kv, ki = jax.random.split(key)
+    vals = jax.random.uniform(kv, (n, l), jnp.float32)
+    vals = jnp.sort(vals / vals.sum(axis=1, keepdims=True), axis=1)[:, ::-1]
+    idxs = jax.random.randint(ki, (n, l), 0, n, jnp.int32)
+    return PPRIndex(values=vals, indices=idxs, l=l, n=n)
+
+
+def run_sparse_sweep(fast: bool = False) -> dict:
+    """Wall-clock + L1 sweep over (n, Q, K): dense oracle vs sparse path.
+
+    The headline point (n=100k, Q=256, K=512) reproduces the acceptance gate
+    of the sparse-frontier refactor: >= 5x on the shared-decomposition query
+    with L1-vs-dense bounded by the truncated frontier mass.
+    """
+    points = [(20_000, 64, 128)]
+    if not fast:
+        points += [(100_000, 256, 512), (100_000, 256, 128)]
+    out = {}
+    setups = {}  # graph + index per unique n (construction is the slow part)
+    for n, q, k in points:
+        if n not in setups:
+            setups[n] = (
+                synthetic.erdos_renyi(n, 8.0, seed=5),
+                _random_index(n, 32, jax.random.PRNGKey(7)),
+            )
+        g, idx = setups[n]
+        srcs = jnp.asarray(
+            np.random.default_rng(0).integers(0, n, q), jnp.int32
+        )
+        kw = dict(mode="powerwalk", t_iterations=2, top_k=100, frontier_k=k)
+        dense = BatchQueryEngine(
+            g, idx, QueryConfig(frontier_path="dense", **kw))
+        sparse = BatchQueryEngine(
+            g, idx, QueryConfig(frontier_path="sparse", **kw))
+        t_dense = timeit(lambda: dense.query_topk(srcs))
+        t_sparse = timeit(lambda: sparse.query_topk(srcs))
+        # L1 vs the dense oracle (full vectors, not just top-k)
+        oracle = dense.query_dense(srcs)
+        approx = sparse.query_sparse(srcs, out_k=min(8 * k, n)).densify()
+        l1 = float(jnp.abs(approx - oracle).sum(axis=1).mean())
+        speedup = t_dense / max(t_sparse, 1e-9)
+        out[(n, q, k)] = dict(
+            t_dense=t_dense, t_sparse=t_sparse, speedup=speedup, l1=l1
+        )
+        emit(
+            f"sparse_sweep_n{n}_q{q}_k{k}",
+            t_sparse / q * 1e6,  # per query, like every other row here
+            f"dense_s={t_dense:.4f};sparse_s={t_sparse:.4f};"
+            f"speedup={speedup:.1f}x;l1_vs_dense={l1:.2e}",
+        )
     return out
 
 

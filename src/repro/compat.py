@@ -1,0 +1,44 @@
+"""Version shims for the moving parts of the JAX API.
+
+``jax.shard_map`` graduated from ``jax.experimental.shard_map`` and along the
+way renamed ``check_rep`` to ``check_vma``; depending on the installed
+version exactly one of the spellings exists.  Every call site in this repo
+goes through :func:`shard_map` so the difference lives here only.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Optional
+
+import jax
+
+
+def _resolve_shard_map() -> Callable:
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map
+    from jax.experimental.shard_map import shard_map as impl  # jax <= 0.4.x
+
+    return impl
+
+
+def shard_map(
+    f: Callable,
+    *,
+    mesh: Any,
+    in_specs: Any,
+    out_specs: Any,
+    check_vma: Optional[bool] = None,
+) -> Callable:
+    """``jax.shard_map`` if present, else the experimental one.
+
+    ``check_vma`` maps onto the old ``check_rep`` flag (same meaning:
+    validate replication/varying-manual-axes of outputs).
+    """
+    impl = _resolve_shard_map()
+    kwargs = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    if check_vma is not None:
+        params = inspect.signature(impl).parameters
+        flag = "check_vma" if "check_vma" in params else "check_rep"
+        kwargs[flag] = check_vma
+    return impl(f, **kwargs)

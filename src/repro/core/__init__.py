@@ -7,6 +7,7 @@ decomposition) -> `query` (shared-decomposition batch engine).  Baselines:
 (RAG@k).
 """
 
+from repro.core.frontier import SparseFrontier  # noqa: F401
 from repro.core.graph import Graph  # noqa: F401
 from repro.core.index import PPRIndex, build_index, plan_for_budget  # noqa: F401
 from repro.core.query import BatchQueryEngine, QueryConfig  # noqa: F401

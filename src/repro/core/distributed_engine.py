@@ -40,6 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.graph import Graph
 from repro.core.walks import DEFAULT_C
 
@@ -293,7 +294,7 @@ def make_verd_tile_step(cfg: DistConfig, mesh: Mesh):
         P(model, None, None), P(model, None, None),
     )
     out_specs = (P(), P())
-    fn = jax.shard_map(
+    fn = shard_map(
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )
@@ -364,7 +365,7 @@ def make_walk_counts_step(cfg: DistConfig, mesh: Mesh, *, max_steps: int = 64):
         P(),
     )
     out_specs = (P(None, model), P())
-    return jax.shard_map(
+    return shard_map(
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )

@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
 from typing import Optional, Tuple
 
@@ -30,6 +31,13 @@ from repro.core.index import PPRIndex
 from repro.core.walks import DEFAULT_C
 
 
+# Auto path selection: below this vertex count the dense [Q, n] frontier is
+# cheap enough that the sparse bookkeeping (sort-based compaction) isn't
+# worth it; above it the dense path's Q*n*8 bytes of state dominates.  See
+# docs/query_path.md for the memory formulas.
+AUTO_SPARSE_MIN_N = 1 << 15
+
+
 @dataclasses.dataclass
 class QueryConfig:
     mode: str = "powerwalk"       # powerwalk | verd | fppr | mcfp | pi
@@ -40,6 +48,8 @@ class QueryConfig:
     pi_iterations: int = 100
     threshold: float = 0.0         # VERD frontier sparsification epsilon
     max_batch: int = 4096          # shared-decomposition batch size
+    frontier_k: int = 0            # sparse frontier width (0 = auto-derive)
+    frontier_path: str = "auto"    # dense | sparse | auto
 
 
 class BatchQueryEngine:
@@ -56,7 +66,81 @@ class BatchQueryEngine:
         self.config = config or QueryConfig()
         if self.config.mode in ("powerwalk", "fppr") and index is None:
             raise ValueError(f"mode {self.config.mode} requires a PPR index")
+        if self.config.frontier_path not in ("dense", "sparse", "auto"):
+            raise ValueError(
+                f"unknown frontier_path {self.config.frontier_path!r}"
+            )
         self._key = jax.random.PRNGKey(0)
+        self._degree_cap: Optional[int] = None  # resolved lazily, host-side
+
+    # -- sparse-path plumbing ------------------------------------------------
+    @property
+    def frontier_k(self) -> int:
+        """Effective sparse-frontier width K (cfg.frontier_k or auto).
+
+        The auto width covers the *expected* frontier support after ``t``
+        pushes (~ mean_degree**t) so that auto-routed sparse answers are not
+        silently truncated; graphs whose support estimate forces K near n
+        then fail the ``uses_sparse_path`` guards and stay dense/exact.
+        An explicit ``cfg.frontier_k`` overrides the estimate.
+        """
+        cfg = self.config
+        n = self.graph.n
+        if cfg.frontier_k > 0:
+            return min(cfg.frontier_k, n)
+        mean_deg = self.graph.m / max(n, 1)
+        # log space: mean_deg ** t overflows float at absurd t; saturate at n
+        log_support = cfg.t_iterations * math.log(max(mean_deg, 1.0))
+        if log_support >= math.log(max(n, 1)):
+            support = float(n)
+        else:
+            support = math.exp(log_support)
+        return min(n, max(4 * cfg.top_k, 256, int(math.ceil(support))))
+
+    def uses_sparse_path(self) -> bool:
+        """Route decision: does query_topk hold Q x K instead of Q x n?
+
+        Only the VERD modes have a frontier; ``auto`` picks sparse once the
+        dense state (Q*n*8 bytes/query-pair) dwarfs the sparse state
+        (~Q*K*8), i.e. on large graphs where K << n — AND the push's
+        candidate gather (Q*K*degree_cap entries) stays below the dense row
+        width, which rules out hub-heavy graphs where one high-degree vertex
+        would inflate the gather past the dense state it replaces.
+        """
+        cfg = self.config
+        if cfg.mode not in ("powerwalk", "verd"):
+            return False
+        if cfg.frontier_path == "sparse":
+            return True
+        if cfg.frontier_path == "dense":
+            return False
+        return (
+            self.graph.n >= AUTO_SPARSE_MIN_N
+            and 8 * self.frontier_k <= self.graph.n
+            and self.frontier_k * self.degree_cap() <= self.graph.n
+        )
+
+    def degree_cap(self) -> int:
+        """Max out-degree (cached): the exact-mode edge budget per slot."""
+        if self._degree_cap is None:
+            self._degree_cap = verd_mod.resolve_degree_cap(self.graph)
+        return self._degree_cap
+
+    def query_sparse(self, sources: jax.Array, out_k: Optional[int] = None):
+        """Sparse-path answers as a SparseFrontier (never builds [Q, n])."""
+        cfg = self.config
+        if cfg.mode not in ("powerwalk", "verd"):
+            raise ValueError(
+                f"mode {cfg.mode!r} has no frontier; query_sparse supports "
+                "the VERD modes (powerwalk, verd) only"
+            )
+        index = self.index if cfg.mode == "powerwalk" else None
+        return verd_mod.verd_query_sparse(
+            self.graph, sources, index,
+            t=cfg.t_iterations, k=self.frontier_k, c=cfg.c,
+            threshold=cfg.threshold, out_k=out_k or cfg.top_k,
+            degree_cap=self.degree_cap(),
+        )
 
     # -- dense answers -----------------------------------------------------
     def query_dense(self, sources: jax.Array) -> jax.Array:
@@ -87,6 +171,9 @@ class BatchQueryEngine:
     def query_topk(
         self, sources: jax.Array
     ) -> Tuple[jax.Array, jax.Array]:
+        if self.uses_sparse_path():
+            sf = self.query_sparse(sources, out_k=self.config.top_k)
+            return sf.values, sf.indices
         dense = self.query_dense(sources)
         vals, idx = jax.lax.top_k(dense, self.config.top_k)
         return vals, idx

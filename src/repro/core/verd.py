@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import frontier
 from repro.core.graph import Graph, transition_with_dangling
 from repro.core.index import PPRIndex
 from repro.core.walks import DEFAULT_C
@@ -114,6 +115,229 @@ def verd_query(
     if index is None:
         return s
     return combine_with_index(s, f, index)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-frontier path: Q x K state instead of Q x n (see core/frontier.py).
+# ---------------------------------------------------------------------------
+
+def resolve_degree_cap(graph: Graph) -> int:
+    """Max out-degree — the per-slot edge budget that makes the sparse push
+    exact.  Must run outside jit (it materializes a device scalar)."""
+    if graph.n == 0 or graph.m == 0:
+        return 1
+    return max(int(jax.device_get(jnp.max(graph.out_deg))), 1)
+
+
+def gather_push_candidates(
+    fv: jax.Array,
+    fi: jax.Array,
+    sources: jax.Array,
+    row_ptr: jax.Array,
+    out_deg: jax.Array,
+    col_idx: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """Array-level gather push shared by the core op and the Pallas kernel
+    body (``kernels/frontier_push.py``); see :func:`sparse_push_candidates`
+    for semantics.  Requires ``col_idx`` non-empty."""
+    q, k = fv.shape
+    d = degree_cap
+    m = col_idx.shape[0]
+    start = jnp.take(row_ptr, fi)                     # [Q, K]
+    deg = jnp.take(out_deg, fi)                       # [Q, K]
+    offs = jnp.arange(d, dtype=jnp.int32)
+    valid = offs[None, None, :] < deg[..., None]      # [Q, K, D]
+    eidx = jnp.clip(start[..., None] + offs, 0, m - 1)
+    nbrs = jnp.where(valid, jnp.take(col_idx, eidx), 0)
+    inv = 1.0 / jnp.maximum(deg[..., None].astype(jnp.float32), 1.0)
+    push_v = jnp.where(valid, (1.0 - c) * fv[..., None] * inv, 0.0)
+    dm = jnp.sum(jnp.where(deg == 0, fv, 0.0), axis=1)  # dangling mass [Q]
+    cand_v = jnp.concatenate(
+        [push_v.reshape(q, k * d), (1.0 - c) * dm[:, None]], axis=1
+    )
+    cand_i = jnp.concatenate(
+        [nbrs.reshape(q, k * d), sources.reshape(-1, 1).astype(jnp.int32)],
+        axis=1,
+    )
+    return cand_v, cand_i
+
+
+def sparse_push_candidates(
+    graph: Graph,
+    fv: jax.Array,
+    fi: jax.Array,
+    sources: jax.Array,
+    *,
+    c: float = DEFAULT_C,
+    degree_cap: int,
+) -> Tuple[jax.Array, jax.Array]:
+    """One VERD push ``(1-c) * f @ A`` in sparse form, uncompacted.
+
+    For each frontier slot ``(q, j)`` holding mass ``fv`` at vertex ``fi``,
+    gathers up to ``degree_cap`` out-edges from CSR and emits one candidate
+    per edge; dangling mass returns to each query's source (last slot).
+    Returns ``(cand_v, cand_i)`` of width ``K * degree_cap + 1`` — callers
+    dedup + top-K compact (``frontier.compact``).
+
+    ``degree_cap`` below the max out-degree of any *frontier* vertex drops
+    the tail edges of that vertex (mass ``fv * (deg - cap) / deg``); with
+    ``degree_cap >= max out-degree`` the push is exact.
+    """
+    if graph.m == 0:  # every vertex dangling: all mass returns to source
+        dm = jnp.sum(fv, axis=1)
+        return (
+            (1.0 - c) * dm[:, None],
+            sources.reshape(-1, 1).astype(jnp.int32),
+        )
+    return gather_push_candidates(
+        fv, fi, sources, graph.row_ptr, graph.out_deg, graph.col_idx,
+        c=c, degree_cap=degree_cap,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("t", "k", "c", "threshold", "degree_cap")
+)
+def _verd_iterate_sparse(
+    graph: Graph,
+    sources: jax.Array,
+    *,
+    t: int,
+    k: int,
+    c: float,
+    threshold: float,
+    degree_cap: int,
+) -> Tuple[frontier.SparseFrontier, frontier.SparseFrontier]:
+    q = sources.shape[0]
+    f = frontier.from_sources(sources, graph.n)
+    s_vals, s_idxs = [], []
+    for _ in range(t):
+        s_vals.append(c * f.values)
+        s_idxs.append(f.indices)
+        cv, ci = sparse_push_candidates(
+            graph, f.values, f.indices, sources, c=c, degree_cap=degree_cap
+        )
+        f = frontier.compact(
+            cv, ci, min(k, cv.shape[1]), graph.n, threshold=threshold
+        )
+    if s_vals:
+        sv = jnp.concatenate(s_vals, axis=1)
+        si = jnp.concatenate(s_idxs, axis=1)
+        s = frontier.compact(sv, si, min(sv.shape[1], graph.n), graph.n)
+    else:  # t == 0: s is empty
+        s = frontier.SparseFrontier(
+            values=jnp.zeros((q, 1), jnp.float32),
+            indices=jnp.zeros((q, 1), jnp.int32),
+            k=1, n=graph.n,
+        )
+    return s, f
+
+
+def verd_iterate_sparse(
+    graph: Graph,
+    sources: jax.Array,
+    *,
+    t: int,
+    k: int,
+    c: float = DEFAULT_C,
+    threshold: float = 0.0,
+    degree_cap: Optional[int] = None,
+) -> Tuple[frontier.SparseFrontier, frontier.SparseFrontier]:
+    """Sparse-frontier VERD: ``t`` iterations holding ``Q x K`` state.
+
+    Per iteration: one ``col_idx`` gather + segment-sum over ``Q * K *
+    degree_cap`` candidate edges instead of the dense ``[Q, n] @ A`` — the
+    win is ``O(Q * K * deg)`` vs ``O(Q * m)`` work and ``Q*K*8`` vs ``Q*n*8``
+    bytes of state.  Exact (equal to :func:`verd_iterate` densified) whenever
+    ``k`` covers the frontier support and ``degree_cap`` covers the max
+    out-degree; truncation drops at most the compacted-away mass per
+    iteration.
+
+    Returns ``(s, f)`` as :class:`~repro.core.frontier.SparseFrontier`; the
+    accumulated ``s`` keeps its natural (un-truncated) width ``<= 1 +
+    (t-1)*k``.
+    """
+    if degree_cap is None:
+        degree_cap = resolve_degree_cap(graph)
+    return _verd_iterate_sparse(
+        graph, sources, t=t, k=k, c=c, threshold=threshold,
+        degree_cap=degree_cap,
+    )
+
+
+def gather_combine_candidates(
+    sv: jax.Array,
+    si: jax.Array,
+    fv: jax.Array,
+    fi: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Array-level sparse combine shared by the core op and the Pallas
+    kernel body: gather the touched index rows, scale by frontier mass,
+    stack with the ``s`` entries.  Uncompacted width ``S + K*L``."""
+    q = fv.shape[0]
+    iv = jnp.take(vals, fi, axis=0)                    # [Q, K, L]
+    ii = jnp.take(idx, fi, axis=0)                     # [Q, K, L]
+    contrib = fv[..., None] * iv
+    cand_v = jnp.concatenate([sv, contrib.reshape(q, -1)], axis=1)
+    cand_i = jnp.concatenate([si, ii.reshape(q, -1)], axis=1)
+    return cand_v, cand_i
+
+
+def combine_with_index_sparse(
+    s: frontier.SparseFrontier,
+    f: frontier.SparseFrontier,
+    index: PPRIndex,
+    *,
+    out_k: Optional[int] = None,
+) -> frontier.SparseFrontier:
+    """Algorithm 4 line 10 on sparse state: contract ``f[Q, K]`` against only
+    the ``K`` touched index rows.
+
+    Gathers ``index`` rows at ``f.indices`` (``[Q, K, L]``), scales by the
+    frontier mass, merges with the ``s`` entries, and compacts to ``out_k``
+    (default: exact, no truncation).  Work is ``O(Q * K * L)`` — independent
+    of ``n``.
+    """
+    cand_v, cand_i = gather_combine_candidates(
+        s.values, s.indices, f.values, f.indices,
+        index.values, index.indices,
+    )
+    # compact pads narrow rows, so a requested out_k is always honored
+    if out_k is None:
+        out_k = min(cand_v.shape[1], index.n)
+    return frontier.compact(cand_v, cand_i, out_k, index.n)
+
+
+def verd_query_sparse(
+    graph: Graph,
+    sources: jax.Array,
+    index: Optional[PPRIndex],
+    *,
+    t: int,
+    k: int,
+    c: float = DEFAULT_C,
+    threshold: float = 0.0,
+    out_k: Optional[int] = None,
+    degree_cap: Optional[int] = None,
+) -> frontier.SparseFrontier:
+    """Full online query on the sparse path; answers come back as a
+    :class:`~repro.core.frontier.SparseFrontier` of width ``out_k`` with
+    entries sorted descending — exactly the served top-k shape, no ``[Q, n]``
+    materialization anywhere."""
+    s, f = verd_iterate_sparse(
+        graph, sources, t=t, k=k, c=c, threshold=threshold,
+        degree_cap=degree_cap,
+    )
+    if index is None:
+        if out_k is not None:
+            return frontier.compact(s.values, s.indices, out_k, graph.n)
+        return s
+    return combine_with_index_sparse(s, f, index, out_k=out_k)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: sparse-frontier gather-push + top-K compaction.
+
+One VERD iteration on a fixed-width sparse frontier (``values f32[Q, K]`` +
+``indices int32[Q, K]``), fused per query tile:
+
+    1. gather: each frontier slot reads up to ``degree_cap`` out-edges of its
+       vertex from the CSR arrays (``row_ptr``/``col_idx``/``out_deg``) and
+       emits one weighted candidate per edge; dangling mass returns to the
+       query's source,
+    2. compact: duplicate destination hits are merged (sort + run-sum, see
+       :func:`repro.core.frontier.merge_duplicates`) and the row is re-packed
+       to the top-``k_out`` entries.
+
+The grid is 1-D over query tiles; each step touches ``q_tile * (K *
+degree_cap + 1)`` candidates — never a ``[Q, n]`` slab.  The CSR arrays ride
+along as whole-array blocks: on a real TPU those belong in HBM with
+scalar-prefetched row offsets and per-tile DMA (see
+``PrefetchScalarGridSpec``); in this container the kernel is validated in
+interpret mode, which is also the fallback registered in ``kernels.ops``.
+
+VMEM per step: q_tile*K*8 (frontier) + q_tile*K*degree_cap*8 (candidates)
++ q_tile*k_out*8 (out) bytes, plus the resident CSR blocks.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import frontier as frontier_mod
+from repro.core import verd as verd_mod
+
+
+def _frontier_push_kernel(
+    fv_ref, fi_ref, src_ref, row_ptr_ref, out_deg_ref, col_idx_ref,
+    ov_ref, oi_ref, *, c: float, degree_cap: int, threshold: float,
+):
+    # same array-level math as the jnp core op — single source of truth
+    cand_v, cand_i = verd_mod.gather_push_candidates(
+        fv_ref[...], fi_ref[...], src_ref[...],
+        row_ptr_ref[...], out_deg_ref[...], col_idx_ref[...],
+        c=c, degree_cap=degree_cap,
+    )
+    ov, oi = frontier_mod.compact_arrays(
+        cand_v, cand_i, ov_ref.shape[1], threshold=threshold
+    )
+    ov_ref[...] = ov
+    oi_ref[...] = oi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("c", "degree_cap", "threshold", "k_out", "q_tile",
+                     "interpret"),
+)
+def frontier_push(
+    fv: jax.Array,
+    fi: jax.Array,
+    sources: jax.Array,
+    row_ptr: jax.Array,
+    out_deg: jax.Array,
+    col_idx: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+    k_out: int,
+    threshold: float = 0.0,
+    q_tile: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse push; Q must be a multiple of ``q_tile`` (see
+    ``ops.frontier_push`` for the padding wrapper)."""
+    q, k = fv.shape
+    assert fi.shape == (q, k) and sources.shape[0] == q
+    assert q % q_tile == 0, (q, q_tile)
+    n1 = row_ptr.shape[0]
+    n = out_deg.shape[0]
+    m = col_idx.shape[0]
+    src2d = sources.reshape(q, 1).astype(jnp.int32)
+    grid = (q // q_tile,)
+    kernel = functools.partial(
+        _frontier_push_kernel, c=c, degree_cap=degree_cap,
+        threshold=threshold,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((n1,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k_out), jnp.float32),
+            jax.ShapeDtypeStruct((q, k_out), jnp.int32),
+        ],
+        interpret=interpret,
+    )(fv, fi, src2d, row_ptr, out_deg, col_idx)

@@ -21,6 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core import frontier as frontier_mod
+from repro.core import verd as verd_mod
+
 
 def _index_combine_kernel(s_ref, f_ref, vals_ref, idx_ref, o_ref):
     vj = pl.program_id(1)
@@ -78,3 +81,70 @@ def index_combine(
         out_shape=jax.ShapeDtypeStruct((q, n), s.dtype),
         interpret=interpret,
     )(s, f, vals, idx)
+
+
+# ---------------------------------------------------------------------------
+# Sparse-frontier variant: contracts f[Q, K] against only the K touched index
+# rows and emits fixed-width top-k_out answers — no [q_tile, n] slab at all.
+# ---------------------------------------------------------------------------
+
+def _index_combine_sparse_kernel(
+    sv_ref, si_ref, fv_ref, fi_ref, vals_ref, idx_ref, ov_ref, oi_ref
+):
+    # same array-level math as the jnp core op — single source of truth
+    cand_v, cand_i = verd_mod.gather_combine_candidates(
+        sv_ref[...], si_ref[...], fv_ref[...], fi_ref[...],
+        vals_ref[...], idx_ref[...],
+    )
+    ov, oi = frontier_mod.compact_arrays(cand_v, cand_i, ov_ref.shape[1])
+    ov_ref[...] = ov
+    oi_ref[...] = oi
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k_out", "q_tile", "interpret")
+)
+def index_combine_sparse(
+    sv: jax.Array,
+    si: jax.Array,
+    fv: jax.Array,
+    fi: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    *,
+    k_out: int,
+    q_tile: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """Fused sparse combine + top-k; Q must be a multiple of ``q_tile``
+    (``ops.index_combine_sparse`` pads).  The index rides along as
+    whole-array blocks — on a real TPU the ``K`` touched rows would be
+    DMA-gathered from HBM instead; interpret mode is the validated path."""
+    q, k = fv.shape
+    s_w = sv.shape[1]
+    n, l = vals.shape
+    assert si.shape == (q, s_w) and fi.shape == (q, k)
+    assert idx.shape == (n, l)
+    assert q % q_tile == 0, (q, q_tile)
+    grid = (q // q_tile,)
+    return pl.pallas_call(
+        _index_combine_sparse_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, s_w), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, s_w), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((n, l), lambda i: (0, 0)),
+            pl.BlockSpec((n, l), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, k_out), jnp.float32),
+            jax.ShapeDtypeStruct((q, k_out), jnp.int32),
+        ],
+        interpret=interpret,
+    )(sv, si, fv, fi, vals, idx)

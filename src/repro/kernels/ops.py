@@ -5,6 +5,9 @@ expose drop-in replacements for the pure-jnp core ops:
 
 * :func:`ell_push`      <-> :func:`repro.graphs.formats.ell_pull`
 * :func:`index_combine` <-> :func:`repro.core.verd.combine_with_index`
+* :func:`frontier_push` <-> :func:`repro.core.verd.sparse_push_candidates`
+  (+ :func:`repro.core.frontier.compact`)
+* :func:`index_combine_sparse` <-> :func:`repro.core.verd.combine_with_index_sparse`
 * :func:`embedding_bag` <-> :func:`repro.models.recsys.embedding` bag path
 
 ``interpret=True`` (default here) runs the kernel bodies in Python on CPU —
@@ -18,9 +21,14 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.core import frontier as _frontier
+from repro.core import verd as _verd
+from repro.core.frontier import SparseFrontier
+from repro.core.graph import Graph
 from repro.graphs.formats import EllChunks
 from repro.kernels import ell_spmm as _ell
 from repro.kernels import embedding_bag as _bag
+from repro.kernels import frontier_push as _push
 from repro.kernels import index_combine as _comb
 
 
@@ -86,6 +94,71 @@ def index_combine(
         interpret=interpret,
     )
     return out[:q]
+
+
+def frontier_push(
+    f: SparseFrontier,
+    graph: Graph,
+    sources: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+    k_out: int,
+    threshold: float = 0.0,
+    q_tile: int = 8,
+    interpret: bool = True,
+) -> SparseFrontier:
+    """One fused sparse VERD push via the Pallas kernel; pads Q to the tile.
+
+    Drop-in for ``verd.sparse_push_candidates`` + ``frontier.compact``:
+    returns the new frontier, compacted to ``k_out``.
+    """
+    if graph.m == 0:  # edgeless graph: nothing to gather, pure jnp path
+        cv, ci = _verd.sparse_push_candidates(
+            graph, f.values, f.indices, sources, c=c, degree_cap=degree_cap
+        )
+        return _frontier.compact(
+            cv, ci, k_out, graph.n, threshold=threshold
+        )
+    q = f.values.shape[0]
+    fv = _pad_to(f.values, 0, q_tile)
+    fi = _pad_to(f.indices, 0, q_tile)
+    src = _pad_to(sources.astype(jnp.int32), 0, q_tile)
+    ov, oi = _push.frontier_push(
+        fv, fi, src, graph.row_ptr, graph.out_deg, graph.col_idx,
+        c=c, degree_cap=degree_cap, k_out=k_out, threshold=threshold,
+        q_tile=q_tile, interpret=interpret,
+    )
+    return SparseFrontier(
+        values=ov[:q], indices=oi[:q], k=k_out, n=graph.n
+    )
+
+
+def index_combine_sparse(
+    s: SparseFrontier,
+    f: SparseFrontier,
+    vals: jax.Array,
+    idx: jax.Array,
+    *,
+    k_out: int,
+    q_tile: int = 8,
+    interpret: bool = True,
+) -> SparseFrontier:
+    """Fused sparse ``s + f @ P_hat`` + top-k via the Pallas kernel; pads Q.
+
+    Drop-in for ``verd.combine_with_index_sparse`` at ``out_k=k_out``.
+    """
+    q = f.values.shape[0]
+    sv = _pad_to(s.values, 0, q_tile)
+    si = _pad_to(s.indices, 0, q_tile)
+    fv = _pad_to(f.values, 0, q_tile)
+    fi = _pad_to(f.indices, 0, q_tile)
+    ov, oi = _comb.index_combine_sparse(
+        sv, si, fv, fi, vals, idx, k_out=k_out, q_tile=q_tile,
+        interpret=interpret,
+    )
+    n = vals.shape[0]
+    return SparseFrontier(values=ov[:q], indices=oi[:q], k=k_out, n=n)
 
 
 @functools.partial(

@@ -24,6 +24,74 @@ def index_combine_ref(
     return s.at[:, idx.reshape(-1)].add(contrib.reshape(q, nv * l))
 
 
+def frontier_push_ref(
+    fv: jax.Array,
+    fi: jax.Array,
+    sources: jax.Array,
+    row_ptr: jax.Array,
+    out_deg: jax.Array,
+    col_idx: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+    k_out: int,
+    threshold: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Dense-scatter oracle for the sparse gather-push kernel.
+
+    Densifies the frontier, runs one exact ``(1-c) * f @ A`` push (dangling
+    mass back to each source), re-sparsifies to top-``k_out``.  Only valid
+    when ``degree_cap`` covers the max out-degree (the kernel's exact mode).
+    """
+    from repro.core import frontier as F
+    from repro.core.graph import Graph, transition_with_dangling
+
+    n = out_deg.shape[0]
+    g = Graph(
+        row_ptr=row_ptr, col_idx=col_idx,
+        src=jnp.repeat(
+            jnp.arange(n, dtype=jnp.int32), jnp.diff(row_ptr),
+            total_repeat_length=col_idx.shape[0],
+        ),
+        out_deg=out_deg, n=n, m=int(col_idx.shape[0]),
+    )
+    dense = F.SparseFrontier(
+        values=fv, indices=fi, k=fv.shape[1], n=n
+    ).densify()
+    pushed = (1.0 - c) * transition_with_dangling(g, dense, sources)
+    if threshold > 0.0:
+        pushed = jnp.where(pushed >= threshold, pushed, 0.0)
+    sf = F.from_dense(pushed, k_out)
+    v, i = F.topk_compact(sf.values, sf.indices, k_out)
+    return v, i
+
+
+def index_combine_sparse_ref(
+    sv: jax.Array,
+    si: jax.Array,
+    fv: jax.Array,
+    fi: jax.Array,
+    vals: jax.Array,
+    idx: jax.Array,
+    *,
+    k_out: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Dense oracle: densify s and f, run ``index_combine_ref``, top-k."""
+    from repro.core import frontier as F
+
+    n = vals.shape[0]
+    q = fv.shape[0]
+    s_dense = F.SparseFrontier(
+        values=sv, indices=si, k=sv.shape[1], n=n
+    ).densify()
+    f_dense = F.SparseFrontier(
+        values=fv, indices=fi, k=fv.shape[1], n=n
+    ).densify()
+    out = index_combine_ref(s_dense, f_dense, vals, idx)
+    sf = F.from_dense(out, min(k_out, n))
+    return F.topk_compact(sf.values, sf.indices, k_out)
+
+
 def embedding_bag_ref(
     ids: jax.Array, mask: jax.Array, table: jax.Array
 ) -> jax.Array:

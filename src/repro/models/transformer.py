@@ -332,16 +332,12 @@ def _moe_ffn_shardmap(cfg: TransformerConfig, p, x: jax.Array) -> Tuple[jax.Arra
         P(ash.model, None, ash.fsdp_axis),        # w_down
     )
     out_specs = (P(tok_axes, None), P())
-    try:
-        fn = jax.shard_map(
-            local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_vma=False,
-        )
-    except TypeError:  # older arg name
-        fn = jax.shard_map(
-            local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            check_rep=False,
-        )
+    from repro.compat import shard_map
+
+    fn = shard_map(
+        local, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
     return fn(x, p["router"]["w"], p["w_gate"], p["w_up"], p["w_down"])
 
 

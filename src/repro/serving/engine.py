@@ -46,6 +46,7 @@ class PPRService:
         self.clock = clock or time.monotonic
         self.stats: Dict[str, float] = dict(
             served=0, batches=0, total_latency=0.0, max_latency=0.0,
+            pad_rows=0,
         )
 
     def submit(self, vertex: int) -> int:
@@ -56,16 +57,20 @@ class PPRService:
         if not (self.buffer.ready() or (force and len(self.buffer))):
             return []
         requests, padded = self.buffer.drain()
+        n_real = len(requests)
         verts = np.array([r.vertex for r in requests], dtype=np.int32)
-        if padded > len(verts):  # pad with repeats to a stable jit shape
+        if padded > n_real:  # pad with vertex 0 to a stable jit shape
             verts = np.concatenate(
-                [verts, np.zeros(padded - len(verts), np.int32)]
+                [verts, np.zeros(padded - n_real, np.int32)]
             )
         vals, idx = self.engine.query_topk(jnp.asarray(verts))
         vals.block_until_ready()
         now = self.clock()
-        vals = np.asarray(vals)
-        idx = np.asarray(idx)
+        # pad rows never reach answers or stats: slice them off on device so
+        # only the real rows' top-k is materialized on the host
+        vals = np.asarray(vals[:n_real])
+        idx = np.asarray(idx[:n_real])
+        self.stats["pad_rows"] += padded - n_real
         out = []
         for i, r in enumerate(requests):
             lat = now - r.arrival
@@ -90,4 +95,5 @@ class PPRService:
         s["wall_s"] = wall
         s["qps"] = len(answers) / max(wall, 1e-9)
         s["mean_latency"] = s["total_latency"] / max(s["served"], 1)
+        s["pad_fraction"] = s["pad_rows"] / max(s["served"] + s["pad_rows"], 1)
         return answers, s

@@ -10,6 +10,8 @@ import numpy as np
 import pytest
 
 from repro.configs import REGISTRY, get_arch
+
+pytestmark = pytest.mark.slow  # one real train step per (arch x shape) cell
 from repro.launch import steps as steps_mod
 from repro.training import train_loop
 

@@ -7,6 +7,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # spawns a 4-device subprocess
+
 
 def test_distributed_engine_matches_dense():
     env = dict(os.environ)

@@ -11,6 +11,8 @@ from repro.models import transformer as T
 from repro.models.attention import chunked_attention, decode_attention
 from repro.models.recsys import dcn, dlrm, mind, sasrec
 
+pytestmark = pytest.mark.slow  # whole-model steps dominate suite runtime
+
 
 @pytest.fixture(scope="module")
 def small_cfg():
