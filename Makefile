@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast bench bench-smoke
+.PHONY: test test-fast test-parity bench bench-smoke
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
@@ -12,6 +12,11 @@ test:
 # quick subset: skips tests marked `slow` (see pytest.ini)
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+# cross-path parity: distributed-sparse vs single-device-sparse vs dense
+# oracle, incl. the slow 4-shard subprocess half (docs/query_path.md)
+test-parity:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_parity.py
 
 # full paper-table benchmark sweep
 bench:

@@ -1,5 +1,6 @@
 """Paper Table 3 + Figure 6: online query latency vs batch size and method,
-plus the dense-vs-sparse frontier-path sweep (docs/query_path.md).
+plus the dense-vs-sparse frontier-path sweep and the distributed exchange
+wire-byte report (docs/query_path.md).
 
 Methods: PI, online MCFP, FPPR (direct index lookup), PowerWalk at
 R in {0, 10, 100}.  Batch sizes scaled to the CPU-tier graph.
@@ -12,6 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import bench_graph, emit, timeit
+from repro.core.distributed_engine import (
+    DistConfig, exchange_bytes_per_iteration,
+)
 from repro.core.index import PPRIndex, build_index
 from repro.core.query import BatchQueryEngine, QueryConfig
 from repro.graphs import synthetic
@@ -56,6 +60,40 @@ def run(fast: bool = False) -> dict:
                 f"total_s={res2['seconds']:.4f};qps={res2['qps']:.1f}",
             )
     out.update(run_sparse_sweep(fast=fast))
+    out.update(run_exchange_report(fast=fast))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# distributed exchange wire bytes: dense slab vs SparseFrontier wire format
+# ---------------------------------------------------------------------------
+
+def run_exchange_report(fast: bool = False) -> dict:
+    """Per-iteration wire bytes each shard puts on the ``all_to_all``.
+
+    The headline point (n=100k, Q=256, K=512, 4 shards) is the acceptance
+    gate of the sparse-exchange refactor: >= 5x fewer bytes than the dense
+    slab.  Analytic from the exchange shapes (exact — the buffers are
+    fixed-width), so the report also covers pod-scale configs this
+    container cannot run.
+    """
+    points = [(100_000, 256, 512, 4)]
+    if not fast:
+        points += [(1_000_000, 4096, 512, 16), (41_652_230, 4096, 667, 64)]
+    out = {}
+    for n, q, k, ep in points:
+        cfg = DistConfig(
+            n=((n + ep - 1) // ep) * ep, ep=ep, q_tile=q,
+            frontier_k=k, wire_k=k, degree_cap=1,
+        )
+        b = exchange_bytes_per_iteration(cfg)
+        out[("exchange", n, q, k, ep)] = b
+        emit(
+            f"exchange_bytes_n{n}_q{q}_k{k}_ep{ep}",
+            b["sparse"],
+            f"dense_B={b['dense']:.3e};sparse_B={b['sparse']:.3e};"
+            f"reduction={b['reduction']:.1f}x",
+        )
     return out
 
 

@@ -13,11 +13,20 @@ query-tiled engine:
   received partials.  This is PowerGraph's scatter phase turned into a
   single bulk collective — exactly the paper's "small packets multiplexed
   into large payloads", now in hardware.
-* **Frontier compression** (beyond-paper, ``compress_k``): before the
-  exchange, each destination bucket keeps only its top-k entries per query
-  (the paper's epsilon-sparsification made fixed-shape).  Wire bytes drop
-  from O(Q x N) to O(Q x shards x k); accuracy cost is the truncated tail,
-  measured in tests.
+* **Sparse-frontier exchange** (default, ``exchange="sparse"``): the wire
+  format is the fixed-width :class:`~repro.core.frontier.SparseFrontier`
+  idiom — each shard holds its local ``[Q, K]`` frontier slice, pushes it
+  through its local CSR rows (ELL-style hub splitting keeps the gather
+  width ``<= hub_split_degree``), buckets candidates by destination owner
+  as per-owner top-``wire_k`` ``(values, local-index)`` pairs
+  (:func:`repro.core.frontier.bucket_by_owner`), and one ``all_to_all``
+  moves O(Q x shards x wire_k) bytes per iteration instead of the dense
+  O(Q x N) slab.  Received partials are dedup-merged + re-compacted with
+  the same ``frontier.py`` machinery as the single-device sparse path, so
+  the two paths agree to <= 1e-5 L1 when the widths cover the frontier
+  support (``tests/test_parity.py``).  The legacy dense slab exchange is
+  kept under ``exchange="dense"`` as the oracle; its ``compress_k`` knob
+  is deprecated (subsumed by ``wire_k``).
 * **MCFP walk step**: walk cursors shard over the data axes (embarrassing
   parallelism over sources, as in the paper); every (data, model) shard
   scatters visits of its walks that land in its vertex interval — visit
@@ -33,6 +42,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -41,6 +51,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
+from repro.core import frontier as frontier_mod
+from repro.core import verd as verd_mod
 from repro.core.graph import Graph
 from repro.core.walks import DEFAULT_C
 
@@ -55,15 +67,62 @@ class DistConfig:
     t_iterations: int = 2
     index_l: int = 667
     top_k: int = 200
-    compress_k: int = 0         # 0 = dense exchange (paper-faithful bulk)
+    exchange: str = "sparse"    # sparse (SparseFrontier wire) | dense (oracle)
+    frontier_k: int = 0         # per-shard local frontier width (0 = derive)
+    wire_k: int = 0             # per-owner exchange width (0 = frontier_k)
+    combine_wire_k: int = 0     # index-combine exchange width (0 = derive)
+    degree_cap: int = 0         # max out-degree; required for sparse exchange
+    hub_split_degree: int = 0   # ELL row-split threshold for the sparse push
+    compress_k: int = 0         # DEPRECATED: top-k'd *dense* exchange; use
+                                # exchange="sparse" + wire_k instead
     edge_chunk: int = 1 << 22   # local edge-scan chunk
     wire_dtype: Any = jnp.float32   # bf16 halves exchange buffers + bytes
     model_axis: str = "model"
     batch_axes: Tuple[str, ...] = ("data",)
 
+    def __post_init__(self):
+        if self.exchange not in ("sparse", "dense"):
+            raise ValueError(f"unknown exchange {self.exchange!r}")
+        if self.compress_k:
+            warnings.warn(
+                "DistConfig.compress_k is deprecated: set wire_k instead. "
+                "On the default exchange='sparse' path compress_k is only "
+                "honored as the wire_k fallback when wire_k is unset; on "
+                "the legacy exchange='dense' oracle path it still selects "
+                "the compressed slab exchange.",
+                DeprecationWarning,
+                stacklevel=2,
+            )
+
     @property
     def n_shard(self) -> int:
         return self.n // self.ep
+
+    @property
+    def resolved_frontier_k(self) -> int:
+        """Local frontier width K (same auto floor as the engine selector)."""
+        from repro.core.query import auto_frontier_floor
+
+        if self.frontier_k > 0:
+            return min(self.frontier_k, self.n)
+        return min(self.n, auto_frontier_floor(self.top_k))
+
+    @property
+    def resolved_wire_k(self) -> int:
+        """Per-owner exchange width; ``n_shard`` always fully covers (an
+        owner sees at most ``n_shard`` distinct columns after the merge)."""
+        k = self.wire_k if self.wire_k > 0 else (
+            self.compress_k if self.compress_k > 0
+            else self.resolved_frontier_k
+        )
+        return min(k, self.n_shard)
+
+    @property
+    def resolved_combine_wire_k(self) -> int:
+        k = self.combine_wire_k if self.combine_wire_k > 0 else max(
+            self.resolved_wire_k, self.top_k
+        )
+        return min(k, self.n_shard)
 
 
 @jax.tree_util.register_dataclass
@@ -73,7 +132,10 @@ class ShardedGraph:
 
     row_ptr: int32[ep, n_shard + 1]   local rows (offsets into col_idx row)
     col_idx: int32[ep, m_shard]       global destination ids (padded)
-    edge_w:  f32[ep, m_shard]         1/out_deg(src), 0 on padding
+    edge_w:  f32[ep, m_shard]         1/out_deg(src), 0 on padding — only
+                                      materialized for exchange="dense";
+                                      the sparse step re-derives 1/deg from
+                                      row lengths, so it gets a [ep, 1] stub
     dangling: f32[ep, n_shard]        1.0 where the local vertex is dangling
     """
 
@@ -85,10 +147,11 @@ class ShardedGraph:
     @staticmethod
     def specs(cfg: DistConfig, m_shard: int) -> "ShardedGraph":
         sds = jax.ShapeDtypeStruct
+        m_w = m_shard if cfg.exchange == "dense" else 1
         return ShardedGraph(
             row_ptr=sds((cfg.ep, cfg.n_shard + 1), jnp.int32),
             col_idx=sds((cfg.ep, m_shard), jnp.int32),
-            edge_w=sds((cfg.ep, m_shard), jnp.float32),
+            edge_w=sds((cfg.ep, m_w), jnp.float32),
             dangling=sds((cfg.ep, cfg.n_shard), jnp.float32),
         )
 
@@ -118,8 +181,11 @@ def build_sharded_graph(graph: Graph, cfg: DistConfig) -> ShardedGraph:
                 [local_rp,
                  np.full(ns + 1 - len(local_rp), local_rp[-1], np.int32)])
         lc = col[lo_e:hi_e]
-        lw = np.repeat(inv[lo_v:hi_v],
-                       np.diff(row_ptr[lo_v:hi_v + 1]).astype(np.int64))
+        if cfg.exchange == "dense":
+            lw = np.repeat(inv[lo_v:hi_v],
+                           np.diff(row_ptr[lo_v:hi_v + 1]).astype(np.int64))
+        else:
+            lw = np.zeros(0, np.float32)
         dang = np.zeros(ns, np.float32)
         real = min(hi_v, graph.n) - lo_v
         if real > 0:
@@ -129,7 +195,10 @@ def build_sharded_graph(graph: Graph, cfg: DistConfig) -> ShardedGraph:
     m_shard = max(m_shard, 1)
     rp = np.stack([s[0] for s in slabs])
     ci = np.stack([np.pad(s[1], (0, m_shard - len(s[1]))) for s in slabs])
-    ew = np.stack([np.pad(s[2], (0, m_shard - len(s[2]))) for s in slabs])
+    if cfg.exchange == "dense":
+        ew = np.stack([np.pad(s[2], (0, m_shard - len(s[2]))) for s in slabs])
+    else:  # sparse step re-derives 1/deg; skip the O(m) f32 slab entirely
+        ew = np.zeros((cfg.ep, 1), np.float32)
     dg = np.stack([s[3] for s in slabs])
     return ShardedGraph(
         row_ptr=jnp.asarray(rp), col_idx=jnp.asarray(ci),
@@ -140,18 +209,6 @@ def build_sharded_graph(graph: Graph, cfg: DistConfig) -> ShardedGraph:
 # ---------------------------------------------------------------------------
 # one VERD iteration, per shard
 # ---------------------------------------------------------------------------
-
-def _expand_local_sources(row_ptr, f_local, edge_count):
-    """Per-edge source value: f_local[q, src(e)] for local CSR order.
-
-    row_ptr: [ns+1]; f_local: [qt, ns].  Edge e belongs to the local row r
-    with row_ptr[r] <= e < row_ptr[r+1]; recover r via searchsorted.
-    """
-    e_ids = jnp.arange(edge_count, dtype=jnp.int32)
-    src_row = jnp.searchsorted(row_ptr, e_ids, side="right") - 1
-    src_row = jnp.clip(src_row, 0, f_local.shape[1] - 1)
-    return jnp.take(f_local, src_row, axis=1)  # [qt, edges]
-
 
 def _push_local(cfg: DistConfig, g_row_ptr, g_col, g_w, f_local):
     """Local push: [qt, ns] -> contributions [qt, ep, ns] by dest owner."""
@@ -197,7 +254,17 @@ def make_verd_tile_step(cfg: DistConfig, mesh: Mesh):
 
     One full query tile: T iterations of shared decomposition + index
     combine + distributed top-k.  ``index_vals/idx``: [ep, n_shard, L].
+    Dispatches on ``cfg.exchange``: the default ``"sparse"`` wire format
+    exchanges per-owner top-``wire_k`` (value, index) pairs; ``"dense"``
+    keeps the legacy full-slab exchange as the oracle.
     """
+    if cfg.exchange == "sparse":
+        return _make_verd_tile_step_sparse(cfg, mesh)
+    return _make_verd_tile_step_dense(cfg, mesh)
+
+
+def _make_verd_tile_step_dense(cfg: DistConfig, mesh: Mesh):
+    """Legacy dense-slab exchange: O(Q x N) wire bytes per iteration."""
     model = cfg.model_axis
 
     def local_fn(rp, col, w, dang, sources, ivals, iidx):
@@ -304,6 +371,140 @@ def make_verd_tile_step(cfg: DistConfig, mesh: Mesh):
                   sources, index_vals, index_idx)
 
     return step
+
+
+def _make_verd_tile_step_sparse(cfg: DistConfig, mesh: Mesh):
+    """SparseFrontier wire format: O(Q x shards x wire_k) bytes/iteration.
+
+    Per shard, per iteration: gather-push the local ``[Q, K]`` frontier
+    slice through the local CSR rows (hub rows split ELL-style so no gather
+    axis exceeds ``hub_split_degree``), bucket candidates by destination
+    owner into per-owner top-``wire_k`` (value, local-index) pairs, one
+    ``all_to_all``, then dedup-merge + re-compact the received partials back
+    to the ``[Q, K]`` slice.  The accumulated ``s`` and the index-combine
+    contributions stay sparse end to end; only the final per-shard top-k is
+    gathered.
+    """
+    if cfg.degree_cap <= 0:
+        raise ValueError(
+            "exchange='sparse' requires cfg.degree_cap > 0 (the max "
+            "out-degree; resolve it host-side with "
+            "repro.core.verd.resolve_degree_cap)"
+        )
+    model = cfg.model_axis
+    ns = cfg.n_shard
+    k_front = min(cfg.resolved_frontier_k, ns)   # local slice: <= ns distinct
+    kw = cfg.resolved_wire_k
+    kc = cfg.resolved_combine_wire_k
+
+    def a2a(x):
+        return jax.lax.all_to_all(
+            x, model, split_axis=1, concat_axis=1, tiled=False
+        )
+
+    def local_fn(rp, col, dang, sources, ivals, iidx):
+        # no edge_w input: 1/deg weights are re-derived from the local row
+        # lengths, so the O(m) f32 slab never enters the sparse step
+        rp, col, dang = rp[0], col[0], dang[0]
+        ivals, iidx = ivals[0], iidx[0]
+        qt = sources.shape[0]
+        me = jax.lax.axis_index(model)
+        lo = me * ns
+        local_deg = rp[1:] - rp[:-1]                      # int32 [ns]
+
+        # local slice of one-hot(sources), in sparse (width-1) form
+        hit0 = ((sources >= lo) & (sources < lo + ns)).astype(jnp.float32)
+        src_local = jnp.clip(sources - lo, 0, ns - 1).astype(jnp.int32)
+        fv = hit0[:, None]
+        fi = src_local[:, None]
+
+        s_vals, s_idxs = [], []
+        for _ in range(cfg.t_iterations):
+            s_vals.append(cfg.c * fv)
+            s_idxs.append(fi)
+            # dangling mass returns to each query's source (Section 2.1)
+            dm = jax.lax.psum(
+                jnp.sum(fv * jnp.take(dang, fi), axis=1), model
+            )
+            # local gather push; destination ids are global columns
+            push_v, nbrs = verd_mod.gather_push_edges(
+                fv, fi, jnp.take(rp, fi), jnp.take(local_deg, fi), col,
+                c=cfg.c, degree_cap=cfg.degree_cap,
+                hub_split_degree=cfg.hub_split_degree,
+            )
+            # per-owner top-k buckets -> one all_to_all of fixed-width pairs
+            bv, bi = frontier_mod.bucket_by_owner(
+                push_v, nbrs, cfg.ep, ns, kw
+            )
+            bv = a2a(bv.astype(cfg.wire_dtype)).astype(jnp.float32)
+            bi = a2a(bi)
+            cand_v = jnp.concatenate(
+                [bv.reshape(qt, -1), ((1.0 - cfg.c) * dm * hit0)[:, None]],
+                axis=1,
+            )
+            cand_i = jnp.concatenate(
+                [bi.reshape(qt, -1), src_local[:, None]], axis=1
+            )
+            fv, fi = frontier_mod.compact_arrays(cand_v, cand_i, k_front)
+
+        # index combine on the sparse slice: gather only the K touched local
+        # rows, bucket the (global-column) contributions by owner, exchange
+        # once.  ivals/iidx: [ns, L] with global column ids.
+        iv = jnp.take(ivals, fi, axis=0).astype(jnp.float32)  # [qt, K, L]
+        ii = jnp.take(iidx, fi, axis=0)
+        contrib = (fv[..., None] * iv).reshape(qt, -1)
+        cv, ci = frontier_mod.bucket_by_owner(
+            contrib, ii.reshape(qt, -1), cfg.ep, ns, kc
+        )
+        cv = a2a(cv.astype(cfg.wire_dtype)).astype(jnp.float32)
+        ci = a2a(ci)
+
+        # local p~ entries: accumulated s + received combine partials; both
+        # hold local indices, so one compaction yields the local top-k
+        p_v = jnp.concatenate(s_vals + [cv.reshape(qt, -1)], axis=1)
+        p_i = jnp.concatenate(s_idxs + [ci.reshape(qt, -1)], axis=1)
+        lv, li = frontier_mod.compact_arrays(p_v, p_i, cfg.top_k)
+        gi = (li + lo).astype(jnp.int32)
+
+        # distributed top-k: gather every shard's local top-k, re-select
+        av = jax.lax.all_gather(lv, model, axis=1, tiled=True)
+        ai = jax.lax.all_gather(gi, model, axis=1, tiled=True)
+        fv_out, sel = jax.lax.top_k(av, cfg.top_k)
+        out_idx = jnp.take_along_axis(ai, sel, axis=1)
+        return fv_out, out_idx
+
+    in_specs = (
+        P(model, None), P(model, None), P(model, None),
+        P(),                                  # sources replicated
+        P(model, None, None), P(model, None, None),
+    )
+    out_specs = (P(), P())
+    fn = shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+
+    def step(slabs: ShardedGraph, sources, index_vals, index_idx):
+        return fn(slabs.row_ptr, slabs.col_idx, slabs.dangling,
+                  sources, index_vals, index_idx)
+
+    return step
+
+
+def exchange_bytes_per_iteration(cfg: DistConfig) -> Dict[str, float]:
+    """Wire bytes one shard sends per VERD iteration, per exchange format.
+
+    ``dense``: the full ``[q_tile, n]`` slab in ``wire_dtype``.  ``sparse``:
+    ``q_tile * ep * wire_k`` (value, int32 index) pairs.  ``reduction`` is
+    dense/sparse — the headline number ``benchmarks/bench_query.py`` reports
+    (>= 5x at the acceptance point n=100k, Q=256, K=512).
+    """
+    item = jnp.dtype(cfg.wire_dtype).itemsize
+    dense = float(cfg.q_tile * cfg.n * item)
+    sparse = float(cfg.q_tile * cfg.ep * cfg.resolved_wire_k * (item + 4))
+    return dict(
+        dense=dense, sparse=sparse, reduction=dense / max(sparse, 1.0)
+    )
 
 
 # ---------------------------------------------------------------------------

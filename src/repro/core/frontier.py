@@ -156,3 +156,53 @@ def threshold_values(values: jax.Array, threshold: float) -> jax.Array:
     if threshold <= 0.0:
         return values
     return jnp.where(values >= threshold, values, 0.0)
+
+
+def bucket_by_owner(
+    values: jax.Array,
+    indices: jax.Array,
+    ep: int,
+    n_shard: int,
+    k: int,
+    *,
+    to_local: bool = True,
+) -> Tuple[jax.Array, jax.Array]:
+    """Per-(row, owner) top-``k`` buckets: the distributed wire format.
+
+    ``indices`` are global column ids in ``[0, ep * n_shard)`` partitioned
+    into ``ep`` contiguous owner intervals of width ``n_shard``.  For each
+    owner the candidates falling into its interval are dedup-merged and
+    compacted (:func:`compact_arrays`) so the bucket carries the true
+    per-owner top-``k`` — exactly what one ``all_to_all`` step exchanges.
+
+    Returns ``(vals f32[Q, ep, k], idx int32[Q, ep, k])``; with
+    ``to_local`` (default) indices are owner-local (``global - owner *
+    n_shard``), the form the receiving shard consumes directly.  Empty
+    slots are ``(0.0, 0)`` as everywhere else.
+
+    Exact whenever ``k >= n_shard`` (an owner can receive at most
+    ``n_shard`` distinct columns after the merge); a smaller ``k`` drops
+    the per-owner tail mass, bounding the drift like every other top-K
+    truncation in this module.
+    """
+    # one global merge (the expensive sort), then a cheap per-owner top-k:
+    # after the merge each column appears in at most one slot per row, so
+    # masking + topk_compact yields the same buckets as a per-owner
+    # compact_arrays without re-sorting ep times
+    values, indices = merge_duplicates(values, indices)
+    out_v, out_i = [], []
+    for owner in range(ep):
+        mask = (indices // n_shard) == owner
+        v = jnp.where(mask, values, 0.0)
+        # park masked-out slots at the owner's local vertex 0: value 0
+        # entries are the shared empty-slot convention
+        i = jnp.where(mask, indices, owner * n_shard)
+        cv, ci = topk_compact(v, i, k)
+        if to_local:
+            ci = jnp.where(cv > 0, ci - owner * n_shard, 0)
+        out_v.append(cv)
+        out_i.append(ci)
+    return (
+        jnp.stack(out_v, axis=1),
+        jnp.stack(out_i, axis=1).astype(jnp.int32),
+    )

@@ -38,6 +38,14 @@ from repro.core.walks import DEFAULT_C
 AUTO_SPARSE_MIN_N = 1 << 15
 
 
+def auto_frontier_floor(top_k: int) -> int:
+    """Minimum auto-derived sparse frontier width K: 4x the answer size
+    with an absolute floor.  Shared by the engine selector below and
+    ``DistConfig.resolved_frontier_k`` so the single-device and distributed
+    paths derive the same K at the same config (retune it here once)."""
+    return max(4 * top_k, 256)
+
+
 @dataclasses.dataclass
 class QueryConfig:
     mode: str = "powerwalk"       # powerwalk | verd | fppr | mcfp | pi
@@ -50,6 +58,8 @@ class QueryConfig:
     max_batch: int = 4096          # shared-decomposition batch size
     frontier_k: int = 0            # sparse frontier width (0 = auto-derive)
     frontier_path: str = "auto"    # dense | sparse | auto
+    hub_split_degree: int = 0      # ELL row-split width for the sparse push
+                                   # (0 = no splitting; see verd.gather_push_edges)
 
 
 class BatchQueryEngine:
@@ -95,7 +105,9 @@ class BatchQueryEngine:
             support = float(n)
         else:
             support = math.exp(log_support)
-        return min(n, max(4 * cfg.top_k, 256, int(math.ceil(support))))
+        return min(
+            n, max(auto_frontier_floor(cfg.top_k), int(math.ceil(support)))
+        )
 
     def uses_sparse_path(self) -> bool:
         """Route decision: does query_topk hold Q x K instead of Q x n?
@@ -140,6 +152,7 @@ class BatchQueryEngine:
             t=cfg.t_iterations, k=self.frontier_k, c=cfg.c,
             threshold=cfg.threshold, out_k=out_k or cfg.top_k,
             degree_cap=self.degree_cap(),
+            hub_split_degree=cfg.hub_split_degree,
         )
 
     # -- dense answers -----------------------------------------------------

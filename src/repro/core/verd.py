@@ -129,6 +129,66 @@ def resolve_degree_cap(graph: Graph) -> int:
     return max(int(jax.device_get(jnp.max(graph.out_deg))), 1)
 
 
+def resolve_hub_splits(degree_cap: int, hub_split_degree: int) -> Tuple[int, int]:
+    """ELL-style row-splitting geometry for the sparse push.
+
+    Returns ``(h, s)``: each frontier slot expands into ``s`` sub-slots of
+    gather width ``h`` (``s * h >= degree_cap``, so the split push is exact).
+    ``hub_split_degree <= 0`` (or ``>= degree_cap``) disables splitting
+    (``s == 1``, ``h == degree_cap``).
+    """
+    if hub_split_degree <= 0 or hub_split_degree >= degree_cap:
+        return degree_cap, 1
+    h = hub_split_degree
+    return h, (degree_cap + h - 1) // h
+
+
+def gather_push_edges(
+    fv: jax.Array,
+    fi: jax.Array,
+    start: jax.Array,
+    deg: jax.Array,
+    col_idx: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+    hub_split_degree: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Edge gather shared by the single-device and sharded pushes.
+
+    ``start``/``deg`` are the per-slot CSR offsets and out-degrees
+    (``[Q, K]``, already gathered by the caller — the single-device path
+    reads the global CSR, the sharded path its local slab).  With hub
+    splitting (``hub_split_degree > 0``) each frontier slot becomes ``s =
+    ceil(degree_cap / h)`` ELL-style sub-slots of gather width ``h``: a hub
+    vertex simply occupies several sub-slots (sub-slot ``j`` owns edges
+    ``[j*h, (j+1)*h)`` of its row), so no single gather axis is ever wider
+    than ``h``.  Splitting moves mass between sub-slots only — the flat
+    candidate multiset is identical to the unsplit gather (tested in
+    ``test_properties.py``).
+
+    Returns ``(push_v, nbrs)`` of width ``K * s * h``; ``nbrs`` are the
+    (clipped) ``col_idx`` destination ids, weights ``(1-c) * fv / deg``.
+    """
+    q, k = fv.shape
+    m = col_idx.shape[0]
+    h, s = resolve_hub_splits(degree_cap, hub_split_degree)
+    # [s, h] edge offsets: sub-slot j covers its row's edges [j*h, (j+1)*h)
+    eoff = (
+        jnp.arange(s, dtype=jnp.int32)[:, None] * h
+        + jnp.arange(h, dtype=jnp.int32)[None, :]
+    )
+    # cap at degree_cap too: s*h rounds up past the cap, and the truncating
+    # regime (cap < deg) must drop the same tail edges as the unsplit gather
+    budget = jnp.minimum(deg, degree_cap)
+    valid = eoff[None, None] < budget[..., None, None]    # [Q, K, s, h]
+    eidx = jnp.clip(start[..., None, None] + eoff, 0, m - 1)
+    nbrs = jnp.where(valid, jnp.take(col_idx, eidx), 0)
+    inv = 1.0 / jnp.maximum(deg[..., None, None].astype(jnp.float32), 1.0)
+    push_v = jnp.where(valid, (1.0 - c) * fv[..., None, None] * inv, 0.0)
+    return push_v.reshape(q, k * s * h), nbrs.reshape(q, k * s * h)
+
+
 def gather_push_candidates(
     fv: jax.Array,
     fi: jax.Array,
@@ -139,28 +199,21 @@ def gather_push_candidates(
     *,
     c: float,
     degree_cap: int,
+    hub_split_degree: int = 0,
 ) -> Tuple[jax.Array, jax.Array]:
     """Array-level gather push shared by the core op and the Pallas kernel
     body (``kernels/frontier_push.py``); see :func:`sparse_push_candidates`
     for semantics.  Requires ``col_idx`` non-empty."""
-    q, k = fv.shape
-    d = degree_cap
-    m = col_idx.shape[0]
     start = jnp.take(row_ptr, fi)                     # [Q, K]
     deg = jnp.take(out_deg, fi)                       # [Q, K]
-    offs = jnp.arange(d, dtype=jnp.int32)
-    valid = offs[None, None, :] < deg[..., None]      # [Q, K, D]
-    eidx = jnp.clip(start[..., None] + offs, 0, m - 1)
-    nbrs = jnp.where(valid, jnp.take(col_idx, eidx), 0)
-    inv = 1.0 / jnp.maximum(deg[..., None].astype(jnp.float32), 1.0)
-    push_v = jnp.where(valid, (1.0 - c) * fv[..., None] * inv, 0.0)
-    dm = jnp.sum(jnp.where(deg == 0, fv, 0.0), axis=1)  # dangling mass [Q]
-    cand_v = jnp.concatenate(
-        [push_v.reshape(q, k * d), (1.0 - c) * dm[:, None]], axis=1
+    push_v, nbrs = gather_push_edges(
+        fv, fi, start, deg, col_idx,
+        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
+    dm = jnp.sum(jnp.where(deg == 0, fv, 0.0), axis=1)  # dangling mass [Q]
+    cand_v = jnp.concatenate([push_v, (1.0 - c) * dm[:, None]], axis=1)
     cand_i = jnp.concatenate(
-        [nbrs.reshape(q, k * d), sources.reshape(-1, 1).astype(jnp.int32)],
-        axis=1,
+        [nbrs, sources.reshape(-1, 1).astype(jnp.int32)], axis=1
     )
     return cand_v, cand_i
 
@@ -173,18 +226,22 @@ def sparse_push_candidates(
     *,
     c: float = DEFAULT_C,
     degree_cap: int,
+    hub_split_degree: int = 0,
 ) -> Tuple[jax.Array, jax.Array]:
     """One VERD push ``(1-c) * f @ A`` in sparse form, uncompacted.
 
     For each frontier slot ``(q, j)`` holding mass ``fv`` at vertex ``fi``,
     gathers up to ``degree_cap`` out-edges from CSR and emits one candidate
     per edge; dangling mass returns to each query's source (last slot).
-    Returns ``(cand_v, cand_i)`` of width ``K * degree_cap + 1`` — callers
+    Returns ``(cand_v, cand_i)`` of width ``K * degree_cap + 1`` (``K * s *
+    h + 1`` with hub splitting, see :func:`gather_push_edges`) — callers
     dedup + top-K compact (``frontier.compact``).
 
     ``degree_cap`` below the max out-degree of any *frontier* vertex drops
     the tail edges of that vertex (mass ``fv * (deg - cap) / deg``); with
-    ``degree_cap >= max out-degree`` the push is exact.
+    ``degree_cap >= max out-degree`` the push is exact.  ``hub_split_degree``
+    changes only the gather geometry (hub rows split across sub-slots), not
+    the pushed mass.
     """
     if graph.m == 0:  # every vertex dangling: all mass returns to source
         dm = jnp.sum(fv, axis=1)
@@ -194,12 +251,15 @@ def sparse_push_candidates(
         )
     return gather_push_candidates(
         fv, fi, sources, graph.row_ptr, graph.out_deg, graph.col_idx,
-        c=c, degree_cap=degree_cap,
+        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("t", "k", "c", "threshold", "degree_cap")
+    jax.jit,
+    static_argnames=(
+        "t", "k", "c", "threshold", "degree_cap", "hub_split_degree"
+    ),
 )
 def _verd_iterate_sparse(
     graph: Graph,
@@ -210,6 +270,7 @@ def _verd_iterate_sparse(
     c: float,
     threshold: float,
     degree_cap: int,
+    hub_split_degree: int,
 ) -> Tuple[frontier.SparseFrontier, frontier.SparseFrontier]:
     q = sources.shape[0]
     f = frontier.from_sources(sources, graph.n)
@@ -218,7 +279,8 @@ def _verd_iterate_sparse(
         s_vals.append(c * f.values)
         s_idxs.append(f.indices)
         cv, ci = sparse_push_candidates(
-            graph, f.values, f.indices, sources, c=c, degree_cap=degree_cap
+            graph, f.values, f.indices, sources, c=c, degree_cap=degree_cap,
+            hub_split_degree=hub_split_degree,
         )
         f = frontier.compact(
             cv, ci, min(k, cv.shape[1]), graph.n, threshold=threshold
@@ -245,6 +307,7 @@ def verd_iterate_sparse(
     c: float = DEFAULT_C,
     threshold: float = 0.0,
     degree_cap: Optional[int] = None,
+    hub_split_degree: int = 0,
 ) -> Tuple[frontier.SparseFrontier, frontier.SparseFrontier]:
     """Sparse-frontier VERD: ``t`` iterations holding ``Q x K`` state.
 
@@ -254,7 +317,9 @@ def verd_iterate_sparse(
     bytes of state.  Exact (equal to :func:`verd_iterate` densified) whenever
     ``k`` covers the frontier support and ``degree_cap`` covers the max
     out-degree; truncation drops at most the compacted-away mass per
-    iteration.
+    iteration.  ``hub_split_degree > 0`` splits hub adjacency rows across
+    ELL-style sub-slots of width ``<= hub_split_degree`` (same result,
+    regular gather tiles — see :func:`gather_push_edges`).
 
     Returns ``(s, f)`` as :class:`~repro.core.frontier.SparseFrontier`; the
     accumulated ``s`` keeps its natural (un-truncated) width ``<= 1 +
@@ -264,7 +329,7 @@ def verd_iterate_sparse(
         degree_cap = resolve_degree_cap(graph)
     return _verd_iterate_sparse(
         graph, sources, t=t, k=k, c=c, threshold=threshold,
-        degree_cap=degree_cap,
+        degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
 
 
@@ -324,6 +389,7 @@ def verd_query_sparse(
     threshold: float = 0.0,
     out_k: Optional[int] = None,
     degree_cap: Optional[int] = None,
+    hub_split_degree: int = 0,
 ) -> frontier.SparseFrontier:
     """Full online query on the sparse path; answers come back as a
     :class:`~repro.core.frontier.SparseFrontier` of width ``out_k`` with
@@ -331,7 +397,7 @@ def verd_query_sparse(
     materialization anywhere."""
     s, f = verd_iterate_sparse(
         graph, sources, t=t, k=k, c=c, threshold=threshold,
-        degree_cap=degree_cap,
+        degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
     if index is None:
         if out_k is not None:

@@ -1,4 +1,11 @@
-"""Pallas TPU kernel: sparse-frontier gather-push + top-K compaction.
+"""Pallas TPU kernels: sparse-frontier gather-push + top-K compaction.
+
+Two kernels share the gather machinery: :func:`frontier_push` is the
+single-device fused push (gather + merge + compact), and
+:func:`sharded_frontier_push` is the distributed half-iteration (local
+gather + per-owner top-k exchange buckets) used by
+``core/distributed_engine.py``'s sparse wire format.  Both support ELL hub
+splitting (``hub_split_degree``) so no gather axis exceeds the split width.
 
 One VERD iteration on a fixed-width sparse frontier (``values f32[Q, K]`` +
 ``indices int32[Q, K]``), fused per query tile:
@@ -37,12 +44,13 @@ from repro.core import verd as verd_mod
 def _frontier_push_kernel(
     fv_ref, fi_ref, src_ref, row_ptr_ref, out_deg_ref, col_idx_ref,
     ov_ref, oi_ref, *, c: float, degree_cap: int, threshold: float,
+    hub_split_degree: int,
 ):
     # same array-level math as the jnp core op — single source of truth
     cand_v, cand_i = verd_mod.gather_push_candidates(
         fv_ref[...], fi_ref[...], src_ref[...],
         row_ptr_ref[...], out_deg_ref[...], col_idx_ref[...],
-        c=c, degree_cap=degree_cap,
+        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
     ov, oi = frontier_mod.compact_arrays(
         cand_v, cand_i, ov_ref.shape[1], threshold=threshold
@@ -54,7 +62,7 @@ def _frontier_push_kernel(
 @functools.partial(
     jax.jit,
     static_argnames=("c", "degree_cap", "threshold", "k_out", "q_tile",
-                     "interpret"),
+                     "hub_split_degree", "interpret"),
 )
 def frontier_push(
     fv: jax.Array,
@@ -69,10 +77,13 @@ def frontier_push(
     k_out: int,
     threshold: float = 0.0,
     q_tile: int = 8,
+    hub_split_degree: int = 0,
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused sparse push; Q must be a multiple of ``q_tile`` (see
-    ``ops.frontier_push`` for the padding wrapper)."""
+    ``ops.frontier_push`` for the padding wrapper).  ``hub_split_degree``
+    bounds the per-sub-slot gather width (ELL hub splitting) without
+    changing the result."""
     q, k = fv.shape
     assert fi.shape == (q, k) and sources.shape[0] == q
     assert q % q_tile == 0, (q, q_tile)
@@ -83,7 +94,7 @@ def frontier_push(
     grid = (q // q_tile,)
     kernel = functools.partial(
         _frontier_push_kernel, c=c, degree_cap=degree_cap,
-        threshold=threshold,
+        threshold=threshold, hub_split_degree=hub_split_degree,
     )
     return pl.pallas_call(
         kernel,
@@ -106,3 +117,89 @@ def frontier_push(
         ],
         interpret=interpret,
     )(fv, fi, src2d, row_ptr, out_deg, col_idx)
+
+
+# ---------------------------------------------------------------------------
+# sharded push: local gather + per-owner top-k buckets (the pre-exchange
+# compute of the distributed sparse wire format)
+# ---------------------------------------------------------------------------
+
+def _sharded_push_kernel(
+    fv_ref, fi_ref, row_ptr_ref, col_idx_ref, ov_ref, oi_ref,
+    *, c: float, degree_cap: int, hub_split_degree: int, ep: int,
+    n_shard: int,
+):
+    fv, fi = fv_ref[...], fi_ref[...]
+    rp = row_ptr_ref[...]
+    local_deg = rp[1:] - rp[:-1]
+    push_v, nbrs = verd_mod.gather_push_edges(
+        fv, fi, jnp.take(rp, fi), jnp.take(local_deg, fi), col_idx_ref[...],
+        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+    )
+    bv, bi = frontier_mod.bucket_by_owner(
+        push_v, nbrs, ep, n_shard, ov_ref.shape[2]
+    )
+    ov_ref[...] = bv
+    oi_ref[...] = bi
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("c", "degree_cap", "hub_split_degree", "ep", "n_shard",
+                     "wire_k", "q_tile", "interpret"),
+)
+def sharded_frontier_push(
+    fv: jax.Array,
+    fi: jax.Array,
+    row_ptr: jax.Array,
+    col_idx: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+    ep: int,
+    n_shard: int,
+    wire_k: int,
+    hub_split_degree: int = 0,
+    q_tile: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One shard's half-iteration of the distributed sparse exchange.
+
+    ``fv/fi f32|int32[Q, K]``: the shard's local frontier slice (indices are
+    local row ids).  ``row_ptr int32[n_shard + 1]`` / ``col_idx int32[m]``:
+    the shard's CSR slab, destination ids global.  Emits the per-owner
+    top-``wire_k`` exchange buckets ``(vals f32[Q, ep, wire_k], idx
+    int32[Q, ep, wire_k])`` with owner-local indices — exactly what
+    ``all_to_all`` puts on the wire.  Dangling mass is the caller's
+    business (it needs a cross-shard psum).  Same grid/tiling contract as
+    :func:`frontier_push`; Q must be a multiple of ``q_tile``.
+    """
+    q, k = fv.shape
+    assert fi.shape == (q, k)
+    assert q % q_tile == 0, (q, q_tile)
+    n1 = row_ptr.shape[0]
+    m = col_idx.shape[0]
+    grid = (q // q_tile,)
+    kernel = functools.partial(
+        _sharded_push_kernel, c=c, degree_cap=degree_cap,
+        hub_split_degree=hub_split_degree, ep=ep, n_shard=n_shard,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((n1,), lambda i: (0,)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, ep, wire_k), lambda i: (i, 0, 0)),
+            pl.BlockSpec((q_tile, ep, wire_k), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((q, ep, wire_k), jnp.float32),
+            jax.ShapeDtypeStruct((q, ep, wire_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(fv, fi, row_ptr, col_idx)

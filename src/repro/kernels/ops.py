@@ -7,6 +7,8 @@ expose drop-in replacements for the pure-jnp core ops:
 * :func:`index_combine` <-> :func:`repro.core.verd.combine_with_index`
 * :func:`frontier_push` <-> :func:`repro.core.verd.sparse_push_candidates`
   (+ :func:`repro.core.frontier.compact`)
+* :func:`sharded_frontier_push` <-> :func:`repro.core.verd.gather_push_edges`
+  (+ :func:`repro.core.frontier.bucket_by_owner`) — the distributed wire step
 * :func:`index_combine_sparse` <-> :func:`repro.core.verd.combine_with_index_sparse`
 * :func:`embedding_bag` <-> :func:`repro.models.recsys.embedding` bag path
 
@@ -106,6 +108,7 @@ def frontier_push(
     k_out: int,
     threshold: float = 0.0,
     q_tile: int = 8,
+    hub_split_degree: int = 0,
     interpret: bool = True,
 ) -> SparseFrontier:
     """One fused sparse VERD push via the Pallas kernel; pads Q to the tile.
@@ -127,11 +130,46 @@ def frontier_push(
     ov, oi = _push.frontier_push(
         fv, fi, src, graph.row_ptr, graph.out_deg, graph.col_idx,
         c=c, degree_cap=degree_cap, k_out=k_out, threshold=threshold,
-        q_tile=q_tile, interpret=interpret,
+        q_tile=q_tile, hub_split_degree=hub_split_degree,
+        interpret=interpret,
     )
     return SparseFrontier(
         values=ov[:q], indices=oi[:q], k=k_out, n=graph.n
     )
+
+
+def sharded_frontier_push(
+    fv: jax.Array,
+    fi: jax.Array,
+    row_ptr: jax.Array,
+    col_idx: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+    ep: int,
+    n_shard: int,
+    wire_k: int,
+    hub_split_degree: int = 0,
+    q_tile: int = 8,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """One shard's local push + per-owner exchange buckets; pads Q.
+
+    Drop-in for the pre-``all_to_all`` compute of the distributed sparse
+    wire format (``verd.gather_push_edges`` + ``frontier.bucket_by_owner``);
+    returns ``(vals f32[Q, ep, wire_k], idx int32[Q, ep, wire_k])`` with
+    owner-local indices.
+    """
+    q = fv.shape[0]
+    fv_p = _pad_to(fv, 0, q_tile)
+    fi_p = _pad_to(fi, 0, q_tile)
+    ov, oi = _push.sharded_frontier_push(
+        fv_p, fi_p, row_ptr, col_idx,
+        c=c, degree_cap=degree_cap, ep=ep, n_shard=n_shard, wire_k=wire_k,
+        hub_split_degree=hub_split_degree, q_tile=q_tile,
+        interpret=interpret,
+    )
+    return ov[:q], oi[:q]
 
 
 def index_combine_sparse(

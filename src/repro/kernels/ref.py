@@ -66,6 +66,54 @@ def frontier_push_ref(
     return v, i
 
 
+def sharded_push_ref(
+    fv: jax.Array,
+    fi: jax.Array,
+    row_ptr: jax.Array,
+    col_idx: jax.Array,
+    *,
+    c: float,
+    ep: int,
+    n_shard: int,
+    wire_k: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Dense-scatter oracle for the sharded push kernel.
+
+    Densifies the local frontier slice over the shard's ``n_shard`` rows,
+    pushes every local edge into a dense ``[Q, ep * n_shard]`` global slab
+    (the exchange-free reference), then takes the per-owner top-``wire_k``.
+    Returns owner-local indices like the kernel.  Only valid when ``wire_k``
+    covers each owner's support (the kernel's exact mode).
+    """
+    from repro.core import frontier as F
+
+    q = fv.shape[0]
+    m = col_idx.shape[0]
+    n = ep * n_shard
+    f_dense = F.SparseFrontier(
+        values=fv, indices=fi, k=fv.shape[1], n=n_shard
+    ).densify()                                        # [Q, n_shard]
+    # per-edge source row recovery + 1/deg weights (mirrors _push_local)
+    e_ids = jnp.arange(m, dtype=jnp.int32)
+    src_row = jnp.clip(
+        jnp.searchsorted(row_ptr, e_ids, side="right") - 1, 0, n_shard - 1
+    )
+    deg = (row_ptr[1:] - row_ptr[:-1]).astype(jnp.float32)
+    w = 1.0 / jnp.maximum(jnp.take(deg, src_row), 1.0)
+    real = (e_ids < row_ptr[-1]).astype(jnp.float32)   # mask slab padding
+    vals = jnp.take(f_dense, src_row, axis=1) * (w * real)[None, :]
+    dense = (1.0 - c) * jax.ops.segment_sum(
+        vals.T, col_idx, num_segments=n
+    ).T                                                # [Q, n]
+    per_owner = dense.reshape(q, ep, n_shard)
+    bv, bi = jax.lax.top_k(per_owner, min(wire_k, n_shard))
+    bi = jnp.where(bv > 0, bi, 0).astype(jnp.int32)
+    if wire_k > n_shard:
+        pad = ((0, 0), (0, 0), (0, wire_k - n_shard))
+        bv, bi = jnp.pad(bv, pad), jnp.pad(bi, pad)
+    return bv, bi
+
+
 def index_combine_sparse_ref(
     sv: jax.Array,
     si: jax.Array,

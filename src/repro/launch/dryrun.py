@@ -191,17 +191,21 @@ def run_cell(arch_id, shape_name, mesh, out_dir=None, mesh_tag="pod"):
 # The paper's own workload: distributed PPR engine cells
 # ---------------------------------------------------------------------------
 
-# (name, n, m, q_tile, index_l, compress_k, walks)
+# (name, n, m, q_tile, index_l, exchange/widths, walks)
 PPR_CELLS = {
-    # twitter-2010: 41.65M vertices / 1.47B edges; VERD batch-query tile
+    # twitter-2010: 41.65M vertices / 1.47B edges; sparse-frontier wire
+    # format (the default): degree_cap caps each slot's gather budget and
+    # hub splitting keeps every gather axis at 256
     "ppr_verd_twitter": dict(n=41_652_240, m=1_468_365_182, q_tile=8,
-                             index_l=256, compress_k=0),
-    # beyond-paper variant: top-k-compressed frontier exchange
-    "ppr_verd_twitter_ck": dict(n=41_652_240, m=1_468_365_182, q_tile=4,
-                                index_l=256, compress_k=4096),
+                             index_l=256, frontier_k=4096, wire_k=4096,
+                             degree_cap=4096, hub_split_degree=256),
+    # legacy dense-slab exchange (the oracle path, for roofline comparison)
+    "ppr_verd_twitter_dense": dict(n=41_652_240, m=1_468_365_182, q_tile=4,
+                                   index_l=256, exchange="dense"),
     # uk-union: 133.6M vertices / 5.51B edges
     "ppr_verd_ukunion": dict(n=133_633_040, m=5_507_679_822, q_tile=2,
-                             index_l=48, compress_k=4096),
+                             index_l=48, frontier_k=2048, wire_k=2048,
+                             degree_cap=2048, hub_split_degree=256),
     # MCFP offline indexing step on twitter (graph replicated: 6.2 GB)
     "ppr_walk_twitter": dict(n=41_652_240, m=1_468_365_182, q_tile=32,
                              walks=True),
@@ -218,7 +222,11 @@ def lower_ppr_cell(name: str, mesh):
     cfg = de.DistConfig(
         n=n, ep=ep, q_tile=spec["q_tile"], t_iterations=2,
         index_l=spec.get("index_l", 0),
-        compress_k=spec.get("compress_k", 0),
+        exchange=spec.get("exchange", "sparse"),
+        frontier_k=spec.get("frontier_k", 0),
+        wire_k=spec.get("wire_k", 0),
+        degree_cap=spec.get("degree_cap", 0),
+        hub_split_degree=spec.get("hub_split_degree", 0),
         wire_dtype=jnp.bfloat16,
         batch_axes=ba,
     )

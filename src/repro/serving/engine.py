@@ -44,6 +44,11 @@ class PPRService:
         self.engine = BatchQueryEngine(graph, index, self.cfg.query)
         self.buffer = RequestBuffer(self.cfg.batching, clock=clock)
         self.clock = clock or time.monotonic
+        # which execution the engine routed to (docs/query_path.md): part of
+        # the serving telemetry so capacity planning can see Q x K vs Q x n
+        self.frontier_path = (
+            "sparse" if self.engine.uses_sparse_path() else "dense"
+        )
         self.stats: Dict[str, float] = dict(
             served=0, batches=0, total_latency=0.0, max_latency=0.0,
             pad_rows=0,
@@ -92,6 +97,7 @@ class PPRService:
             answers.extend(self.poll(force=True))
         wall = self.clock() - t0
         s = dict(self.stats)
+        s["frontier_path"] = self.frontier_path
         s["wall_s"] = wall
         s["qps"] = len(answers) / max(wall, 1e-9)
         s["mean_latency"] = s["total_latency"] / max(s["served"], 1)

@@ -11,6 +11,21 @@ import pytest
 import jax
 
 
+def densify_rows(values, indices, n):
+    """Independent numpy scatter oracle for fixed-width sparse rows: the one
+    definition of "densified equal" the sparse-path suites assert against
+    (deliberately NOT SparseFrontier.densify — the library under test).
+    ``tests/parity_check.py`` keeps a private copy because it runs as a
+    plain subprocess outside pytest's path setup."""
+    values = np.asarray(values)
+    q = values.shape[0]
+    out = np.zeros((q, n), np.float32)
+    np.add.at(
+        out, (np.arange(q)[:, None], np.asarray(indices)), values
+    )
+    return out
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

@@ -6,6 +6,7 @@ mismatch; tests/test_distributed_engine.py asserts the return code.
 """
 
 import os
+import warnings
 
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
@@ -28,8 +29,10 @@ def main():
     mesh = jax.make_mesh((2, 2), ("data", "model"))
     g = synthetic.erdos_renyi(60, 4.0, seed=11)
     n_pad = 64  # multiple of model axis
+    # legacy dense-slab exchange (the sparse wire format is the default and
+    # is covered by tests/parity_check.py)
     cfg = DistConfig(n=n_pad, ep=2, q_tile=8, t_iterations=2,
-                     index_l=16, top_k=20, compress_k=0)
+                     index_l=16, top_k=20, exchange="dense")
     slabs = build_sharded_graph(g, cfg)
 
     # dense oracle index from exact vectors (padded)
@@ -59,9 +62,12 @@ def main():
         chosen, np.asarray(wv), rtol=2e-4, atol=1e-5)
     print("verd tile OK")
 
-    # compressed exchange: small k must still be close (top-k tail small)
-    cfg_c = DistConfig(n=n_pad, ep=2, q_tile=8, t_iterations=2,
-                       index_l=16, top_k=20, compress_k=32)
+    # deprecated compress_k on the dense path: still close (top-k tail small)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        cfg_c = DistConfig(n=n_pad, ep=2, q_tile=8, t_iterations=2,
+                           index_l=16, top_k=20, exchange="dense",
+                           compress_k=32)
     step_c = make_verd_tile_step(cfg_c, mesh)
     with mesh:
         cv, ci = jax.jit(step_c)(slabs, sources, ivals, iidx)

@@ -1,0 +1,81 @@
+"""Golden regression: pin the ``frontier_path=auto`` selector decisions.
+
+The selector (``BatchQueryEngine.uses_sparse_path`` + the auto-``K``
+derivation) is a tuned heuristic over ``(n, mean_degree, degree_cap)``.
+This file pins its decisions across a grid so that retuning
+``AUTO_SPARSE_MIN_N`` / the auto-``K`` rule later shows up as an explicit
+golden diff instead of a silent routing change.
+
+The graphs are shape-only stubs: the selector reads ``n``, ``m`` and the
+max out-degree, never the edges, so a uniform ``out_deg`` array is enough
+and the grid stays cheap to build.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.core.query import AUTO_SPARSE_MIN_N, BatchQueryEngine, QueryConfig
+
+
+def selector_graph(n: int, mean_deg: int, hub_deg: int = 0) -> Graph:
+    """Shape-only graph: uniform out-degree, optional single hub."""
+    out_deg = np.full(n, mean_deg, np.int32)
+    if hub_deg:
+        out_deg[0] = hub_deg
+    stub = jnp.zeros(1, jnp.int32)
+    return Graph(
+        row_ptr=stub, col_idx=stub, src=stub,
+        out_deg=jnp.asarray(out_deg), n=n, m=int(out_deg.sum()),
+    )
+
+
+# (n, mean_deg, hub_deg) -> (path, chosen K) at the default QueryConfig
+# (mode=verd, t=2, top_k=200).  Regenerate deliberately when retuning:
+#   PYTHONPATH=src python -c "from tests.test_golden_auto import dump; dump()"
+GOLDEN = {
+    (1_024, 4, 0): ("dense", 800),
+    (1_024, 16, 0): ("dense", 800),
+    (1_024, 64, 0): ("dense", 1_024),
+    (32_768, 4, 0): ("sparse", 800),
+    (32_768, 16, 0): ("sparse", 800),
+    (32_768, 64, 0): ("dense", 4_096),       # K*cap blows past n: stay dense
+    (262_144, 4, 0): ("sparse", 800),
+    (262_144, 16, 0): ("sparse", 800),
+    (262_144, 64, 0): ("sparse", 4_096),
+    (32_768, 4, 16_384): ("dense", 800),     # hub graph: gather would dwarf n
+    (262_144, 4, 131_072): ("dense", 800),
+}
+
+
+@pytest.mark.parametrize("point,want", sorted(GOLDEN.items()))
+def test_auto_selector_golden(point, want):
+    n, mean_deg, hub_deg = point
+    g = selector_graph(n, mean_deg, hub_deg)
+    eng = BatchQueryEngine(g, None, QueryConfig(mode="verd"))
+    got = ("sparse" if eng.uses_sparse_path() else "dense", eng.frontier_k)
+    assert got == want, f"selector drifted at {point}: {got} != {want}"
+
+
+@pytest.mark.parametrize("q", [1, 64, 4096])
+def test_auto_selector_is_batch_size_invariant(q):
+    """The route depends on the graph, never on the batch size: a selector
+    change that keys on Q would break jit-cache reuse across batches."""
+    g = selector_graph(65_536, 8)
+    eng = BatchQueryEngine(g, None, QueryConfig(mode="verd", max_batch=q))
+    assert eng.uses_sparse_path()
+    assert eng.frontier_k == 800
+
+
+def test_auto_floor_is_pinned():
+    """AUTO_SPARSE_MIN_N itself is part of the golden surface."""
+    assert AUTO_SPARSE_MIN_N == 1 << 15
+
+
+def dump():  # pragma: no cover - regeneration helper
+    for (n, d, h) in sorted(GOLDEN):
+        g = selector_graph(n, d, h)
+        eng = BatchQueryEngine(g, None, QueryConfig(mode="verd"))
+        path = "sparse" if eng.uses_sparse_path() else "dense"
+        print(f"    ({n:_}, {d}, {h:_}): ({path!r}, {eng.frontier_k:_}),")

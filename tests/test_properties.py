@@ -8,6 +8,7 @@ import pytest
 pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import HealthCheck, given, settings, strategies as st
 
+from repro.core import frontier as frontier_mod
 from repro.core import mcfp, metrics, theory
 from repro.core import verd as verd_mod
 from repro.core.graph import Graph, push_forward, transition_with_dangling
@@ -157,6 +158,124 @@ def test_rag_scale_invariant(k):
     r1 = metrics.rag_at_k(exact, approx, k)
     r2 = metrics.rag_at_k(exact, approx * 7.3, k)
     np.testing.assert_allclose(np.asarray(r1), np.asarray(r2), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# SparseFrontier invariants: dedup-merge, ELL hub splitting, compaction
+# ---------------------------------------------------------------------------
+
+@st.composite
+def candidate_rows(draw, max_q=4, max_w=24, max_n=16):
+    q = draw(st.integers(1, max_q))
+    w = draw(st.integers(1, max_w))
+    n = draw(st.integers(1, max_n))
+    seed = draw(st.integers(0, 2 ** 16))
+    rng = np.random.default_rng(seed)
+    vals = rng.random((q, w)).astype(np.float32)
+    vals[rng.random((q, w)) < 0.3] = 0.0  # mix in empty slots
+    idxs = rng.integers(0, n, (q, w)).astype(np.int32)
+    return vals, idxs, n
+
+
+from conftest import densify_rows as _densify  # the shared scatter oracle
+
+
+@given(candidate_rows(), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_merge_duplicates_permutation_invariant(cand, perm_seed):
+    """Dedup-merge commutes with any per-row slot permutation: the merged
+    result densifies identically regardless of candidate order."""
+    vals, idxs, n = cand
+    mv, mi = frontier_mod.merge_duplicates(jnp.asarray(vals), jnp.asarray(idxs))
+    perm = np.random.default_rng(perm_seed).permutation(vals.shape[1])
+    pv, pi = frontier_mod.merge_duplicates(
+        jnp.asarray(vals[:, perm]), jnp.asarray(idxs[:, perm])
+    )
+    np.testing.assert_allclose(
+        _densify(mv, mi, n), _densify(pv, pi, n), rtol=1e-6, atol=1e-6
+    )
+
+
+@given(candidate_rows(), st.integers(1, 16), st.integers(0, 2 ** 16))
+@settings(**SETTINGS)
+def test_compact_permutation_invariant_and_true_topk(cand, k, perm_seed):
+    """Full compaction (merge -> top-K) keeps exactly the top-K of the
+    *merged* per-column mass, independent of candidate order."""
+    vals, idxs, n = cand
+    cv, ci = frontier_mod.compact_arrays(
+        jnp.asarray(vals), jnp.asarray(idxs), k
+    )
+    # permutation invariance of the kept mass
+    perm = np.random.default_rng(perm_seed).permutation(vals.shape[1])
+    pv, pi = frontier_mod.compact_arrays(
+        jnp.asarray(vals[:, perm]), jnp.asarray(idxs[:, perm]), k
+    )
+    np.testing.assert_allclose(
+        _densify(cv, ci, n), _densify(pv, pi, n), rtol=1e-6, atol=1e-6
+    )
+    # the kept entries are the true per-row top-k of the dense merge
+    dense = _densify(vals, idxs, n)
+    want = np.sort(dense, axis=1)[:, ::-1][:, : min(k, n)].sum(axis=1)
+    np.testing.assert_allclose(
+        np.asarray(cv).sum(axis=1), want, rtol=1e-5, atol=1e-6
+    )
+
+
+@given(graphs(), st.integers(1, 8), st.booleans())
+@settings(**SETTINGS)
+def test_hub_splitting_preserves_pushed_mass(g, h, truncate):
+    """ELL row splitting moves candidates between sub-slots but the pushed
+    multiset — hence the densified push — is exactly preserved, in the
+    exact regime (cap = max degree) and the truncating one (cap below)."""
+    cap = verd_mod.resolve_degree_cap(g)
+    if truncate:
+        cap = max(cap // 2, 1)  # cap < max deg: both paths drop the tail
+    rng = np.random.default_rng(0)
+    q, k = 2, min(6, g.n)
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, g.n, (q, k)), jnp.int32)
+    srcs = jnp.asarray(rng.integers(0, g.n, q), jnp.int32)
+    base_v, base_i = verd_mod.sparse_push_candidates(
+        g, fv, fi, srcs, c=0.15, degree_cap=cap
+    )
+    split_v, split_i = verd_mod.sparse_push_candidates(
+        g, fv, fi, srcs, c=0.15, degree_cap=cap, hub_split_degree=h
+    )
+    # total mass exactly preserved, and per-destination mass too
+    np.testing.assert_allclose(
+        np.asarray(split_v).sum(), np.asarray(base_v).sum(), rtol=1e-6
+    )
+    np.testing.assert_allclose(
+        _densify(np.asarray(split_v), np.asarray(split_i), g.n),
+        _densify(np.asarray(base_v), np.asarray(base_i), g.n),
+        rtol=1e-6, atol=1e-6,
+    )
+    # and the emitted candidate width is K sub-slot groups of width h (+1
+    # dangling slot) — i.e. no gather axis exceeded the split width
+    hh, s = verd_mod.resolve_hub_splits(cap, h)
+    assert split_v.shape[1] == k * s * hh + 1
+    assert base_v.shape[1] == k * cap + 1
+
+
+@given(candidate_rows(max_n=12), st.integers(1, 3), st.integers(1, 12))
+@settings(**SETTINGS)
+def test_bucket_by_owner_partitions_mass(cand, ep, k):
+    """Owner bucketing with covering k: per-owner densified buckets tile the
+    global densified candidates exactly (nothing lost, nothing mixed)."""
+    vals, idxs, n = cand
+    ns = max((n + ep - 1) // ep, 1)
+    n_pad = ns * ep
+    bv, bi = frontier_mod.bucket_by_owner(
+        jnp.asarray(vals), jnp.asarray(idxs), ep, ns, max(k, ns)
+    )
+    got = np.zeros((vals.shape[0], n_pad), np.float32)
+    for o in range(ep):
+        got[:, o * ns: (o + 1) * ns] += _densify(
+            np.asarray(bv[:, o]), np.asarray(bi[:, o]), ns
+        )
+    np.testing.assert_allclose(
+        got[:, :n], _densify(vals, idxs, n), rtol=1e-6, atol=1e-6
+    )
 
 
 def test_walk_lengths_match_geometric_distribution(key):
