@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-parity bench bench-smoke
+.PHONY: test test-fast test-parity test-kernels bench bench-smoke
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
@@ -17,6 +17,11 @@ test-fast:
 # oracle, incl. the slow 4-shard subprocess half (docs/query_path.md)
 test-parity:
 	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_parity.py
+
+# kernel-contract suite: every DMA-gather kernel vs its dense oracle in
+# interpret mode (tpu-marked interpret=False cases auto-skip off-TPU)
+test-kernels:
+	PYTHONPATH=src $(PY) -m pytest -x -q tests/test_kernels.py
 
 # full paper-table benchmark sweep
 bench:

@@ -15,6 +15,8 @@ import numpy as np
 from benchmarks.common import bench_graph, emit, timeit
 from repro.core.graph import push_forward
 from repro.graphs import formats
+from repro.kernels import frontier_push as push_mod
+from repro.kernels import index_combine as comb_mod
 from repro.kernels import ops, ref
 
 
@@ -61,6 +63,68 @@ def run(fast: bool = False) -> dict:
     err = float(jnp.abs(got - ref.embedding_bag_ref(ids, mask, table)).max())
     emit("kernel_bag_pallas_interpret", 0.0, f"max_err={err:.2e}")
     out["bag_err"] = err
+    out.update(run_vmem_report(fast=fast))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# per-grid-step VMEM: whole-array-block kernels (pre-HBM-residency) vs the
+# DMA-gather kernels (CSR/index arrays stay in HBM, only tiles in VMEM)
+# ---------------------------------------------------------------------------
+
+def run_vmem_report(fast: bool = False) -> dict:
+    """Per-step VMEM bytes of the sparse-path kernels, before/after HBM
+    residency.
+
+    ``before`` is what the legacy kernels held resident per grid step (the
+    whole CSR / index arrays as input blocks — O(nnz)); ``after`` is the
+    DMA-gather layout (frontier tiles + gather scratch, O(q_tile * K *
+    degree_cap) — independent of n and nnz).  Analytic from the block
+    shapes (exact: the buffers are fixed width), so the report also covers
+    pod-scale configs this container cannot allocate.  The 16 MB line is
+    the per-core VMEM budget the compiled (interpret=False) kernels must
+    fit; the ``hub`` point deliberately shows a config whose gather scratch
+    still overflows it — degree truncation / smaller q_tile remains the
+    operator's knob there even with HBM residency.
+    """
+    vmem_budget = 16 * 1024 * 1024
+    # (label, n, m, q_tile, K, k_out, degree_cap, hub_split)
+    points = [("tiny", 4_096, 32_768, 8, 256, 200, 64, 0)]
+    if not fast:
+        points += [
+            ("wiki", 100_000, 1_000_000, 8, 512, 200, 48, 0),
+            ("hub", 1_000_000, 16_000_000, 1, 512, 200, 16_384, 128),
+        ]
+    out = {}
+    for label, n, m, q_tile, k, k_out, cap, split in points:
+        after = push_mod.vmem_bytes(
+            q_tile, k, k_out, degree_cap=cap, hub_split_degree=split
+        )
+        before = push_mod.vmem_bytes_legacy(
+            q_tile, k, k_out, n=n, m=m, degree_cap=cap,
+            hub_split_degree=split,
+        )
+        out[("push_vmem", label)] = dict(before=before, after=after)
+        emit(
+            f"kernel_push_vmem_{label}",
+            float(after),
+            f"n={n};m={m};before_B={before:.3e};after_B={after:.3e};"
+            f"reduction={before / after:.1f}x;"
+            f"fits_16MB={'yes' if after <= vmem_budget else 'NO'}",
+        )
+        l = 32
+        c_after = comb_mod.sparse_vmem_bytes(q_tile, k, k, l, k_out)
+        c_before = comb_mod.sparse_vmem_bytes_legacy(
+            q_tile, k, k, l, k_out, n=n
+        )
+        out[("combine_vmem", label)] = dict(before=c_before, after=c_after)
+        emit(
+            f"kernel_combine_vmem_{label}",
+            float(c_after),
+            f"n={n};L={l};before_B={c_before:.3e};after_B={c_after:.3e};"
+            f"reduction={c_before / c_after:.1f}x;"
+            f"fits_16MB={'yes' if c_after <= vmem_budget else 'NO'}",
+        )
     return out
 
 

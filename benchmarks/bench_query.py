@@ -121,7 +121,10 @@ def run_sparse_sweep(fast: bool = False) -> dict:
     """
     points = [(20_000, 64, 128)]
     if not fast:
-        points += [(100_000, 256, 512), (100_000, 256, 128)]
+        # 8_192 / 16_384 bracket AUTO_SPARSE_MIN_N (1 << 14): the recorded
+        # crossover evidence behind the retuned auto threshold
+        points += [(8_192, 64, 128), (16_384, 64, 128),
+                   (100_000, 256, 512), (100_000, 256, 128)]
     out = {}
     setups = {}  # graph + index per unique n (construction is the slow part)
     for n, q, k in points:

@@ -52,7 +52,6 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.compat import shard_map
 from repro.core import frontier as frontier_mod
-from repro.core import verd as verd_mod
 from repro.core.graph import Graph
 from repro.core.walks import DEFAULT_C
 
@@ -73,6 +72,9 @@ class DistConfig:
     combine_wire_k: int = 0     # index-combine exchange width (0 = derive)
     degree_cap: int = 0         # max out-degree; required for sparse exchange
     hub_split_degree: int = 0   # ELL row-split threshold for the sparse push
+    kernel_q_tile: int = 8      # query-tile of the fused Pallas push kernel
+    kernel_interpret: Optional[bool] = None  # None = auto: interpret except
+                                # on a real TPU backend (interpret=False)
     compress_k: int = 0         # DEPRECATED: top-k'd *dense* exchange; use
                                 # exchange="sparse" + wire_k instead
     edge_chunk: int = 1 << 22   # local edge-scan chunk
@@ -123,6 +125,14 @@ class DistConfig:
             self.resolved_wire_k, self.top_k
         )
         return min(k, self.n_shard)
+
+    @property
+    def resolved_kernel_interpret(self) -> bool:
+        """Interpret mode for the fused push kernel: honor the explicit
+        setting, else interpret everywhere but a real TPU backend."""
+        if self.kernel_interpret is not None:
+            return bool(self.kernel_interpret)
+        return jax.default_backend() != "tpu"
 
 
 @jax.tree_util.register_dataclass
@@ -377,14 +387,18 @@ def _make_verd_tile_step_sparse(cfg: DistConfig, mesh: Mesh):
     """SparseFrontier wire format: O(Q x shards x wire_k) bytes/iteration.
 
     Per shard, per iteration: gather-push the local ``[Q, K]`` frontier
-    slice through the local CSR rows (hub rows split ELL-style so no gather
-    axis exceeds ``hub_split_degree``), bucket candidates by destination
-    owner into per-owner top-``wire_k`` (value, local-index) pairs, one
+    slice through the local CSR rows via the fused HBM-resident Pallas
+    kernel ``kernels.ops.sharded_frontier_push`` (hub rows split ELL-style
+    so no gather axis exceeds ``hub_split_degree``; the kernel emits the
+    per-owner top-``wire_k`` (value, local-index) buckets directly), one
     ``all_to_all``, then dedup-merge + re-compact the received partials back
-    to the ``[Q, K]`` slice.  The accumulated ``s`` and the index-combine
-    contributions stay sparse end to end; only the final per-shard top-k is
-    gathered.
+    to the ``[Q, K]`` slice.  The kernel runs ``interpret=True`` off-TPU and
+    compiled on a real TPU (``cfg.resolved_kernel_interpret``).  The
+    accumulated ``s`` and the index-combine contributions stay sparse end to
+    end; only the final per-shard top-k is gathered.
     """
+    from repro.kernels import ops as kernel_ops
+
     if cfg.degree_cap <= 0:
         raise ValueError(
             "exchange='sparse' requires cfg.degree_cap > 0 (the max "
@@ -396,6 +410,7 @@ def _make_verd_tile_step_sparse(cfg: DistConfig, mesh: Mesh):
     k_front = min(cfg.resolved_frontier_k, ns)   # local slice: <= ns distinct
     kw = cfg.resolved_wire_k
     kc = cfg.resolved_combine_wire_k
+    interpret = cfg.resolved_kernel_interpret
 
     def a2a(x):
         return jax.lax.all_to_all(
@@ -410,7 +425,6 @@ def _make_verd_tile_step_sparse(cfg: DistConfig, mesh: Mesh):
         qt = sources.shape[0]
         me = jax.lax.axis_index(model)
         lo = me * ns
-        local_deg = rp[1:] - rp[:-1]                      # int32 [ns]
 
         # local slice of one-hot(sources), in sparse (width-1) form
         hit0 = ((sources >= lo) & (sources < lo + ns)).astype(jnp.float32)
@@ -426,15 +440,14 @@ def _make_verd_tile_step_sparse(cfg: DistConfig, mesh: Mesh):
             dm = jax.lax.psum(
                 jnp.sum(fv * jnp.take(dang, fi), axis=1), model
             )
-            # local gather push; destination ids are global columns
-            push_v, nbrs = verd_mod.gather_push_edges(
-                fv, fi, jnp.take(rp, fi), jnp.take(local_deg, fi), col,
-                c=cfg.c, degree_cap=cfg.degree_cap,
-                hub_split_degree=cfg.hub_split_degree,
-            )
-            # per-owner top-k buckets -> one all_to_all of fixed-width pairs
-            bv, bi = frontier_mod.bucket_by_owner(
-                push_v, nbrs, cfg.ep, ns, kw
+            # fused local gather push + per-owner top-k buckets (the
+            # HBM-resident Pallas kernel) -> one all_to_all of fixed-width
+            # (value, local-index) pairs
+            bv, bi = kernel_ops.sharded_frontier_push(
+                fv, fi, rp, col,
+                c=cfg.c, degree_cap=cfg.degree_cap, ep=cfg.ep, n_shard=ns,
+                wire_k=kw, hub_split_degree=cfg.hub_split_degree,
+                q_tile=cfg.kernel_q_tile, interpret=interpret,
             )
             bv = a2a(bv.astype(cfg.wire_dtype)).astype(jnp.float32)
             bi = a2a(bi)

@@ -34,8 +34,11 @@ from repro.core.walks import DEFAULT_C
 # Auto path selection: below this vertex count the dense [Q, n] frontier is
 # cheap enough that the sparse bookkeeping (sort-based compaction) isn't
 # worth it; above it the dense path's Q*n*8 bytes of state dominates.  See
-# docs/query_path.md for the memory formulas.
-AUTO_SPARSE_MIN_N = 1 << 15
+# docs/query_path.md for the memory formulas.  Retuned 1<<15 -> 1<<14 from
+# the recorded bench_query sparse sweep (docs/query_path.md): the sparse
+# path already wins 6-8x at n = 16k-20k with L1 within the truncation
+# bound, so the old threshold left a 2x band of graphs on the slow path.
+AUTO_SPARSE_MIN_N = 1 << 14
 
 
 def auto_frontier_floor(top_k: int) -> int:
@@ -114,10 +117,13 @@ class BatchQueryEngine:
 
         Only the VERD modes have a frontier; ``auto`` picks sparse once the
         dense state (Q*n*8 bytes/query-pair) dwarfs the sparse state
-        (~Q*K*8), i.e. on large graphs where K << n — AND the push's
-        candidate gather (Q*K*degree_cap entries) stays below the dense row
-        width, which rules out hub-heavy graphs where one high-degree vertex
-        would inflate the gather past the dense state it replaces.
+        (~Q*K*8), i.e. on large graphs where K << n — AND the push's gather
+        tile (Q*K*gather-width entries) stays below the dense row width it
+        replaces.  The gather width is :meth:`effective_gather_width`: the
+        max out-degree, or ``hub_split_degree`` once ELL splitting is on —
+        so hub-heavy graphs route sparse as soon as a split width is set,
+        because every gather axis (and the kernels' per-step VMEM) is then
+        bounded by ``h`` regardless of how large the hubs are.
         """
         cfg = self.config
         if cfg.mode not in ("powerwalk", "verd"):
@@ -129,7 +135,7 @@ class BatchQueryEngine:
         return (
             self.graph.n >= AUTO_SPARSE_MIN_N
             and 8 * self.frontier_k <= self.graph.n
-            and self.frontier_k * self.degree_cap() <= self.graph.n
+            and self.frontier_k * self.effective_gather_width() <= self.graph.n
         )
 
     def degree_cap(self) -> int:
@@ -137,6 +143,15 @@ class BatchQueryEngine:
         if self._degree_cap is None:
             self._degree_cap = verd_mod.resolve_degree_cap(self.graph)
         return self._degree_cap
+
+    def effective_gather_width(self) -> int:
+        """Widest gather axis of one sparse push: ``degree_cap`` unsplit,
+        ``hub_split_degree`` once ELL hub splitting bounds every sub-slot
+        (``verd.resolve_hub_splits``)."""
+        h, _ = verd_mod.resolve_hub_splits(
+            self.degree_cap(), self.config.hub_split_degree
+        )
+        return h
 
     def query_sparse(self, sources: jax.Array, out_k: Optional[int] = None):
         """Sparse-path answers as a SparseFrontier (never builds [Q, n])."""

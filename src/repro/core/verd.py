@@ -143,6 +143,71 @@ def resolve_hub_splits(degree_cap: int, hub_split_degree: int) -> Tuple[int, int
     return h, (degree_cap + h - 1) // h
 
 
+def push_window_starts(
+    start: jax.Array,
+    *,
+    degree_cap: int,
+    hub_split_degree: int = 0,
+    m: int,
+) -> jax.Array:
+    """Clipped per-sub-slot gather-window starts, ``int32[Q, K, s]``.
+
+    Sub-slot ``j`` of a frontier slot owns edges ``[j*h, (j+1)*h)`` of its
+    CSR row, so its fixed-width-``h`` gather window starts at ``start +
+    j*h``.  Windows are clipped to ``[0, m - h]`` so that reading ``h``
+    consecutive entries — a ``jnp.take`` on the jnp path, an HBM DMA in the
+    Pallas kernels — never leaves ``col_idx``; every in-budget edge still
+    lands inside its (possibly shifted) window, and
+    :func:`masked_push_from_windows` compensates for the shift when masking.
+    These are exactly the scalar-prefetched offsets the DMA kernels consume.
+    Requires ``h <= m`` (guaranteed once ``degree_cap <= m``; no row has
+    more than ``m`` edges, so clamping the cap to ``m`` is a no-op).
+    """
+    h, s = resolve_hub_splits(degree_cap, hub_split_degree)
+    st = start[..., None] + h * jnp.arange(s, dtype=jnp.int32)
+    return jnp.clip(st, 0, max(m - h, 0))
+
+
+def masked_push_from_windows(
+    fv: jax.Array,
+    deg: jax.Array,
+    start: jax.Array,
+    windows: jax.Array,
+    gathered: jax.Array,
+    *,
+    c: float,
+    degree_cap: int,
+    hub_split_degree: int = 0,
+) -> Tuple[jax.Array, jax.Array]:
+    """Mask fixed-width gather windows into push candidates.
+
+    ``windows int32[Q, K, s]`` are the clipped starts from
+    :func:`push_window_starts`; ``gathered int32[Q, K, s, h]`` holds
+    ``col_idx[windows + j]`` however it was read (jnp gather or kernel DMA —
+    this function is the math both share).  Element ``j`` of a window whose
+    clip shifted it down by ``d = start + s_i*h - window`` corresponds to
+    edge offset ``s_i*h + (j - d)`` of the row; it is a real pushed edge iff
+    ``j >= d`` and that offset is within ``budget = min(deg, degree_cap)``
+    (the same tail-truncation as the unsplit gather).  For untouched windows
+    ``d == 0`` and this reduces to the plain ``eoff < budget`` mask.
+
+    Returns ``(push_v, nbrs)`` of width ``K * s * h``; weights are
+    ``(1 - c) * fv / deg`` on valid lanes, empty slots ``(0.0, 0)``.
+    """
+    q, k = fv.shape
+    h, s = resolve_hub_splits(degree_cap, hub_split_degree)
+    sub = h * jnp.arange(s, dtype=jnp.int32)                  # [s]
+    d = (start[..., None] + sub - windows)[..., None]         # [Q, K, s, 1]
+    j = jnp.arange(h, dtype=jnp.int32)[None, None, None, :]   # [1, 1, 1, h]
+    eoff = sub[None, None, :, None] + (j - d)                 # [Q, K, s, h]
+    budget = jnp.minimum(deg, degree_cap)[..., None, None]
+    valid = (j >= d) & (eoff < budget)
+    nbrs = jnp.where(valid, gathered, 0)
+    inv = 1.0 / jnp.maximum(deg[..., None, None].astype(jnp.float32), 1.0)
+    push_v = jnp.where(valid, (1.0 - c) * fv[..., None, None] * inv, 0.0)
+    return push_v.reshape(q, k * s * h), nbrs.reshape(q, k * s * h)
+
+
 def gather_push_edges(
     fv: jax.Array,
     fi: jax.Array,
@@ -167,26 +232,25 @@ def gather_push_edges(
     candidate multiset is identical to the unsplit gather (tested in
     ``test_properties.py``).
 
+    Implemented as :func:`push_window_starts` + a window gather +
+    :func:`masked_push_from_windows` — the same three steps the DMA kernels
+    in ``repro.kernels`` run, with the ``jnp.take`` swapped for an HBM DMA.
+
     Returns ``(push_v, nbrs)`` of width ``K * s * h``; ``nbrs`` are the
-    (clipped) ``col_idx`` destination ids, weights ``(1-c) * fv / deg``.
+    ``col_idx`` destination ids, weights ``(1-c) * fv / deg``.
     """
-    q, k = fv.shape
     m = col_idx.shape[0]
-    h, s = resolve_hub_splits(degree_cap, hub_split_degree)
-    # [s, h] edge offsets: sub-slot j covers its row's edges [j*h, (j+1)*h)
-    eoff = (
-        jnp.arange(s, dtype=jnp.int32)[:, None] * h
-        + jnp.arange(h, dtype=jnp.int32)[None, :]
+    degree_cap = min(degree_cap, max(m, 1))  # no row has more than m edges
+    h, _ = resolve_hub_splits(degree_cap, hub_split_degree)
+    windows = push_window_starts(
+        start, degree_cap=degree_cap, hub_split_degree=hub_split_degree, m=m
     )
-    # cap at degree_cap too: s*h rounds up past the cap, and the truncating
-    # regime (cap < deg) must drop the same tail edges as the unsplit gather
-    budget = jnp.minimum(deg, degree_cap)
-    valid = eoff[None, None] < budget[..., None, None]    # [Q, K, s, h]
-    eidx = jnp.clip(start[..., None, None] + eoff, 0, m - 1)
-    nbrs = jnp.where(valid, jnp.take(col_idx, eidx), 0)
-    inv = 1.0 / jnp.maximum(deg[..., None, None].astype(jnp.float32), 1.0)
-    push_v = jnp.where(valid, (1.0 - c) * fv[..., None, None] * inv, 0.0)
-    return push_v.reshape(q, k * s * h), nbrs.reshape(q, k * s * h)
+    eidx = windows[..., None] + jnp.arange(h, dtype=jnp.int32)
+    gathered = jnp.take(col_idx, eidx)                        # [Q, K, s, h]
+    return masked_push_from_windows(
+        fv, deg, start, windows, gathered,
+        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+    )
 
 
 def gather_push_candidates(
@@ -255,6 +319,104 @@ def sparse_push_candidates(
     )
 
 
+def sparse_push_compact(
+    graph: Graph,
+    fv: jax.Array,
+    fi: jax.Array,
+    sources: jax.Array,
+    *,
+    c: float = DEFAULT_C,
+    degree_cap: int,
+    k_out: int,
+    hub_split_degree: int = 0,
+    threshold: float = 0.0,
+    stream_width: int = 0,
+) -> frontier.SparseFrontier:
+    """One VERD push + compaction with bounded live candidate width.
+
+    Semantically :func:`sparse_push_candidates` followed by
+    :func:`frontier.compact`, but when the one-shot candidate tensor
+    (width ``K * s * h`` ~= ``K * degree_cap``) would dwarf the compacted
+    result, the gather is streamed in frontier-slot chunks, each folded
+    into a running top-``k_out`` state — live width stays
+    ``O(max(stream target, one slot's s*h) + k_out)`` instead of
+    ``O(K * degree_cap)``.  This is what makes the relaxed hub auto-route
+    guard safe on the single-device path: one hub slot's gather is at most
+    ``degree_cap < n`` entries, and only one chunk of slots is live at a
+    time, never the K-fold product.  Exact (equal to the one-shot path, up
+    to f32 merge rounding) whenever ``k_out`` covers the merged row
+    support; below that, every fold truncates by rank like any other
+    top-K here, so mass is only dropped and the drift stays bounded by the
+    dropped mass.  ``stream_width`` overrides the live-width target
+    (0 = auto: ``max(4 * k_out, one slot, 4096)``).
+    """
+    q, k = fv.shape
+    m = graph.m
+    if m == 0:  # all-dangling: one candidate per row, nothing to stream
+        cv, ci = sparse_push_candidates(
+            graph, fv, fi, sources, c=c, degree_cap=degree_cap
+        )
+        return frontier.compact(
+            cv, ci, min(k_out, cv.shape[1]), graph.n, threshold=threshold
+        )
+    cap = min(degree_cap, max(m, 1))
+    h, s = resolve_hub_splits(cap, hub_split_degree)
+    slot_w = s * h
+    out_w = min(k_out, k * slot_w + 1)   # same width as the one-shot path
+    target = stream_width if stream_width > 0 else max(
+        4 * out_w, slot_w, 4096
+    )
+    if k * slot_w + 1 <= 2 * target:     # narrow enough: one-shot gather
+        cv, ci = sparse_push_candidates(
+            graph, fv, fi, sources, c=c, degree_cap=degree_cap,
+            hub_split_degree=hub_split_degree,
+        )
+        return frontier.compact(cv, ci, out_w, graph.n, threshold=threshold)
+    slots = max(1, target // slot_w)
+    # pad the slot axis to a chunk multiple: pad slots carry fv == 0, so
+    # their (masked) candidates have zero weight and compact away
+    pad = (-k) % slots
+    fv_p = jnp.pad(fv, ((0, 0), (0, pad)))
+    fi_p = jnp.pad(fi, ((0, 0), (0, pad)))
+    start = jnp.take(graph.row_ptr, fi_p)
+    deg = jnp.take(graph.out_deg, fi_p)
+    n_chunks = (k + pad) // slots
+    chunk = lambda x: x.reshape(q, n_chunks, slots).transpose(1, 0, 2)
+    # dangling mass seeds the running state (the one-shot path's last slot)
+    dm = jnp.sum(jnp.where(deg == 0, fv_p, 0.0), axis=1)
+    run_v, run_i = frontier.topk_compact(
+        (1.0 - c) * dm[:, None], sources.reshape(-1, 1).astype(jnp.int32),
+        out_w,
+    )
+
+    def fold(carry, xs):
+        rv, ri = carry
+        cfv, cfi, cst, cdg = xs
+        pv, nb = gather_push_edges(
+            cfv, cfi, cst, cdg, graph.col_idx, c=c, degree_cap=degree_cap,
+            hub_split_degree=hub_split_degree,
+        )
+        # mid-stream compaction truncates by rank only; the epsilon
+        # threshold applies once at the end, like the one-shot path
+        rv, ri = frontier.compact_arrays(
+            jnp.concatenate([rv, pv], axis=1),
+            jnp.concatenate([ri, nb], axis=1),
+            out_w,
+        )
+        return (rv, ri), ()
+
+    (run_v, run_i), _ = jax.lax.scan(
+        fold, (run_v, run_i),
+        (chunk(fv_p), chunk(fi_p), chunk(start), chunk(deg)),
+    )
+    if threshold > 0.0:
+        run_v = frontier.threshold_values(run_v, threshold)
+        run_v, run_i = frontier.topk_compact(run_v, run_i, out_w)
+    return frontier.SparseFrontier(
+        values=run_v, indices=run_i, k=out_w, n=graph.n
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=(
@@ -278,12 +440,10 @@ def _verd_iterate_sparse(
     for _ in range(t):
         s_vals.append(c * f.values)
         s_idxs.append(f.indices)
-        cv, ci = sparse_push_candidates(
-            graph, f.values, f.indices, sources, c=c, degree_cap=degree_cap,
-            hub_split_degree=hub_split_degree,
-        )
-        f = frontier.compact(
-            cv, ci, min(k, cv.shape[1]), graph.n, threshold=threshold
+        f = sparse_push_compact(
+            graph, f.values, f.indices, sources, c=c, k_out=k,
+            degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+            threshold=threshold,
         )
     if s_vals:
         sv = jnp.concatenate(s_vals, axis=1)
@@ -333,6 +493,24 @@ def verd_iterate_sparse(
     )
 
 
+def combine_candidates_from_rows(
+    sv: jax.Array,
+    si: jax.Array,
+    fv: jax.Array,
+    iv: jax.Array,
+    ii: jax.Array,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sparse-combine math on already-gathered index rows (``iv/ii [Q, K,
+    L]``): scale by frontier mass, stack with the ``s`` entries.  Shared by
+    the jnp gather below and the DMA kernel body (which reads the rows via
+    HBM copies instead of ``jnp.take``).  Uncompacted width ``S + K*L``."""
+    q = fv.shape[0]
+    contrib = fv[..., None] * iv
+    cand_v = jnp.concatenate([sv, contrib.reshape(q, -1)], axis=1)
+    cand_i = jnp.concatenate([si, ii.reshape(q, -1)], axis=1)
+    return cand_v, cand_i
+
+
 def gather_combine_candidates(
     sv: jax.Array,
     si: jax.Array,
@@ -342,15 +520,11 @@ def gather_combine_candidates(
     idx: jax.Array,
 ) -> Tuple[jax.Array, jax.Array]:
     """Array-level sparse combine shared by the core op and the Pallas
-    kernel body: gather the touched index rows, scale by frontier mass,
-    stack with the ``s`` entries.  Uncompacted width ``S + K*L``."""
-    q = fv.shape[0]
+    kernel oracle path: gather the touched index rows, scale by frontier
+    mass, stack with the ``s`` entries.  Uncompacted width ``S + K*L``."""
     iv = jnp.take(vals, fi, axis=0)                    # [Q, K, L]
     ii = jnp.take(idx, fi, axis=0)                     # [Q, K, L]
-    contrib = fv[..., None] * iv
-    cand_v = jnp.concatenate([sv, contrib.reshape(q, -1)], axis=1)
-    cand_i = jnp.concatenate([si, ii.reshape(q, -1)], axis=1)
-    return cand_v, cand_i
+    return combine_candidates_from_rows(sv, si, fv, iv, ii)
 
 
 def combine_with_index_sparse(

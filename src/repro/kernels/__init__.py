@@ -1,8 +1,11 @@
 """Pallas TPU kernels for PowerWalk's compute hot-spots.
 
-``ell_spmm``      — VERD frontier push (the per-iteration SpMM).
-``index_combine`` — fused Algorithm-4 line 10 (s + f @ P_hat).
-``embedding_bag`` — sharded-table bag lookup for the recsys archs.
+``ell_spmm``       — dense VERD frontier push (the per-iteration SpMM).
+``frontier_push``  — HBM-resident sparse push (+ the sharded exchange
+                     half-iteration), scalar-prefetch DMA gathers.
+``index_combine``  — fused Algorithm-4 line 10 (s + f @ P_hat), dense and
+                     sparse (HBM-resident index) variants.
+``embedding_bag``  — sharded-table bag lookup for the recsys archs.
 
 Each kernel module holds the ``pl.pallas_call`` + BlockSpec; ``ops`` wraps
 them with padding/jit; ``ref`` holds the pure-jnp oracles the tests sweep

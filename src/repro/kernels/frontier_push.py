@@ -1,32 +1,33 @@
-"""Pallas TPU kernels: sparse-frontier gather-push + top-K compaction.
+"""Pallas TPU kernels: HBM-resident sparse-frontier gather-push.
 
-Two kernels share the gather machinery: :func:`frontier_push` is the
+Two kernels share the DMA-gather machinery: :func:`frontier_push` is the
 single-device fused push (gather + merge + compact), and
 :func:`sharded_frontier_push` is the distributed half-iteration (local
 gather + per-owner top-k exchange buckets) used by
 ``core/distributed_engine.py``'s sparse wire format.  Both support ELL hub
 splitting (``hub_split_degree``) so no gather axis exceeds the split width.
 
-One VERD iteration on a fixed-width sparse frontier (``values f32[Q, K]`` +
-``indices int32[Q, K]``), fused per query tile:
+Memory layout (the PowerWalk discipline: one iteration touches only the
+frontier's out-edges, never the graph):
 
-    1. gather: each frontier slot reads up to ``degree_cap`` out-edges of its
-       vertex from the CSR arrays (``row_ptr``/``col_idx``/``out_deg``) and
-       emits one weighted candidate per edge; dangling mass returns to the
-       query's source,
-    2. compact: duplicate destination hits are merged (sort + run-sum, see
-       :func:`repro.core.frontier.merge_duplicates`) and the row is re-packed
-       to the top-``k_out`` entries.
+* ``col_idx`` stays in ``pltpu.ANY`` (HBM) — it is never blocked into VMEM.
+* The CSR ``row_ptr``/``out_deg`` arrays never enter the kernel at all: the
+  launcher turns them into per-slot ``start``/``deg`` via two O(Q*K)
+  gathers, and the per-sub-slot gather-window starts
+  (:func:`repro.core.verd.push_window_starts`) ride in as a
+  ``PrefetchScalarGridSpec`` scalar-prefetch argument, available in SMEM
+  before the kernel body runs — exactly what the per-slot DMA addresses
+  need.
+* Each grid step DMA-gathers only the width-``h`` edge windows its
+  ``q_tile`` frontier rows touch (``make_async_copy`` HBM -> VMEM scratch,
+  depth-2 double-buffered), then masks them with the same
+  :func:`repro.core.verd.masked_push_from_windows` math the jnp path uses.
 
-The grid is 1-D over query tiles; each step touches ``q_tile * (K *
-degree_cap + 1)`` candidates — never a ``[Q, n]`` slab.  The CSR arrays ride
-along as whole-array blocks: on a real TPU those belong in HBM with
-scalar-prefetched row offsets and per-tile DMA (see
-``PrefetchScalarGridSpec``); in this container the kernel is validated in
-interpret mode, which is also the fallback registered in ``kernels.ops``.
-
-VMEM per step: q_tile*K*8 (frontier) + q_tile*K*degree_cap*8 (candidates)
-+ q_tile*k_out*8 (out) bytes, plus the resident CSR blocks.
+VMEM per step is therefore O(q_tile * K * s * h) — independent of ``n`` and
+``nnz`` (see :func:`vmem_bytes` / :func:`vmem_bytes_legacy` for the
+before/after accounting).  ``interpret=True`` (the validated mode in this
+container) runs the same DMA schedule through the Pallas interpreter; on a
+real TPU pass ``interpret=False``.
 """
 
 from __future__ import annotations
@@ -36,22 +37,122 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import frontier as frontier_mod
 from repro.core import verd as verd_mod
 
 
-def _frontier_push_kernel(
-    fv_ref, fi_ref, src_ref, row_ptr_ref, out_deg_ref, col_idx_ref,
-    ov_ref, oi_ref, *, c: float, degree_cap: int, threshold: float,
-    hub_split_degree: int,
+def dma_pipeline(rows, make_dmas):
+    """Depth-2 pipelined DMA drain: the one double-buffer schedule every
+    gather kernel here shares.
+
+    ``make_dmas(r)`` returns the async copies of pipeline row ``r`` (each
+    built with its own ``sem.at[..., r % 2]`` slot, so two rows may be in
+    flight).  Row ``r + 1``'s copies are started before waiting on row
+    ``r``'s, overlapping HBM latency with the previous row's drain.
+    """
+    for dma in make_dmas(0):
+        dma.start()
+
+    def body(r, carry):
+        @pl.when(r + 1 < rows)
+        def _start_next():
+            for dma in make_dmas(r + 1):
+                dma.start()
+
+        for dma in make_dmas(r):
+            dma.wait()
+        return carry
+
+    jax.lax.fori_loop(0, rows, body, 0)
+
+
+def _dma_gather_windows(col_hbm, win_ref, scratch, sem, *, rows, h, base):
+    """DMA gather of ``rows`` width-``h`` edge windows via
+    :func:`dma_pipeline`: ``scratch[r] <- col_idx[win[base + r] : + h]``.
+    ``win_ref`` is the scalar-prefetched flat window-start array (SMEM),
+    ``base`` the first window of this grid step."""
+
+    def make_dmas(r):
+        return (pltpu.make_async_copy(
+            col_hbm.at[pl.ds(win_ref[base + r], h)],
+            scratch.at[r],
+            sem.at[r % 2],
+        ),)
+
+    dma_pipeline(rows, make_dmas)
+
+
+def vmem_bytes(
+    q_tile: int, k: int, k_out: int, *,
+    degree_cap: int, hub_split_degree: int = 0,
+) -> int:
+    """Per-grid-step VMEM of the HBM-resident push: frontier blocks +
+    gather scratch + outputs.  Independent of ``n`` and ``nnz``."""
+    h, s = verd_mod.resolve_hub_splits(degree_cap, hub_split_degree)
+    blocks = q_tile * k * 12 + q_tile * 4      # fv f32 + start/deg i32 + src
+    scratch = q_tile * k * s * h * 4           # gathered edge windows
+    return blocks + scratch + q_tile * k_out * 8
+
+
+def vmem_bytes_legacy(
+    q_tile: int, k: int, k_out: int, *,
+    n: int, m: int, degree_cap: int, hub_split_degree: int = 0,
+) -> int:
+    """What the pre-HBM-resident kernel held per step: the same tiles plus
+    the whole CSR (``row_ptr``/``out_deg``/``col_idx``) as resident
+    whole-array blocks — O(nnz) VMEM that made ``interpret=False``
+    impossible at scale."""
+    csr = (n + 1) * 4 + n * 4 + m * 4
+    return vmem_bytes(
+        q_tile, k, k_out,
+        degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+    ) + csr
+
+
+def _dma_gathered_push(
+    win_ref, fv_ref, start_ref, deg_ref, col_hbm, scratch, sem, *,
+    c: float, degree_cap: int, hub_split_degree: int, m: int,
 ):
-    # same array-level math as the jnp core op — single source of truth
-    cand_v, cand_i = verd_mod.gather_push_candidates(
-        fv_ref[...], fi_ref[...], src_ref[...],
-        row_ptr_ref[...], out_deg_ref[...], col_idx_ref[...],
+    """The gather half both kernel bodies share: DMA this grid step's edge
+    windows out of HBM and mask them into ``(push_v, nbrs)`` candidates.
+    Also returns the tile's ``(fv, deg)`` for the callers' epilogues
+    (dangling mass / bucketing)."""
+    i = pl.program_id(0)
+    q_tile, k = fv_ref.shape
+    h, s = verd_mod.resolve_hub_splits(degree_cap, hub_split_degree)
+    rows = q_tile * k * s
+    _dma_gather_windows(
+        col_hbm, win_ref, scratch, sem, rows=rows, h=h, base=i * rows
+    )
+    fv, start, deg = fv_ref[...], start_ref[...], deg_ref[...]
+    # recompute the (clipped) window starts for the masking math — the same
+    # pure function that produced the prefetched DMA addresses
+    windows = verd_mod.push_window_starts(
+        start, degree_cap=degree_cap, hub_split_degree=hub_split_degree, m=m
+    )
+    gathered = scratch[...].reshape(q_tile, k, s, h)
+    push_v, nbrs = verd_mod.masked_push_from_windows(
+        fv, deg, start, windows, gathered,
         c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
+    return fv, deg, push_v, nbrs
+
+
+def _frontier_push_kernel(
+    win_ref, fv_ref, start_ref, deg_ref, src_ref, col_hbm,
+    ov_ref, oi_ref, nbr_scratch, sem, *,
+    c: float, degree_cap: int, threshold: float, hub_split_degree: int,
+    m: int,
+):
+    fv, deg, push_v, nbrs = _dma_gathered_push(
+        win_ref, fv_ref, start_ref, deg_ref, col_hbm, nbr_scratch, sem,
+        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree, m=m,
+    )
+    dm = jnp.sum(jnp.where(deg == 0, fv, 0.0), axis=1)  # dangling mass
+    cand_v = jnp.concatenate([push_v, (1.0 - c) * dm[:, None]], axis=1)
+    cand_i = jnp.concatenate([nbrs, src_ref[...]], axis=1)
     ov, oi = frontier_mod.compact_arrays(
         cand_v, cand_i, ov_ref.shape[1], threshold=threshold
     )
@@ -83,40 +184,55 @@ def frontier_push(
     """Fused sparse push; Q must be a multiple of ``q_tile`` (see
     ``ops.frontier_push`` for the padding wrapper).  ``hub_split_degree``
     bounds the per-sub-slot gather width (ELL hub splitting) without
-    changing the result."""
+    changing the result.  Requires ``col_idx`` non-empty (the edgeless case
+    is the wrapper's jnp fallback)."""
     q, k = fv.shape
     assert fi.shape == (q, k) and sources.shape[0] == q
     assert q % q_tile == 0, (q, q_tile)
-    n1 = row_ptr.shape[0]
-    n = out_deg.shape[0]
     m = col_idx.shape[0]
+    degree_cap = min(degree_cap, max(m, 1))  # no row has more than m edges
+    h, s = verd_mod.resolve_hub_splits(degree_cap, hub_split_degree)
+    fi32 = fi.astype(jnp.int32)
+    # per-slot CSR offsets: two O(Q*K) gathers — row_ptr/out_deg themselves
+    # never enter the kernel
+    start = jnp.take(row_ptr, fi32).astype(jnp.int32)
+    deg = jnp.take(out_deg, fi32).astype(jnp.int32)
+    windows = verd_mod.push_window_starts(
+        start, degree_cap=degree_cap, hub_split_degree=hub_split_degree, m=m
+    ).reshape(-1)
     src2d = sources.reshape(q, 1).astype(jnp.int32)
-    grid = (q // q_tile,)
     kernel = functools.partial(
         _frontier_push_kernel, c=c, degree_cap=degree_cap,
-        threshold=threshold, hub_split_degree=hub_split_degree,
+        threshold=threshold, hub_split_degree=hub_split_degree, m=m,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # the flat window starts
+        grid=(q // q_tile,),
+        in_specs=[
+            pl.BlockSpec((q_tile, k), lambda i, w: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, w: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, w: (i, 0)),
+            pl.BlockSpec((q_tile, 1), lambda i, w: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # col_idx: HBM resident
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, k_out), lambda i, w: (i, 0)),
+            pl.BlockSpec((q_tile, k_out), lambda i, w: (i, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile * k * s, h), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
     )
     return pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, 1), lambda i: (i, 0)),
-            pl.BlockSpec((n1,), lambda i: (0,)),
-            pl.BlockSpec((n,), lambda i: (0,)),
-            pl.BlockSpec((m,), lambda i: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
-        ],
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((q, k_out), jnp.float32),
             jax.ShapeDtypeStruct((q, k_out), jnp.int32),
         ],
         interpret=interpret,
-    )(fv, fi, src2d, row_ptr, out_deg, col_idx)
+    )(windows, fv, start, deg, src2d, col_idx)
 
 
 # ---------------------------------------------------------------------------
@@ -125,16 +241,14 @@ def frontier_push(
 # ---------------------------------------------------------------------------
 
 def _sharded_push_kernel(
-    fv_ref, fi_ref, row_ptr_ref, col_idx_ref, ov_ref, oi_ref,
-    *, c: float, degree_cap: int, hub_split_degree: int, ep: int,
-    n_shard: int,
+    win_ref, fv_ref, start_ref, deg_ref, col_hbm, ov_ref, oi_ref,
+    nbr_scratch, sem, *,
+    c: float, degree_cap: int, hub_split_degree: int, ep: int,
+    n_shard: int, m: int,
 ):
-    fv, fi = fv_ref[...], fi_ref[...]
-    rp = row_ptr_ref[...]
-    local_deg = rp[1:] - rp[:-1]
-    push_v, nbrs = verd_mod.gather_push_edges(
-        fv, fi, jnp.take(rp, fi), jnp.take(local_deg, fi), col_idx_ref[...],
-        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+    _, _, push_v, nbrs = _dma_gathered_push(
+        win_ref, fv_ref, start_ref, deg_ref, col_hbm, nbr_scratch, sem,
+        c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree, m=m,
     )
     bv, bi = frontier_mod.bucket_by_owner(
         push_v, nbrs, ep, n_shard, ov_ref.shape[2]
@@ -167,39 +281,57 @@ def sharded_frontier_push(
 
     ``fv/fi f32|int32[Q, K]``: the shard's local frontier slice (indices are
     local row ids).  ``row_ptr int32[n_shard + 1]`` / ``col_idx int32[m]``:
-    the shard's CSR slab, destination ids global.  Emits the per-owner
-    top-``wire_k`` exchange buckets ``(vals f32[Q, ep, wire_k], idx
-    int32[Q, ep, wire_k])`` with owner-local indices — exactly what
-    ``all_to_all`` puts on the wire.  Dangling mass is the caller's
-    business (it needs a cross-shard psum).  Same grid/tiling contract as
-    :func:`frontier_push`; Q must be a multiple of ``q_tile``.
+    the shard's CSR slab, destination ids global.  ``row_ptr`` is consumed
+    outside the kernel (per-slot ``start``/``deg`` gathers + the
+    scalar-prefetched window starts); ``col_idx`` stays HBM resident and is
+    DMA-gathered per grid step.  Emits the per-owner top-``wire_k`` exchange
+    buckets ``(vals f32[Q, ep, wire_k], idx int32[Q, ep, wire_k])`` with
+    owner-local indices — exactly what ``all_to_all`` puts on the wire.
+    Dangling mass is the caller's business (it needs a cross-shard psum).
+    Same grid/tiling contract as :func:`frontier_push`; Q must be a multiple
+    of ``q_tile``.
     """
     q, k = fv.shape
     assert fi.shape == (q, k)
     assert q % q_tile == 0, (q, q_tile)
-    n1 = row_ptr.shape[0]
     m = col_idx.shape[0]
-    grid = (q // q_tile,)
+    degree_cap = min(degree_cap, max(m, 1))
+    h, s = verd_mod.resolve_hub_splits(degree_cap, hub_split_degree)
+    fi32 = fi.astype(jnp.int32)
+    local_deg = row_ptr[1:] - row_ptr[:-1]
+    start = jnp.take(row_ptr, fi32).astype(jnp.int32)
+    deg = jnp.take(local_deg, fi32).astype(jnp.int32)
+    windows = verd_mod.push_window_starts(
+        start, degree_cap=degree_cap, hub_split_degree=hub_split_degree, m=m
+    ).reshape(-1)
     kernel = functools.partial(
         _sharded_push_kernel, c=c, degree_cap=degree_cap,
-        hub_split_degree=hub_split_degree, ep=ep, n_shard=n_shard,
+        hub_split_degree=hub_split_degree, ep=ep, n_shard=n_shard, m=m,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(q // q_tile,),
+        in_specs=[
+            pl.BlockSpec((q_tile, k), lambda i, w: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, w: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, w: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # col_idx: HBM resident
+        ],
+        out_specs=[
+            pl.BlockSpec((q_tile, ep, wire_k), lambda i, w: (i, 0, 0)),
+            pl.BlockSpec((q_tile, ep, wire_k), lambda i, w: (i, 0, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile * k * s, h), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
     )
     return pl.pallas_call(
         kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
-            pl.BlockSpec((n1,), lambda i: (0,)),
-            pl.BlockSpec((m,), lambda i: (0,)),
-        ],
-        out_specs=[
-            pl.BlockSpec((q_tile, ep, wire_k), lambda i: (i, 0, 0)),
-            pl.BlockSpec((q_tile, ep, wire_k), lambda i: (i, 0, 0)),
-        ],
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((q, ep, wire_k), jnp.float32),
             jax.ShapeDtypeStruct((q, ep, wire_k), jnp.int32),
         ],
         interpret=interpret,
-    )(fv, fi, row_ptr, col_idx)
+    )(windows, fv, start, deg, col_idx)

@@ -20,9 +20,11 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import frontier as frontier_mod
 from repro.core import verd as verd_mod
+from repro.kernels.frontier_push import dma_pipeline
 
 
 def _index_combine_kernel(s_ref, f_ref, vals_ref, idx_ref, o_ref):
@@ -85,16 +87,43 @@ def index_combine(
 
 # ---------------------------------------------------------------------------
 # Sparse-frontier variant: contracts f[Q, K] against only the K touched index
-# rows and emits fixed-width top-k_out answers — no [q_tile, n] slab at all.
+# rows — DMA-gathered from the HBM-resident index, no [q_tile, n] slab and no
+# whole-array index blocks anywhere.
 # ---------------------------------------------------------------------------
 
 def _index_combine_sparse_kernel(
-    sv_ref, si_ref, fv_ref, fi_ref, vals_ref, idx_ref, ov_ref, oi_ref
+    fi_ref, sv_ref, si_ref, fv_ref, vals_hbm, idx_hbm, ov_ref, oi_ref,
+    vals_scratch, idx_scratch, sem,
 ):
+    i = pl.program_id(0)
+    q_tile, k = fv_ref.shape
+    rows = q_tile * k
+
+    # DMA the K touched index rows of this tile out of HBM; fi_ref is the
+    # scalar-prefetched flat row-id array (SMEM)
+    def make_dmas(r):
+        row = fi_ref[i * rows + r]
+        return (
+            pltpu.make_async_copy(
+                vals_hbm.at[pl.ds(row, 1), :],
+                vals_scratch.at[pl.ds(r, 1), :],
+                sem.at[0, r % 2],
+            ),
+            pltpu.make_async_copy(
+                idx_hbm.at[pl.ds(row, 1), :],
+                idx_scratch.at[pl.ds(r, 1), :],
+                sem.at[1, r % 2],
+            ),
+        )
+
+    dma_pipeline(rows, make_dmas)
+
+    l = vals_scratch.shape[1]
+    iv = vals_scratch[...].reshape(q_tile, k, l)
+    ii = idx_scratch[...].reshape(q_tile, k, l)
     # same array-level math as the jnp core op — single source of truth
-    cand_v, cand_i = verd_mod.gather_combine_candidates(
-        sv_ref[...], si_ref[...], fv_ref[...], fi_ref[...],
-        vals_ref[...], idx_ref[...],
+    cand_v, cand_i = verd_mod.combine_candidates_from_rows(
+        sv_ref[...], si_ref[...], fv_ref[...], iv, ii
     )
     ov, oi = frontier_mod.compact_arrays(cand_v, cand_i, ov_ref.shape[1])
     ov_ref[...] = ov
@@ -117,34 +146,58 @@ def index_combine_sparse(
     interpret: bool = True,
 ) -> tuple[jax.Array, jax.Array]:
     """Fused sparse combine + top-k; Q must be a multiple of ``q_tile``
-    (``ops.index_combine_sparse`` pads).  The index rides along as
-    whole-array blocks — on a real TPU the ``K`` touched rows would be
-    DMA-gathered from HBM instead; interpret mode is the validated path."""
+    (``ops.index_combine_sparse`` pads).  The ``[n, L]`` index arrays stay
+    in ``pltpu.ANY`` (HBM); the ``K`` touched rows per tile are
+    scalar-prefetch addressed and DMA-gathered into VMEM scratch, so VMEM
+    per step is O(q_tile * K * L) — independent of ``n``."""
     q, k = fv.shape
     s_w = sv.shape[1]
     n, l = vals.shape
     assert si.shape == (q, s_w) and fi.shape == (q, k)
     assert idx.shape == (n, l)
     assert q % q_tile == 0, (q, q_tile)
-    grid = (q // q_tile,)
-    return pl.pallas_call(
-        _index_combine_sparse_kernel,
-        grid=grid,
+    fi_flat = jnp.clip(fi.astype(jnp.int32), 0, n - 1).reshape(-1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # the flat touched-row ids
+        grid=(q // q_tile,),
         in_specs=[
-            pl.BlockSpec((q_tile, s_w), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, s_w), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, k), lambda i: (i, 0)),
-            pl.BlockSpec((n, l), lambda i: (0, 0)),
-            pl.BlockSpec((n, l), lambda i: (0, 0)),
+            pl.BlockSpec((q_tile, s_w), lambda i, r: (i, 0)),
+            pl.BlockSpec((q_tile, s_w), lambda i, r: (i, 0)),
+            pl.BlockSpec((q_tile, k), lambda i, r: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # index values: HBM
+            pl.BlockSpec(memory_space=pltpu.ANY),   # index columns: HBM
         ],
         out_specs=[
-            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
-            pl.BlockSpec((q_tile, k_out), lambda i: (i, 0)),
+            pl.BlockSpec((q_tile, k_out), lambda i, r: (i, 0)),
+            pl.BlockSpec((q_tile, k_out), lambda i, r: (i, 0)),
         ],
+        scratch_shapes=[
+            pltpu.VMEM((q_tile * k, l), vals.dtype),
+            pltpu.VMEM((q_tile * k, l), jnp.int32),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+    )
+    return pl.pallas_call(
+        _index_combine_sparse_kernel,
+        grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((q, k_out), jnp.float32),
             jax.ShapeDtypeStruct((q, k_out), jnp.int32),
         ],
         interpret=interpret,
-    )(sv, si, fv, fi, vals, idx)
+    )(fi_flat, sv, si, fv, vals, idx)
+
+
+def sparse_vmem_bytes(q_tile: int, k: int, s_w: int, l: int, k_out: int) -> int:
+    """Per-grid-step VMEM of the HBM-resident sparse combine."""
+    blocks = q_tile * (2 * s_w * 4 + k * 4)    # sv/si + fv tiles
+    scratch = q_tile * k * l * 8               # gathered vals + idx rows
+    return blocks + scratch + q_tile * k_out * 8
+
+
+def sparse_vmem_bytes_legacy(
+    q_tile: int, k: int, s_w: int, l: int, k_out: int, *, n: int
+) -> int:
+    """Pre-HBM-resident accounting: the same tiles plus both whole ``[n,
+    L]`` index arrays resident per step."""
+    return sparse_vmem_bytes(q_tile, k, s_w, l, k_out) + 2 * n * l * 4

@@ -18,6 +18,7 @@ the validation mode for this container; on TPU pass ``interpret=False``.
 
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -32,6 +33,23 @@ from repro.kernels import ell_spmm as _ell
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import frontier_push as _push
 from repro.kernels import index_combine as _comb
+
+
+# Trace-time invocation counts per wrapper: incremented when a wrapper body
+# runs, i.e. once per jit trace (cached re-executions of a traced graph do
+# not re-count).  "Did this path go through the fused kernel?" is exactly a
+# trace-time question, which is what the engine-routing regression in
+# tests/test_parity.py asserts.
+_invocations: collections.Counter = collections.Counter()
+
+
+def kernel_invocations() -> dict:
+    """Snapshot of the per-wrapper trace-time invocation counts."""
+    return dict(_invocations)
+
+
+def reset_kernel_invocations() -> None:
+    _invocations.clear()
 
 
 def _pad_to(x: jax.Array, axis: int, multiple: int, value=0):
@@ -123,6 +141,7 @@ def frontier_push(
         return _frontier.compact(
             cv, ci, k_out, graph.n, threshold=threshold
         )
+    _invocations["frontier_push"] += 1  # counted only when the kernel runs
     q = f.values.shape[0]
     fv = _pad_to(f.values, 0, q_tile)
     fi = _pad_to(f.indices, 0, q_tile)
@@ -160,6 +179,7 @@ def sharded_frontier_push(
     returns ``(vals f32[Q, ep, wire_k], idx int32[Q, ep, wire_k])`` with
     owner-local indices.
     """
+    _invocations["sharded_frontier_push"] += 1
     q = fv.shape[0]
     fv_p = _pad_to(fv, 0, q_tile)
     fi_p = _pad_to(fi, 0, q_tile)
@@ -186,6 +206,7 @@ def index_combine_sparse(
 
     Drop-in for ``verd.combine_with_index_sparse`` at ``out_k=k_out``.
     """
+    _invocations["index_combine_sparse"] += 1
     q = f.values.shape[0]
     sv = _pad_to(s.values, 0, q_tile)
     si = _pad_to(s.indices, 0, q_tile)

@@ -26,6 +26,19 @@ def densify_rows(values, indices, n):
     return out
 
 
+def pytest_collection_modifyitems(config, items):
+    """Auto-skip ``tpu``-marked tests off-TPU: they run the Pallas kernels
+    with ``interpret=False``, which only a real TPU backend can compile."""
+    if jax.default_backend() == "tpu":
+        return
+    skip = pytest.mark.skip(
+        reason="needs a real TPU backend (interpret=False kernels)"
+    )
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

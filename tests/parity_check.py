@@ -8,7 +8,10 @@ acceptance gate's "4-shard CPU mesh" — and checks the three-path matrix
   cover the frontier support (incl. hub-split variants),
 * both == the dense oracle at covering widths,
 * truncated widths only *drop* mass (elementwise monotone) and the L1 drift
-  is bounded by the dropped mass.
+  is bounded by the dropped mass,
+* the sparse exchange actually routed through the fused Pallas wrapper
+  ``kernels.ops.sharded_frontier_push`` (trace-time invocation counter) —
+  not a duplicated jnp path.
 
 Exits nonzero on mismatch; tests/test_parity.py asserts the return code.
 """
@@ -81,13 +84,26 @@ def main():
     dense_ans[:, : g.n] = np.asarray(verd_mod.verd_query(
         g, sources, idx_small, t=cfg.t_iterations))
 
-    # path 3: distributed sparse exchange, with and without hub splitting
+    # path 3: distributed sparse exchange, with and without hub splitting;
+    # the 4-shard run must invoke the fused kernel wrapper once per VERD
+    # iteration (trace time), not fall back to a jnp push
+    from repro.kernels import ops as kernel_ops
+
+    kernel_ops.reset_kernel_invocations()
     got = run_distributed(cfg, slabs, sources, ivals, iidx, mesh)
+    pushes = kernel_ops.kernel_invocations().get("sharded_frontier_push", 0)
+    assert pushes == cfg.t_iterations, (
+        f"engine bypassed the fused kernel wrapper: {pushes} invocations, "
+        f"expected {cfg.t_iterations}"
+    )
     l1 = np.abs(got - single_sparse).sum(axis=1)
     assert l1.max() <= 1e-5, f"dist-sparse vs single-sparse L1={l1.max()}"
     l1d = np.abs(got - dense_ans).sum(axis=1)
     assert l1d.max() <= 1e-5, f"dist-sparse vs dense oracle L1={l1d.max()}"
-    print(f"4-shard sparse exchange parity OK (L1={l1.max():.2e})")
+    print(
+        f"4-shard sparse exchange parity OK (L1={l1.max():.2e}, "
+        f"fused-kernel pushes={pushes})"
+    )
 
     for h in (1, 3):
         cfg_h = DistConfig(frontier_k=N_PAD, hub_split_degree=h, **base)

@@ -257,8 +257,11 @@ def test_engine_auto_rule(graph, index):
 
 
 def test_engine_auto_avoids_hub_graphs():
-    """Hub graphs must stay dense: the [Q, K, degree_cap] gather would
-    dwarf the [Q, n] state sparse is meant to replace."""
+    """Unsplit hub graphs must stay dense: the [Q, K, degree_cap] gather
+    would dwarf the [Q, n] state sparse is meant to replace.  (With
+    ``hub_split_degree`` set the guard relaxes to the split width — see
+    ``tests/test_golden_auto.py::GOLDEN_SPLIT`` — backed by the streamed
+    push below.)"""
     n = AUTO_SPARSE_MIN_N
     hub = synthetic.star(n)  # max out-degree = n - 1
     eng = BatchQueryEngine(hub, None, QueryConfig(mode="verd"))
@@ -267,6 +270,90 @@ def test_engine_auto_avoids_hub_graphs():
     flat = synthetic.cycle(n)  # max out-degree 1: sparse is safe
     eng2 = BatchQueryEngine(flat, None, QueryConfig(mode="verd"))
     assert eng2.uses_sparse_path()
+
+
+@pytest.mark.parametrize("hub_split_degree,threshold", [
+    (0, 0.0), (3, 0.0), (0, 1e-3),
+])
+def test_streamed_push_equals_one_shot(graph, hub_split_degree, threshold):
+    """sparse_push_compact with a tiny stream target (many slot-chunk
+    folds) must match the one-shot gather+compact at covering k_out."""
+    rng = np.random.default_rng(4)
+    q, k = 3, 10
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, graph.n, (q, k)), jnp.int32)
+    srcs = jnp.asarray(rng.integers(0, graph.n, q), jnp.int32)
+    cap = verd_mod.resolve_degree_cap(graph)
+    kw = dict(
+        c=0.15, degree_cap=cap, k_out=graph.n,
+        hub_split_degree=hub_split_degree, threshold=threshold,
+    )
+    one_shot = verd_mod.sparse_push_compact(graph, fv, fi, srcs, **kw)
+    streamed = verd_mod.sparse_push_compact(
+        graph, fv, fi, srcs, stream_width=1, **kw
+    )
+    np.testing.assert_allclose(
+        np.asarray(streamed.densify()), np.asarray(one_shot.densify()),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+def test_streamed_push_truncation_is_monotone(graph):
+    """Mid-stream folds only drop mass: a truncated k_out under-counts
+    elementwise vs the covering run, drift bounded by the dropped mass."""
+    rng = np.random.default_rng(5)
+    q, k = 2, 12
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, graph.n, (q, k)), jnp.int32)
+    srcs = jnp.asarray(rng.integers(0, graph.n, q), jnp.int32)
+    cap = verd_mod.resolve_degree_cap(graph)
+    kw = dict(c=0.15, degree_cap=cap, stream_width=1)
+    full = verd_mod.sparse_push_compact(
+        graph, fv, fi, srcs, k_out=graph.n, **kw
+    ).densify()
+    trunc = verd_mod.sparse_push_compact(
+        graph, fv, fi, srcs, k_out=4, **kw
+    ).densify()
+    full, trunc = np.asarray(full), np.asarray(trunc)
+    assert (trunc <= full + 1e-6).all()
+    dropped = full.sum(axis=1) - trunc.sum(axis=1)
+    l1 = np.abs(full - trunc).sum(axis=1)
+    assert (l1 <= dropped + 1e-5).all()
+
+
+def test_hub_graph_sparse_query_streams_bounded(monkeypatch):
+    """The relaxed hub routing end to end: a star-hub graph with
+    hub_split_degree set routes sparse, the push streams (never the
+    [Q, K*degree_cap] one-shot tensor), and the answers match dense."""
+    n = 4096
+    hub = synthetic.star(n)                  # one vertex with n-1 out-edges
+    srcs = jnp.asarray([0, 1, 17], jnp.int32)
+    cfg = QueryConfig(
+        mode="verd", top_k=8, frontier_k=16, frontier_path="sparse",
+        hub_split_degree=64,
+    )
+    eng = BatchQueryEngine(hub, None, cfg)
+    # guard the guard: one-shot would be K*cap ~ 65k wide; the streamed
+    # fold keeps live width at the stream target
+    seen = []
+    orig = verd_mod.gather_push_edges
+
+    def spy(fv, fi, *args, **kwargs):
+        out = orig(fv, fi, *args, **kwargs)
+        seen.append(out[0].shape[1])
+        return out
+
+    monkeypatch.setattr(verd_mod, "gather_push_edges", spy)
+    vals, idx = eng.query_topk(srcs)
+    assert seen, "sparse push never ran"
+    assert max(seen) < 16 * eng.degree_cap(), seen  # chunked, not one-shot
+    dense_eng = BatchQueryEngine(
+        hub, None, QueryConfig(mode="verd", top_k=8, frontier_path="dense")
+    )
+    dv, di = dense_eng.query_topk(srcs)
+    np.testing.assert_allclose(
+        np.asarray(vals), np.asarray(dv), rtol=1e-5, atol=1e-6
+    )
 
 
 def test_engine_auto_k_covers_expected_support():

@@ -34,10 +34,17 @@ def selector_graph(n: int, mean_deg: int, hub_deg: int = 0) -> Graph:
 # (n, mean_deg, hub_deg) -> (path, chosen K) at the default QueryConfig
 # (mode=verd, t=2, top_k=200).  Regenerate deliberately when retuning:
 #   PYTHONPATH=src python -c "from tests.test_golden_auto import dump; dump()"
+#
+# Retuned for the HBM-resident kernel PR: AUTO_SPARSE_MIN_N dropped
+# 1<<15 -> 1<<14 (the recorded bench_query sweep shows the sparse path
+# winning 6-8x at n = 16k-20k, docs/query_path.md), which flips the
+# n=16_384 row sparse while n=8_192 stays dense.
 GOLDEN = {
     (1_024, 4, 0): ("dense", 800),
     (1_024, 16, 0): ("dense", 800),
     (1_024, 64, 0): ("dense", 1_024),
+    (8_192, 4, 0): ("dense", 800),           # below the retuned MIN_N
+    (16_384, 4, 0): ("sparse", 800),         # newly sparse at MIN_N = 1<<14
     (32_768, 4, 0): ("sparse", 800),
     (32_768, 16, 0): ("sparse", 800),
     (32_768, 64, 0): ("dense", 4_096),       # K*cap blows past n: stay dense
@@ -48,6 +55,18 @@ GOLDEN = {
     (262_144, 4, 131_072): ("dense", 800),
 }
 
+# Relaxed hub guard: with ELL splitting on (hub_split_degree = h > 0) the
+# selector bounds the gather term by h instead of the max out-degree, so a
+# hub graph routes sparse as soon as K * h fits under n — the kernels'
+# per-step VMEM is O(q_tile * K * h) regardless of hub size.  Keyed
+# (n, mean_deg, hub_deg, hub_split_degree).
+GOLDEN_SPLIT = {
+    (32_768, 4, 16_384, 32): ("sparse", 800),   # K*h = 25_600 <= n
+    (32_768, 4, 16_384, 64): ("dense", 800),    # K*h = 51_200 > n: stay dense
+    (262_144, 4, 131_072, 64): ("sparse", 800), # flipped by the relaxation
+    (32_768, 64, 0, 8): ("sparse", 4_096),      # K*h = n exactly: boundary
+}
+
 
 @pytest.mark.parametrize("point,want", sorted(GOLDEN.items()))
 def test_auto_selector_golden(point, want):
@@ -56,6 +75,30 @@ def test_auto_selector_golden(point, want):
     eng = BatchQueryEngine(g, None, QueryConfig(mode="verd"))
     got = ("sparse" if eng.uses_sparse_path() else "dense", eng.frontier_k)
     assert got == want, f"selector drifted at {point}: {got} != {want}"
+
+
+@pytest.mark.parametrize("point,want", sorted(GOLDEN_SPLIT.items()))
+def test_auto_selector_golden_hub_split(point, want):
+    n, mean_deg, hub_deg, split = point
+    g = selector_graph(n, mean_deg, hub_deg)
+    eng = BatchQueryEngine(
+        g, None, QueryConfig(mode="verd", hub_split_degree=split)
+    )
+    got = ("sparse" if eng.uses_sparse_path() else "dense", eng.frontier_k)
+    assert got == want, f"selector drifted at {point}: {got} != {want}"
+
+
+def test_hub_split_relaxes_guard():
+    """The acceptance behavior in one line: the same hub-heavy graph routes
+    dense unsplit and sparse once a split width bounds the gather axis."""
+    g = selector_graph(262_144, 4, 131_072)
+    dense_eng = BatchQueryEngine(g, None, QueryConfig(mode="verd"))
+    split_eng = BatchQueryEngine(
+        g, None, QueryConfig(mode="verd", hub_split_degree=64)
+    )
+    assert not dense_eng.uses_sparse_path()
+    assert split_eng.uses_sparse_path()
+    assert split_eng.effective_gather_width() == 64
 
 
 @pytest.mark.parametrize("q", [1, 64, 4096])
@@ -69,8 +112,9 @@ def test_auto_selector_is_batch_size_invariant(q):
 
 
 def test_auto_floor_is_pinned():
-    """AUTO_SPARSE_MIN_N itself is part of the golden surface."""
-    assert AUTO_SPARSE_MIN_N == 1 << 15
+    """AUTO_SPARSE_MIN_N itself is part of the golden surface (retuned
+    1<<15 -> 1<<14 with the HBM-resident kernels, see docs/query_path.md)."""
+    assert AUTO_SPARSE_MIN_N == 1 << 14
 
 
 def dump():  # pragma: no cover - regeneration helper
@@ -79,3 +123,13 @@ def dump():  # pragma: no cover - regeneration helper
         eng = BatchQueryEngine(g, None, QueryConfig(mode="verd"))
         path = "sparse" if eng.uses_sparse_path() else "dense"
         print(f"    ({n:_}, {d}, {h:_}): ({path!r}, {eng.frontier_k:_}),")
+    for (n, d, h, split) in sorted(GOLDEN_SPLIT):
+        g = selector_graph(n, d, h)
+        eng = BatchQueryEngine(
+            g, None, QueryConfig(mode="verd", hub_split_degree=split)
+        )
+        path = "sparse" if eng.uses_sparse_path() else "dense"
+        print(
+            f"    ({n:_}, {d}, {h:_}, {split}): "
+            f"({path!r}, {eng.frontier_k:_}),"
+        )

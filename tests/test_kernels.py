@@ -1,4 +1,8 @@
-"""Pallas-kernel validation: interpret-mode sweeps vs pure-jnp oracles."""
+"""Pallas-kernel validation: interpret-mode sweeps vs pure-jnp oracles,
+plus the HBM-residency kernel contract (no CSR/index whole-array VMEM
+blocks; boundary cases the resident-block kernels never exercised)."""
+
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -7,6 +11,8 @@ import pytest
 
 from repro.core.graph import push_forward
 from repro.graphs import formats, synthetic
+from repro.kernels import frontier_push as push_mod
+from repro.kernels import index_combine as comb_mod
 from repro.kernels import ops, ref
 from repro.kernels.ell_spmm import ell_spmm, vmem_bytes
 from repro.kernels.embedding_bag import embedding_bag as bag_kernel
@@ -334,4 +340,493 @@ def test_embedding_bag_wrapper_unaligned(rng):
     assert got.shape == (b, d)
     np.testing.assert_allclose(
         np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# HBM-residency kernel contract (the DMA-gather rewrite)
+#
+# Two halves: (a) a mechanical memory contract — tracing each DMA kernel
+# and asserting that no CSR/index array enters as a whole-array VMEM block
+# (only `pltpu.ANY`/HBM refs + tile-sized VMEM blocks), (b) the boundary
+# cases the old resident-block kernels never exercised: ragged last q_tile,
+# k_out wider than the candidate set, empty frontiers, all-dangling rows,
+# single-row grids.
+# ---------------------------------------------------------------------------
+
+def _pallas_block_specs(fn, *args, **kwargs):
+    """Trace ``fn`` and collect ``(block_shape, memory_space)`` for every
+    block mapping of every ``pallas_call`` in its jaxpr (pjit bodies
+    included).  ``memory_space`` is ``'any'`` for HBM-resident refs and
+    ``'None'`` for default (VMEM) blocks."""
+    import jax.core as jcore
+
+    jaxpr = jax.make_jaxpr(functools.partial(fn, **kwargs))(*args)
+    found = []
+
+    def walk(jx):
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                for bm in eqn.params["grid_mapping"].block_mappings:
+                    aval = bm.transformed_block_aval
+                    found.append(
+                        (tuple(bm.block_shape), str(aval.memory_space))
+                    )
+            for v in eqn.params.values():
+                vs = v if isinstance(v, (tuple, list)) else (v,)
+                for u in vs:
+                    if isinstance(u, jcore.ClosedJaxpr):
+                        walk(u.jaxpr)
+                    elif isinstance(u, jcore.Jaxpr):
+                        walk(u)
+
+    walk(jaxpr.jaxpr)
+    assert found, "no pallas_call found in the trace"
+    return found
+
+
+def _assert_hbm_contract(blocks, *, hbm_shapes, vmem_budget):
+    """Every listed array must appear as an ANY/HBM ref; every VMEM block
+    must stay under the tile budget (i.e. independent of n and nnz)."""
+    any_shapes = {shape for shape, space in blocks if space == "any"}
+    for shape in hbm_shapes:
+        assert shape in any_shapes, (shape, blocks)
+    for shape, space in blocks:
+        if space != "any":
+            assert int(np.prod(shape)) <= vmem_budget, (shape, blocks)
+
+
+def _contract_fixture(rng, n=2048, avg_deg=6.0, q=16, k=8):
+    from repro.core import verd as verd_mod
+
+    g = synthetic.erdos_renyi(n, avg_deg, seed=7)
+    cap = verd_mod.resolve_degree_cap(g)
+    srcs = jnp.asarray(rng.integers(0, n, q), jnp.int32)
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, n, (q, k)), jnp.int32)
+    return g, srcs, cap, fv, fi
+
+
+@pytest.mark.parametrize("hub_split_degree", [0, 2])
+def test_frontier_push_memory_contract(rng, hub_split_degree):
+    """CSR arrays never enter the kernel as VMEM blocks: col_idx is an
+    ANY/HBM ref, row_ptr/out_deg only feed O(Q*K) offset gathers outside,
+    and every VMEM block is tile-sized (independent of n and m)."""
+    from repro.core import verd as verd_mod
+
+    g, srcs, cap, fv, fi = _contract_fixture(rng)
+    q_tile, k_out = 8, 16
+    blocks = _pallas_block_specs(
+        push_mod.frontier_push, fv, fi, srcs,
+        g.row_ptr, g.out_deg, g.col_idx,
+        c=0.15, degree_cap=cap, k_out=k_out, q_tile=q_tile,
+        hub_split_degree=hub_split_degree, interpret=True,
+    )
+    h, s = verd_mod.resolve_hub_splits(cap, hub_split_degree)
+    budget = q_tile * fv.shape[1] * s * h + q_tile * max(fv.shape[1], k_out)
+    assert budget < g.m and budget < g.n  # the assertion below is meaningful
+    _assert_hbm_contract(
+        blocks, hbm_shapes={(g.m,)}, vmem_budget=budget
+    )
+    # and the CSR arrays specifically never appear as VMEM blocks
+    for csr_shape in [(g.n + 1,), (g.n,), (g.m,)]:
+        assert all(
+            space == "any" for shape, space in blocks if shape == csr_shape
+        )
+
+
+def test_sharded_push_memory_contract(rng):
+    from repro.core import verd as verd_mod
+    from repro.core.distributed_engine import DistConfig, build_sharded_graph
+
+    g, _, cap, fv, fi = _contract_fixture(rng)
+    cfg = DistConfig(n=2048, ep=2, degree_cap=cap)
+    slabs = build_sharded_graph(g, cfg)
+    ns = cfg.n_shard
+    fi_local = jnp.clip(fi, 0, ns - 1)
+    q_tile, wire_k = 4, 8
+    m_shard = slabs.col_idx.shape[1]
+    blocks = _pallas_block_specs(
+        push_mod.sharded_frontier_push, fv, fi_local,
+        slabs.row_ptr[0], slabs.col_idx[0],
+        c=0.15, degree_cap=cap, ep=2, n_shard=ns, wire_k=wire_k,
+        q_tile=q_tile, interpret=True,
+    )
+    h, s = verd_mod.resolve_hub_splits(cap, 0)
+    budget = q_tile * fv.shape[1] * s * h + q_tile * 2 * wire_k
+    assert budget < m_shard and budget < ns
+    _assert_hbm_contract(blocks, hbm_shapes={(m_shard,)}, vmem_budget=budget)
+
+
+def test_index_combine_sparse_memory_contract(rng):
+    n, l, q, k, s_w = 600, 16, 16, 8, 8
+    vals = jnp.asarray(rng.random((n, l)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (n, l)), jnp.int32)
+    sv = jnp.asarray(rng.random((q, s_w)), jnp.float32)
+    si = jnp.asarray(rng.integers(0, n, (q, s_w)), jnp.int32)
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, n, (q, k)), jnp.int32)
+    q_tile, k_out = 8, 16
+    blocks = _pallas_block_specs(
+        comb_mod.index_combine_sparse, sv, si, fv, fi, vals, idx,
+        k_out=k_out, q_tile=q_tile, interpret=True,
+    )
+    budget = q_tile * k * l + q_tile * max(s_w, k, k_out) * 2
+    assert budget < n * l
+    _assert_hbm_contract(blocks, hbm_shapes={(n, l)}, vmem_budget=budget)
+    # both [n, L] index arrays must be HBM refs
+    assert sum(
+        1 for shape, space in blocks if shape == (n, l) and space == "any"
+    ) == 2
+
+
+# -- boundary cases vs the dense oracles ------------------------------------
+
+def _push_vs_ref(f0, g, srcs, *, k_out, q_tile=4, threshold=0.0, c=0.15,
+                 hub_split_degree=0):
+    from repro.core import frontier as F
+    from repro.core import verd as verd_mod
+
+    cap = verd_mod.resolve_degree_cap(g)
+    got = ops.frontier_push(
+        f0, g, srcs, c=c, degree_cap=cap, k_out=k_out, q_tile=q_tile,
+        threshold=threshold, hub_split_degree=hub_split_degree,
+        interpret=True,
+    )
+    rv, ri = ref.frontier_push_ref(
+        f0.values, f0.indices, srcs, g.row_ptr, g.out_deg, g.col_idx,
+        c=c, degree_cap=cap, k_out=k_out, threshold=threshold,
+    )
+    want = F.SparseFrontier(values=rv, indices=ri, k=k_out, n=g.n)
+    np.testing.assert_allclose(
+        np.asarray(got.densify()), np.asarray(want.densify()),
+        rtol=1e-5, atol=1e-6,
+    )
+    return got
+
+
+@pytest.mark.parametrize("q", [1, 3, 5, 7])
+def test_frontier_push_ragged_last_tile(q, rng):
+    """Q not a multiple of q_tile: the wrapper pads, pad rows stay empty."""
+    from repro.core import frontier as F
+
+    g = synthetic.erdos_renyi(60, 4.0, seed=11)
+    srcs = jnp.asarray(rng.integers(0, g.n, q), jnp.int32)
+    f0 = F.from_sources(srcs, g.n)
+    got = _push_vs_ref(f0, g, srcs, k_out=12, q_tile=4)
+    assert got.values.shape == (q, 12)
+
+
+def test_frontier_push_k_out_wider_than_candidates(rng):
+    """k_out beyond the candidate width: right-padded with empty slots."""
+    from repro.core import frontier as F
+
+    g = synthetic.erdos_renyi(30, 3.0, seed=2)
+    srcs = jnp.asarray(rng.integers(0, g.n, 4), jnp.int32)
+    f0 = F.from_sources(srcs, g.n)  # width-1 frontier: few candidates
+    got = _push_vs_ref(f0, g, srcs, k_out=g.n, q_tile=4)
+    # the padded tail obeys the empty-slot convention (0.0 at index 0)
+    tail_mask = np.asarray(got.values) == 0
+    assert (np.asarray(got.indices)[tail_mask] == 0).all()
+
+
+def test_frontier_push_empty_frontier(rng):
+    """All-zero frontier rows push nothing — not even dangling mass."""
+    from repro.core import frontier as F
+
+    g = synthetic.erdos_renyi(40, 4.0, seed=3)
+    q, k = 5, 6
+    f0 = F.SparseFrontier(
+        values=jnp.zeros((q, k), jnp.float32),
+        indices=jnp.zeros((q, k), jnp.int32), k=k, n=g.n,
+    )
+    srcs = jnp.asarray(rng.integers(0, g.n, q), jnp.int32)
+    got = _push_vs_ref(f0, g, srcs, k_out=8)
+    assert float(jnp.abs(got.values).max()) == 0.0
+    assert int(jnp.abs(got.indices).max()) == 0
+
+
+def test_frontier_push_all_dangling_rows(rng):
+    """Frontier entirely on dangling vertices: every row's mass returns to
+    its source as one (1-c)-weighted entry."""
+    from repro.core import frontier as F
+
+    # vertices 0..3 have edges; 4..9 are dangling
+    src_e = np.array([0, 0, 1, 2, 3], np.int32)
+    dst_e = np.array([1, 2, 3, 0, 1], np.int32)
+    from repro.core.graph import Graph
+
+    g = Graph.from_edges(src_e, dst_e, n=10)
+    q = 3
+    srcs = jnp.asarray([4, 5, 6], jnp.int32)
+    fi = jnp.asarray(rng.integers(4, 10, (q, 4)), jnp.int32)
+    fv = jnp.asarray(rng.random((q, 4)), jnp.float32)
+    f0 = F.SparseFrontier(values=fv, indices=fi, k=4, n=g.n)
+    got = _push_vs_ref(f0, g, srcs, k_out=6)
+    dense = np.asarray(got.densify())
+    want = np.zeros_like(dense)
+    want[np.arange(q), np.asarray(srcs)] = 0.85 * np.asarray(fv).sum(axis=1)
+    np.testing.assert_allclose(dense, want, rtol=1e-5, atol=1e-6)
+
+
+def test_frontier_push_single_row_grid(rng):
+    """Q == q_tile == 1: a one-step grid with a one-query tile."""
+    from repro.core import frontier as F
+
+    g = synthetic.erdos_renyi(50, 4.0, seed=5)
+    srcs = jnp.asarray([7], jnp.int32)
+    f0 = F.from_sources(srcs, g.n)
+    got = _push_vs_ref(f0, g, srcs, k_out=10, q_tile=1)
+    assert got.values.shape == (1, 10)
+
+
+def test_sharded_push_ragged_and_empty(rng):
+    """Sharded push: ragged Q + an all-zero frontier row in the same run."""
+    from repro.core import verd as verd_mod
+    from repro.core.distributed_engine import DistConfig, build_sharded_graph
+
+    g = synthetic.erdos_renyi(60, 4.0, seed=11)
+    cap = verd_mod.resolve_degree_cap(g)
+    cfg = DistConfig(n=64, ep=2, degree_cap=cap)
+    slabs = build_sharded_graph(g, cfg)
+    ns = cfg.n_shard
+    q, k = 5, 8  # ragged vs q_tile=4
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32).at[2].set(0.0)
+    fi = jnp.asarray(rng.integers(0, ns, (q, k)), jnp.int32)
+    got_v, got_i = ops.sharded_frontier_push(
+        fv, fi, slabs.row_ptr[0], slabs.col_idx[0],
+        c=0.15, degree_cap=cap, ep=2, n_shard=ns, wire_k=ns,
+        q_tile=4, interpret=True,
+    )
+    ref_v, ref_i = ref.sharded_push_ref(
+        fv, fi, slabs.row_ptr[0], slabs.col_idx[0],
+        c=0.15, ep=2, n_shard=ns, wire_k=ns,
+    )
+    np.testing.assert_allclose(
+        _dens_buckets(got_v, got_i, 2, ns),
+        _dens_buckets(ref_v, ref_i, 2, ns),
+        rtol=1e-5, atol=1e-6,
+    )
+    assert got_v.shape == (q, 2, ns)
+    assert float(jnp.abs(got_v[2]).max()) == 0.0  # empty row stays empty
+
+
+def test_sharded_push_wire_k_above_owner_support(rng):
+    """wire_k > n_shard: buckets are right-padded, never truncated."""
+    from repro.core import verd as verd_mod
+    from repro.core.distributed_engine import DistConfig, build_sharded_graph
+
+    g = synthetic.erdos_renyi(24, 3.0, seed=4)
+    cap = verd_mod.resolve_degree_cap(g)
+    cfg = DistConfig(n=24, ep=2, degree_cap=cap)
+    slabs = build_sharded_graph(g, cfg)
+    ns = cfg.n_shard
+    fv = jnp.asarray(rng.random((4, 4)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, ns, (4, 4)), jnp.int32)
+    wire_k = ns + 5
+    got_v, got_i = ops.sharded_frontier_push(
+        fv, fi, slabs.row_ptr[0], slabs.col_idx[0],
+        c=0.15, degree_cap=cap, ep=2, n_shard=ns, wire_k=wire_k,
+        q_tile=4, interpret=True,
+    )
+    ref_v, ref_i = ref.sharded_push_ref(
+        fv, fi, slabs.row_ptr[0], slabs.col_idx[0],
+        c=0.15, ep=2, n_shard=ns, wire_k=wire_k,
+    )
+    np.testing.assert_allclose(
+        _dens_buckets(got_v, got_i, 2, ns),
+        _dens_buckets(ref_v, ref_i, 2, ns),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.parametrize("q,q_tile,k_out", [(3, 4, 40), (1, 1, 5), (6, 4, 7)])
+def test_index_combine_sparse_boundaries(q, q_tile, k_out, rng):
+    """Ragged Q, single-row grid, and k_out beyond the candidate width."""
+    from repro.core import frontier as F
+
+    n, l, k, s_w = 30, 6, 4, 5
+    vals = jnp.asarray(rng.random((n, l)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (n, l)), jnp.int32)
+    sv = jnp.asarray(rng.random((q, s_w)), jnp.float32)
+    si = jnp.asarray(rng.integers(0, n, (q, s_w)), jnp.int32)
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, n, (q, k)), jnp.int32)
+    s = F.SparseFrontier(values=sv, indices=si, k=s_w, n=n)
+    f = F.SparseFrontier(values=fv, indices=fi, k=k, n=n)
+    got = ops.index_combine_sparse(
+        s, f, vals, idx, k_out=k_out, q_tile=q_tile, interpret=True
+    )
+    rv, ri = ref.index_combine_sparse_ref(
+        sv, si, fv, fi, vals, idx, k_out=k_out
+    )
+    want = F.SparseFrontier(values=rv, indices=ri, k=k_out, n=n)
+    np.testing.assert_allclose(
+        np.asarray(got.densify()), np.asarray(want.densify()),
+        rtol=1e-5, atol=1e-6,
+    )
+    assert got.values.shape == (q, k_out)
+
+
+def test_index_combine_sparse_empty_frontier(rng):
+    """Zero frontier: the combine degenerates to compacting s alone."""
+    from repro.core import frontier as F
+
+    n, l, q, k = 20, 4, 4, 3
+    vals = jnp.asarray(rng.random((n, l)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (n, l)), jnp.int32)
+    sv = jnp.asarray(rng.random((q, 5)), jnp.float32)
+    si = jnp.asarray(rng.integers(0, n, (q, 5)), jnp.int32)
+    s = F.SparseFrontier(values=sv, indices=si, k=5, n=n)
+    f = F.SparseFrontier(
+        values=jnp.zeros((q, k), jnp.float32),
+        indices=jnp.zeros((q, k), jnp.int32), k=k, n=n,
+    )
+    got = ops.index_combine_sparse(s, f, vals, idx, k_out=8, interpret=True)
+    from repro.core.frontier import compact
+
+    want = compact(sv, si, 8, n)
+    np.testing.assert_allclose(
+        np.asarray(got.densify()), np.asarray(want.densify()),
+        rtol=1e-6, atol=1e-7,
+    )
+
+
+@pytest.mark.parametrize("hub_split_degree", [0, 3])
+def test_frontier_push_window_clip_at_csr_end(rng, hub_split_degree):
+    """A hub whose row *closes* col_idx forces the last gather window past
+    ``m - h``: the clip-shift path (``d > 0`` in masked_push_from_windows)
+    must still deliver exactly the dense oracle's push.  (Hypothesis sweeps
+    this with random hub placements in test_properties.py; this is the
+    deterministic in-container regression.)"""
+    from repro.core import frontier as F
+    from repro.core.graph import Graph
+
+    n, hub_deg = 12, 7
+    src_e = np.concatenate([
+        np.array([0, 1, 2, 3], np.int32),
+        np.full(hub_deg, n - 1, np.int32),   # hub row ends the edge array
+    ])
+    dst_e = np.concatenate([
+        np.array([1, 2, 3, 0], np.int32),
+        np.arange(hub_deg, dtype=np.int32),
+    ])
+    g = Graph.from_edges(src_e, dst_e, n=n)
+    q = 3
+    fv = jnp.asarray(rng.random((q, 2)), jnp.float32)
+    fi = jnp.asarray([[n - 1, 0], [1, n - 1], [n - 1, n - 1]], jnp.int32)
+    srcs = jnp.asarray(rng.integers(0, n, q), jnp.int32)
+    f0 = F.SparseFrontier(values=fv, indices=fi, k=2, n=n)
+    _push_vs_ref(
+        f0, g, srcs, k_out=n, q_tile=1, hub_split_degree=hub_split_degree
+    )
+
+
+# -- VMEM accounting + compiled-mode (real TPU) gates -----------------------
+
+def test_push_vmem_accounting_independent_of_graph_size():
+    """HBM-resident per-step VMEM must not grow with n or m; the legacy
+    accounting (whole-array CSR blocks) must."""
+    small = push_mod.vmem_bytes(8, 64, 32, degree_cap=16)
+    assert small == push_mod.vmem_bytes(8, 64, 32, degree_cap=16)
+    legacy_small = push_mod.vmem_bytes_legacy(
+        8, 64, 32, n=1_000, m=8_000, degree_cap=16
+    )
+    legacy_big = push_mod.vmem_bytes_legacy(
+        8, 64, 32, n=1_000_000, m=8_000_000, degree_cap=16
+    )
+    assert legacy_big > legacy_small > small
+    # hub splitting bounds the scratch: splitting a cap-4096 gather into
+    # width-64 sub-slots leaves the byte count unchanged (s*h == cap) but a
+    # truncating split never grows it
+    assert push_mod.vmem_bytes(
+        8, 64, 32, degree_cap=4096, hub_split_degree=64
+    ) == push_mod.vmem_bytes(8, 64, 32, degree_cap=4096)
+    comb_small = comb_mod.sparse_vmem_bytes(8, 64, 16, 32, 32)
+    comb_legacy = comb_mod.sparse_vmem_bytes_legacy(
+        8, 64, 16, 32, 32, n=1_000_000
+    )
+    assert comb_legacy > comb_small
+
+
+@pytest.mark.tpu
+def test_frontier_push_compiled(rng):
+    """interpret=False compile + run — the real-TPU gate for the DMA path."""
+    from repro.core import frontier as F
+
+    g = synthetic.erdos_renyi(60, 4.0, seed=11)
+    srcs = jnp.asarray(rng.integers(0, g.n, 8), jnp.int32)
+    f0 = F.from_sources(srcs, g.n)
+    from repro.core import verd as verd_mod
+
+    cap = verd_mod.resolve_degree_cap(g)
+    got = ops.frontier_push(
+        f0, g, srcs, c=0.15, degree_cap=cap, k_out=16, interpret=False
+    )
+    rv, ri = ref.frontier_push_ref(
+        f0.values, f0.indices, srcs, g.row_ptr, g.out_deg, g.col_idx,
+        c=0.15, degree_cap=cap, k_out=16,
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.densify()),
+        np.asarray(F.SparseFrontier(
+            values=rv, indices=ri, k=16, n=g.n).densify()),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.tpu
+def test_sharded_push_compiled(rng):
+    from repro.core import verd as verd_mod
+    from repro.core.distributed_engine import DistConfig, build_sharded_graph
+
+    g = synthetic.erdos_renyi(60, 4.0, seed=11)
+    cap = verd_mod.resolve_degree_cap(g)
+    cfg = DistConfig(n=64, ep=2, degree_cap=cap)
+    slabs = build_sharded_graph(g, cfg)
+    ns = cfg.n_shard
+    fv = jnp.asarray(rng.random((8, 8)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, ns, (8, 8)), jnp.int32)
+    got_v, got_i = ops.sharded_frontier_push(
+        fv, fi, slabs.row_ptr[0], slabs.col_idx[0],
+        c=0.15, degree_cap=cap, ep=2, n_shard=ns, wire_k=ns,
+        interpret=False,
+    )
+    ref_v, ref_i = ref.sharded_push_ref(
+        fv, fi, slabs.row_ptr[0], slabs.col_idx[0],
+        c=0.15, ep=2, n_shard=ns, wire_k=ns,
+    )
+    np.testing.assert_allclose(
+        _dens_buckets(got_v, got_i, 2, ns),
+        _dens_buckets(ref_v, ref_i, 2, ns),
+        rtol=1e-5, atol=1e-6,
+    )
+
+
+@pytest.mark.tpu
+def test_index_combine_sparse_compiled(rng):
+    from repro.core import frontier as F
+
+    n, l, q, k = 64, 8, 8, 4
+    vals = jnp.asarray(rng.random((n, l)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (n, l)), jnp.int32)
+    s = F.SparseFrontier(
+        values=jnp.asarray(rng.random((q, 4)), jnp.float32),
+        indices=jnp.asarray(rng.integers(0, n, (q, 4)), jnp.int32),
+        k=4, n=n,
+    )
+    f = F.SparseFrontier(
+        values=jnp.asarray(rng.random((q, k)), jnp.float32),
+        indices=jnp.asarray(rng.integers(0, n, (q, k)), jnp.int32),
+        k=k, n=n,
+    )
+    got = ops.index_combine_sparse(s, f, vals, idx, k_out=8, interpret=False)
+    rv, ri = ref.index_combine_sparse_ref(
+        s.values, s.indices, f.values, f.indices, vals, idx, k_out=8
+    )
+    np.testing.assert_allclose(
+        np.asarray(got.densify()),
+        np.asarray(F.SparseFrontier(
+            values=rv, indices=ri, k=8, n=n).densify()),
+        rtol=1e-5, atol=1e-6,
     )

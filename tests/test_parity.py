@@ -118,6 +118,47 @@ def test_compress_k_is_deprecated():
     assert cfg.resolved_wire_k == 16
 
 
+def test_engine_routes_through_fused_kernel(setup):
+    """Routing regression: the sparse tile step must go through the fused
+    Pallas wrapper ``kernels.ops.sharded_frontier_push`` (once per VERD
+    iteration at trace time), not a duplicated jnp path — while still
+    matching the dense oracle."""
+    from repro.kernels import ops as kernel_ops
+
+    g, dense, n_pad = setup
+    cap = verd_mod.resolve_degree_cap(g)
+    cfg = DistConfig(
+        n=n_pad, ep=1, q_tile=4, t_iterations=2, index_l=16, top_k=n_pad,
+        frontier_k=n_pad, degree_cap=cap,
+    )
+    slabs = build_sharded_graph(g, cfg)
+    idx = index_from_dense(dense, l=cfg.index_l)
+    ivals = idx.values.reshape(1, cfg.n_shard, cfg.index_l)
+    iidx = idx.indices.reshape(1, cfg.n_shard, cfg.index_l)
+    sources = jnp.asarray([0, 5, 17, 42], jnp.int32)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    step = make_verd_tile_step(cfg, mesh)
+    kernel_ops.reset_kernel_invocations()
+    with mesh:
+        tv, ti = jax.jit(step)(slabs, sources, ivals, iidx)
+    counts = kernel_ops.kernel_invocations()
+    assert counts.get("sharded_frontier_push", 0) == cfg.t_iterations, counts
+
+    idx_small = index_from_dense(dense[: g.n, : g.n], l=cfg.index_l)
+    oracle = np.asarray(verd_mod.verd_query(g, sources, idx_small, t=2))
+    got = _densify(tv, ti, n_pad)
+    assert np.abs(got[:, : g.n] - oracle).sum(axis=1).max() <= 1e-5
+
+
+def test_kernel_interpret_resolution():
+    """Off-TPU the engine defaults the fused kernel to interpret mode; an
+    explicit setting wins either way."""
+    assert DistConfig(n=64, ep=1).resolved_kernel_interpret is True  # CPU here
+    assert DistConfig(
+        n=64, ep=1, kernel_interpret=False
+    ).resolved_kernel_interpret is False
+
+
 def test_sparse_exchange_requires_degree_cap():
     cfg = DistConfig(n=64, ep=2)
     mesh = jax.make_mesh((1, 1), ("data", "model"))

@@ -257,6 +257,82 @@ def test_hub_splitting_preserves_pushed_mass(g, h, truncate):
     assert base_v.shape[1] == k * cap + 1
 
 
+@st.composite
+def prefetch_push_cases(draw):
+    """Random CSR graphs with hubs planted at the gather boundaries.
+
+    Hubs sit on vertex 0 and vertex n-1, so one hub row opens ``col_idx``
+    and one closes it — the row whose last DMA gather window gets clipped
+    against the end of the edge array (the ``d > 0`` shift path of
+    ``verd.masked_push_from_windows``).  The frontier additionally plants
+    the hubs in the first and last slot of every ``q_tile`` tile, so hub
+    gathers straddle the kernel's grid-step boundaries, and Q is often
+    ragged against ``q_tile``.
+    """
+    rng = np.random.default_rng(draw(st.integers(0, 2 ** 16)))
+    n = draw(st.integers(8, 32))
+    q_tile = draw(st.sampled_from([1, 2, 4]))
+    q = draw(st.integers(1, 3)) * q_tile + draw(st.integers(0, q_tile - 1))
+    hub_deg = draw(st.integers(5, 20))
+    hub_split = draw(st.sampled_from([0, 1, 2, 3, 7]))
+    src = np.concatenate([
+        np.full(hub_deg, 0), np.full(hub_deg, n - 1),
+        rng.integers(1, n - 1, n * draw(st.integers(1, 4))),
+    ])
+    dst = rng.integers(0, n, src.shape[0])
+    keep = src != dst
+    g = Graph.from_edges(src[keep], dst[keep], n=n)
+    k = draw(st.integers(1, 4))
+    fv = rng.random((q, k)).astype(np.float32)
+    fi = rng.integers(0, n, (q, k)).astype(np.int32)
+    for t in range(0, q, q_tile):       # hubs at every tile boundary
+        fi[t, 0] = 0
+        fi[min(t + q_tile, q) - 1, -1] = n - 1
+    srcs = rng.integers(0, n, q).astype(np.int32)
+    return (
+        g, jnp.asarray(fv), jnp.asarray(fi), jnp.asarray(srcs),
+        q_tile, hub_split,
+    )
+
+
+@given(prefetch_push_cases())
+@settings(**SETTINGS)
+def test_prefetch_gather_push_matches_core_bitwise(case):
+    """The DMA-gather Pallas push is the same math as the jnp core op: on
+    hub-at-boundary CSR graphs the kernel's compacted frontier matches
+    ``verd.gather_push_candidates`` + ``frontier.compact_arrays``
+    bit-for-bit (values AND indices), for every ``hub_split_degree``, and
+    the pushed mass is preserved through compaction."""
+    from repro.kernels import ops as kernel_ops
+
+    g, fv, fi, srcs, q_tile, hub_split = case
+    cap = verd_mod.resolve_degree_cap(g)
+    cand_v, cand_i = verd_mod.gather_push_candidates(
+        fv, fi, srcs, g.row_ptr, g.out_deg, g.col_idx,
+        c=0.15, degree_cap=cap, hub_split_degree=hub_split,
+    )
+    k_out = int(min(cand_v.shape[1], g.n))
+    want_v, want_i = frontier_mod.compact_arrays(cand_v, cand_i, k_out)
+    f0 = frontier_mod.SparseFrontier(
+        values=fv, indices=fi, k=fv.shape[1], n=g.n
+    )
+    got = kernel_ops.frontier_push(
+        f0, g, srcs, c=0.15, degree_cap=cap, k_out=k_out, q_tile=q_tile,
+        hub_split_degree=hub_split, interpret=True,
+    )
+    np.testing.assert_array_equal(np.asarray(got.values), np.asarray(want_v))
+    np.testing.assert_array_equal(
+        np.asarray(got.indices), np.asarray(want_i)
+    )
+    # covering cap + covering k_out: compaction only merges, so the pushed
+    # mass survives exactly (up to f32 merge rounding)
+    np.testing.assert_allclose(
+        np.asarray(got.values, np.float64).sum(axis=1),
+        np.asarray(cand_v, np.float64).sum(axis=1),
+        rtol=1e-6, atol=1e-6,
+    )
+
+
 @given(candidate_rows(max_n=12), st.integers(1, 3), st.integers(1, 12))
 @settings(**SETTINGS)
 def test_bucket_by_owner_partitions_mass(cand, ep, k):
