@@ -3,7 +3,7 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-parity test-kernels bench bench-smoke
+.PHONY: test test-fast test-parity test-kernels bench bench-smoke bench-walks
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
@@ -30,3 +30,9 @@ bench:
 # CI-sized smoke: small graphs, query + kernel tables only
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only query,kernels
+
+# offline walk engine: legacy vs compacted-sparse positions/sec at the
+# n=100k acceptance point + index-build timings; writes BENCH_walks.json
+# and BENCH_preprocess.json (docs/indexing_path.md)
+bench-walks:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only walks,preprocess

@@ -1,9 +1,11 @@
 """Paper Table 2: preprocessing time and index size vs R.
 
-Measured on the CPU-scale graph; the paper's billion-edge rows
-(twitter-2010, uk-union) are reported analytically by fitting the measured
-positions/second of the bulk walk engine (the paper observes *sublinear*
-time in R — we check that too).
+Measured on the CPU-scale graph for both index builders — the sparse
+streaming path (``engine="sparse"``, the default: compacted walks + top-L
+sketches, peak ``O(rows * L)``) against the legacy dense-accumulator
+oracle — then extrapolated analytically to the paper's billion-edge rows
+(twitter-2010, uk-union) by fitting the measured positions/second (the
+paper observes *sublinear* time in R; we check that too).
 """
 
 from __future__ import annotations
@@ -21,27 +23,41 @@ from repro.core.index import build_index, preprocessing_cost_model
 def run(fast: bool = False) -> dict:
     g = bench_graph("tiny" if fast else "wiki_like")
     key = jax.random.PRNGKey(2)
-    out = {}
-    rate = None
+    out: dict = {"n": g.n, "m": g.m, "points": [], "extrapolation": []}
     r_values = [10, 100] if fast else [10, 100, 500]
     for r in r_values:
-        t0 = time.perf_counter()
-        idx, stats = build_index(
-            g, r=r, l=max(16, min(int(r / 0.15), 1024)), key=key,
-            source_batch=512,
+        point = {"r": r}
+        for engine in ("sparse", "legacy"):
+            t0 = time.perf_counter()
+            idx, stats = build_index(
+                g, r=r, l=max(16, min(int(r / 0.15), 1024)), key=key,
+                source_batch=512, engine=engine,
+            )
+            dt = time.perf_counter() - t0
+            rate = g.n * r / 0.15 / dt
+            point[engine] = dict(
+                seconds=dt, nbytes=stats["nbytes"], positions_per_s=rate,
+                drop_fraction=stats["drop_fraction"],
+            )
+            emit(f"table2_{engine}_R{r}", dt * 1e6,
+                 f"index_bytes={stats['nbytes']};positions_per_s={rate:.3e};"
+                 f"drop_fraction={stats['drop_fraction']:.4f}")
+        point["speedup"] = (
+            point["legacy"]["seconds"] / max(point["sparse"]["seconds"], 1e-12)
         )
-        dt = time.perf_counter() - t0
-        positions = g.n * r / 0.15
-        rate = positions / dt
-        out[r] = dict(seconds=dt, nbytes=stats["nbytes"], rate=rate)
-        emit(f"table2_R{r}", dt * 1e6,
-             f"index_bytes={stats['nbytes']};positions_per_s={rate:.3e}")
+        out["points"].append(point)
 
-    # analytic extrapolation to the paper's large graphs at measured rate
+    # analytic extrapolation to the paper's large graphs at the measured
+    # rate of the default (sparse) builder
+    sparse_rate = out["points"][-1]["sparse"]["positions_per_s"]
     for gname in ("twitter-2010", "uk-union"):
         gs = PAPER_GRAPHS[gname]
         for r in (10, 100, 2000):
-            cm = preprocessing_cost_model(gs.n, r, step_rate=rate)
+            cm = preprocessing_cost_model(gs.n, r, step_rate=sparse_rate)
+            out["extrapolation"].append(
+                dict(graph=gname, r=r, est_seconds=cm["est_seconds"],
+                     index_bytes=cm["index_bytes_uncapped"])
+            )
             emit(
                 f"table2_extrap_{gname}_R{r}", cm["est_seconds"] * 1e6,
                 f"index_bytes={cm['index_bytes_uncapped']};analytic",

@@ -1,7 +1,18 @@
 """Walk-engine throughput (the DrunkardMob comparison, paper Section 3.1).
 
-Reports positions/second of the bulk walk engine — the number the paper
-quotes against Spark (1728.2 s vs 2967 s for R=100 on twitter-2010).
+Reports positions/second — useful counted walk positions per wall-clock
+second — for both offline walk engines:
+
+* ``legacy``: ``simulate_walks`` — fixed-width ``max_steps`` scan over every
+  walk slot, dense ``f32[rows, n]`` count accumulators.
+* ``sparse``: ``simulate_walks_sparse`` — live-walk compaction (static
+  ``(1-c)^t`` bucket schedule) + per-row top-L count sketches.
+
+The headline point is the acceptance gate: the 100k-class graph
+(``rmat(17)``, n = 131072 exactly), ``R=32`` on CPU, where the sparse
+engine must record >= 5x the legacy positions/sec.  ``state`` bytes are
+the analytic per-engine accumulator footprints — the dense pair is what
+stops ``build_index`` from scaling past ``f32[rows, n]``.
 """
 
 from __future__ import annotations
@@ -10,28 +21,76 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks.common import bench_graph, emit, timeit
-from repro.core.walks import simulate_walks, walks_for_sources
+from repro.core.walks import (
+    compaction_schedule,
+    simulate_walks,
+    simulate_walks_sparse,
+    walks_for_sources,
+)
+
+
+def legacy_state_bytes(rows: int, n: int) -> int:
+    """fp + ep dense accumulators (the engine's dominant footprint)."""
+    return rows * n * 4 * 2
+
+
+def sparse_state_bytes(rows: int, r: int, l: int, fold_width: int) -> int:
+    """fp sketch + pending event buffer + the widest walk-slot round."""
+    schedule = compaction_schedule(r)
+    return rows * (l * 8 + fold_width * 8 + schedule[0] * 5)
 
 
 def run(fast: bool = False) -> dict:
-    g = bench_graph("tiny" if fast else "wiki_like")
+    g = bench_graph("tiny" if fast else "ppr_100k")
     key = jax.random.PRNGKey(4)
-    out = {}
-    for n_src, r in ((256, 10), (256, 100)):
+    out: dict = {"n": g.n, "m": g.m, "points": []}
+    points = ((64, 16),) if fast else ((256, 32), (256, 100))
+    for n_src, r in points:
         sources = jnp.arange(n_src, dtype=jnp.int32)
         ws, wr = walks_for_sources(sources, r)
+        l = min(g.n, int(r / 0.15) + 32)
+        fold_width = max(4 * l, 512)
 
-        def go():
+        def legacy():
             return simulate_walks(
                 g, ws, wr, key, n_rows=n_src, max_steps=64
             ).moves.sum()
 
-        sec = timeit(go, iters=2)
-        positions = float(go())
-        rate = positions / sec
-        out[(n_src, r)] = rate
-        emit(f"walks_S{n_src}_R{r}", sec * 1e6,
-             f"positions={positions:.0f};per_s={rate:.3e}")
+        def sparse():
+            return simulate_walks_sparse(
+                g, sources, r, key, l=l, ep_l=0, fold_width=fold_width
+            ).moves.sum()
+
+        point = {"rows": n_src, "r": r, "l": l}
+        for name, fn, state in (
+            ("legacy", legacy, legacy_state_bytes(n_src, g.n)),
+            ("sparse", sparse,
+             sparse_state_bytes(n_src, r, l, fold_width)),
+        ):
+            # one un-timed call compiles AND yields the position count (the
+            # engines are deterministic under the fixed key)
+            positions = float(fn())
+            sec = timeit(fn, warmup=0, iters=2)
+            rate = positions / sec
+            point[name] = dict(
+                wall_s=sec, positions=positions, positions_per_s=rate,
+                state_bytes=state,
+            )
+            emit(f"walks_{name}_S{n_src}_R{r}", sec * 1e6,
+                 f"positions={positions:.0f};per_s={rate:.3e};"
+                 f"state_bytes={state}")
+        point["speedup"] = (
+            point["sparse"]["positions_per_s"]
+            / max(point["legacy"]["positions_per_s"], 1e-12)
+        )
+        point["state_reduction"] = (
+            point["legacy"]["state_bytes"]
+            / max(point["sparse"]["state_bytes"], 1)
+        )
+        emit(f"walks_speedup_S{n_src}_R{r}", 0.0,
+             f"speedup={point['speedup']:.2f}x;"
+             f"state_reduction={point['state_reduction']:.1f}x")
+        out["points"].append(point)
     return out
 
 

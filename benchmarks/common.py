@@ -48,6 +48,10 @@ def bench_graph(name: str = "wiki_like") -> Graph:
             _GRAPH_CACHE[name] = synthetic.rmat(12, avg_deg=12.0, seed=1)
         elif name == "tiny":
             _GRAPH_CACHE[name] = synthetic.rmat(9, avg_deg=8.0, seed=2)
+        elif name == "ppr_100k":
+            # the 100k-class acceptance point of the walk/preprocess
+            # benches; rmat(17) is n = 2^17 = 131072 exactly
+            _GRAPH_CACHE[name] = synthetic.rmat(17, avg_deg=8.0, seed=3)
         else:
             raise KeyError(name)
     return _GRAPH_CACHE[name]

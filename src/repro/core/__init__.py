@@ -11,3 +11,7 @@ from repro.core.frontier import SparseFrontier  # noqa: F401
 from repro.core.graph import Graph  # noqa: F401
 from repro.core.index import PPRIndex, build_index, plan_for_budget  # noqa: F401
 from repro.core.query import BatchQueryEngine, QueryConfig  # noqa: F401
+from repro.core.walks import (  # noqa: F401
+    SparseWalkCounts,
+    simulate_walks_sparse,
+)

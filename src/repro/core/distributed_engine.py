@@ -583,3 +583,89 @@ def make_walk_counts_step(cfg: DistConfig, mesh: Mesh, *, max_steps: int = 64):
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,
     )
+
+
+def make_sparse_walk_counts_step(
+    cfg: DistConfig,
+    mesh: Mesh,
+    *,
+    r: int,
+    l: int,
+    max_steps: int = 64,
+    compact_every: int = 8,
+):
+    """Sharded compacted sparse-sketch walk engine (offline indexing).
+
+    Returns fn(row_ptr, col_idx, out_deg, sources[rows], key) ->
+    ``(fp_vals f32[rows, l], fp_idx int32[rows, l], moves f32[rows],
+    walks f32[rows], dropped f32[rows])``, replicated.  ``dropped`` is the
+    full cross-shard ledger — per-shard sketch truncation plus anything the
+    final merge compacts away — so the engine's conservation contract
+    ``fp_vals.sum(1) + dropped == moves`` holds exactly for any ``l``.
+
+    Walks are embarrassingly parallel, so the ``r`` walks of every source
+    split evenly over *every* mesh axis (batch and model alike — a model
+    replica would otherwise recompute identical walks): each shard runs
+    ``r / n_shards`` walks per row through
+    :func:`repro.core.walks.simulate_walks_sparse` on the replicated graph
+    with a per-shard key, entirely communication-free.  The only cross-shard
+    step is the final sketch merge: one ``all_gather`` of the per-shard
+    ``[rows, l]`` sketches along the width axis plus one
+    :func:`repro.core.frontier.compact_arrays` dedup-merge back to ``l``
+    (O(rows * n_shards * l) wire bytes total — independent of ``n`` and of
+    the walk count), and a psum of the scalar ``moves``/``walks``/
+    ``dropped`` counters.  Requires ``r`` divisible by the mesh size.
+    """
+    from repro.core.walks import simulate_walks_sparse
+
+    axes = tuple(cfg.batch_axes) + (cfg.model_axis,)
+    n_shards = 1
+    for ax in axes:
+        n_shards *= mesh.shape[ax]
+    if r % n_shards != 0:
+        raise ValueError(
+            f"r={r} must divide evenly over the {n_shards} mesh shards"
+        )
+    r_local = r // n_shards
+
+    def local_fn(row_ptr, col_idx, out_deg, sources, key):
+        for ax in axes:  # distinct walk stream per shard
+            key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+        m = col_idx.shape[0]
+        g = Graph(
+            # the walk engine never reads the COO src field; poison it so
+            # any future consumer gathers index -1 instead of silently
+            # using destinations as sources (DCE'd while unused)
+            row_ptr=row_ptr, col_idx=col_idx,
+            src=jnp.broadcast_to(jnp.int32(-1), (m,)),
+            out_deg=out_deg, n=out_deg.shape[0], m=m,
+        )
+        counts = simulate_walks_sparse(
+            g, sources, r_local, key, l=l, ep_l=0, c=cfg.c,
+            max_steps=max_steps, compact_every=compact_every,
+        )
+        # final sketch merge: gather every shard's top-l columns, dedup +
+        # re-compact — the one step that crosses shards
+        av = jax.lax.all_gather(counts.fp.values, axes, axis=1, tiled=True)
+        ai = jax.lax.all_gather(counts.fp.indices, axes, axis=1, tiled=True)
+        fp_v, fp_i = frontier_mod.compact_arrays(av, ai, l)
+        moves = jax.lax.psum(counts.moves, axes)
+        walks = jax.lax.psum(counts.walks, axes)
+        # dropped ledger: per-shard sketch truncation + merge truncation,
+        # so fp_v.sum(1) + dropped == moves holds exactly for any l
+        dropped = jax.lax.psum(counts.fp_dropped, axes)
+        dropped = dropped + jnp.maximum(
+            jnp.sum(av, axis=1) - jnp.sum(fp_v, axis=1), 0.0
+        )
+        return fp_v, fp_i, moves, walks, dropped
+
+    in_specs = (
+        P(None), P(None), P(None),            # graph replicated
+        P(),                                  # sources replicated (r splits)
+        P(),
+    )
+    out_specs = (P(), P(), P(), P(), P())
+    return shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )

@@ -151,6 +151,32 @@ def compact(
     return SparseFrontier(values=v, indices=i, k=v.shape[1], n=n)
 
 
+def fold_topk(
+    run_v: jax.Array,
+    run_i: jax.Array,
+    add_v: jax.Array,
+    add_i: jax.Array,
+    k: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Fold a batch of candidate columns into a running top-``k`` sketch.
+
+    The streaming-accumulation primitive shared by
+    :func:`repro.core.verd.sparse_push_compact` (frontier-slot chunks) and
+    the offline walk engine's visit-count sketches
+    (:func:`repro.core.walks.simulate_walks_sparse`): concatenate the new
+    candidates onto the running rows, dedup-merge, keep the top-``k``.
+    Returns ``(values, indices, dropped)`` where ``dropped`` is the per-row
+    mass truncated away by *this* fold — the exact error-budget increment a
+    sketch consumer accumulates (dropped mass only ever leaves, so the
+    running total bounds the sketch's L1 understatement).
+    """
+    cand_v = jnp.concatenate([run_v, add_v], axis=1)
+    cand_i = jnp.concatenate([run_i, add_i], axis=1)
+    out_v, out_i = compact_arrays(cand_v, cand_i, k)
+    dropped = jnp.sum(cand_v, axis=1) - jnp.sum(out_v, axis=1)
+    return out_v, out_i, jnp.maximum(dropped, 0.0)
+
+
 def threshold_values(values: jax.Array, threshold: float) -> jax.Array:
     """Epsilon sparsification (paper Section 3.3): zero entries below eps."""
     if threshold <= 0.0:

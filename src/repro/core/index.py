@@ -15,6 +15,7 @@ can be shifted to the offline stage as much as the memory budget allows".
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Iterable, Optional, Tuple
 
@@ -24,7 +25,7 @@ import numpy as np
 
 from repro.core import mcfp
 from repro.core.graph import Graph
-from repro.core.walks import DEFAULT_C
+from repro.core.walks import DEFAULT_C, simulate_walks_sparse
 
 
 @jax.tree_util.register_dataclass
@@ -64,6 +65,49 @@ def truncate_topl(estimates: jax.Array, l: int) -> Tuple[jax.Array, jax.Array]:
     return vals, idxs.astype(jnp.int32)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("r", "l", "sketch_l", "c", "max_steps", "compact_every"),
+)
+def sparse_chunk_estimates(
+    graph: Graph,
+    chunk_sources: jax.Array,
+    key: jax.Array,
+    *,
+    r: int,
+    l: int,
+    sketch_l: int,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    compact_every: int = 8,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One source chunk of the sparse index build, entirely on device.
+
+    Runs the compacted sparse-sketch walk engine at width ``sketch_l``,
+    normalizes to MCFP estimates, and truncates to the index width ``l``
+    (the sketch is already sorted descending, so truncation is a slice).
+    Returns ``(vals f32[rows, l], idxs int32[rows, l], kept f32[rows],
+    dropped f32[rows])`` — the per-row kept/dropped *estimate* mass, left on
+    device so the builder syncs once at the end, never per chunk.  The
+    traced computation holds no ``f32[rows, n]`` array (the memory contract
+    ``tests/test_walks_sparse.py`` asserts on this function's jaxpr).
+    """
+    counts = simulate_walks_sparse(
+        graph, chunk_sources, r, key, l=sketch_l, ep_l=0, c=c,
+        max_steps=max_steps, compact_every=compact_every,
+    )
+    inv_moves = 1.0 / jnp.maximum(counts.moves[:, None], 1.0)
+    est_v = counts.fp.values * inv_moves              # sorted descending
+    vals, idxs = est_v[:, :l], counts.fp.indices[:, :l]
+    idxs = jnp.where(vals > 0, idxs, 0)
+    kept = jnp.sum(vals, axis=1)
+    dropped = (
+        jnp.sum(est_v[:, l:], axis=1)
+        + counts.fp_dropped * inv_moves[:, 0]
+    )
+    return vals, idxs, kept, dropped
+
+
 def build_index(
     graph: Graph,
     r: int,
@@ -74,37 +118,73 @@ def build_index(
     max_steps: int = 64,
     source_batch: int = 256,
     sources: Optional[np.ndarray] = None,
+    engine: str = "sparse",
+    compact_every: int = 8,
 ) -> Tuple[PPRIndex, dict]:
     """Offline preprocessing: MCFP for every vertex, truncated to top-L.
 
+    ``engine="sparse"`` (default) streams the compacted sparse-sketch walk
+    engine straight into the fixed-width index: peak device memory is
+    ``O(source_batch * sketch_l)`` per chunk plus the ``[n, L]`` index
+    itself — no ``f32[rows, n]`` accumulator, no host numpy round-trip, so
+    the build runs at the graph sizes the online sparse path already
+    handles.  ``engine="legacy"`` keeps the dense-accumulator oracle.
+
     Returns (index, stats) where stats reports the truncated tail mass —
-    the accuracy cost of the memory budget.
+    the accuracy cost of the memory budget.  All host syncs are deferred to
+    one ``device_get`` at the end.
     """
     n = graph.n
     if sources is None:
         sources = np.arange(n, dtype=np.int32)
+    if engine == "sparse":
+        return _build_index_sparse(
+            graph, r, l, key, c=c, max_steps=max_steps,
+            source_batch=source_batch, sources=sources,
+            compact_every=compact_every,
+        )
+    if engine != "legacy":
+        raise ValueError(f"unknown engine {engine!r}")
+
     values = np.zeros((n, l), dtype=np.float32)
     indices = np.zeros((n, l), dtype=np.int32)
-    dropped = 0.0
-    kept = 0.0
-    trunc = jax.jit(lambda e: truncate_topl(e, l))
+    # per-chunk (total, kept) stay device scalars; one sync at the end so
+    # the host never blocks the dispatch pipeline mid-stream
+    totals = []
+    kepts = []
+
+    @jax.jit
+    def trunc(e):
+        vals, idxs = truncate_topl(e, l)
+        return vals, idxs, jnp.sum(e), jnp.sum(vals)
+
+    stats: dict = {}
     for chunk_ids, est in mcfp.estimate_ppr_batched(
         graph, sources, r, key, c=c, max_steps=max_steps,
-        source_batch=source_batch,
+        source_batch=source_batch, stats=stats,
     ):
-        vals, idxs = trunc(est)
-        values[chunk_ids] = np.asarray(vals)
-        indices[chunk_ids] = np.asarray(idxs)
-        total = float(jnp.sum(est))
-        k = float(jnp.sum(vals))
-        kept += k
-        dropped += total - k
-    stats = dict(
+        real = est.shape[0]
+        if real < source_batch:  # re-pad the ragged tail: trunc compiles
+            est = jnp.pad(est, ((0, source_batch - real), (0, 0)))  # once
+        vals, idxs, total, k = trunc(est)
+        values[chunk_ids] = np.asarray(vals[:real])
+        indices[chunk_ids] = np.asarray(idxs[:real])
+        totals.append(total)  # pad rows are all-zero: sums unaffected
+        kepts.append(k)
+    if totals:
+        total, kept = jax.device_get(
+            (jnp.sum(jnp.stack(totals)), jnp.sum(jnp.stack(kepts)))
+        )
+    else:  # empty sources: a valid all-zero index
+        total = kept = 0.0
+    dropped = float(total) - float(kept)
+    stats.update(
         r=r,
         l=l,
-        kept_mass=kept,
+        engine="legacy",
+        kept_mass=float(kept),
         dropped_mass=dropped,
-        drop_fraction=dropped / max(kept + dropped, 1e-12),
+        drop_fraction=dropped / max(float(total), 1e-12),
         nbytes=n * l * 8,
     )
     return (
@@ -113,6 +193,88 @@ def build_index(
         ),
         stats,
     )
+
+
+def _build_index_sparse(
+    graph: Graph,
+    r: int,
+    l: int,
+    key: jax.Array,
+    *,
+    c: float,
+    max_steps: int,
+    source_batch: int,
+    sources: np.ndarray,
+    compact_every: int,
+) -> Tuple[PPRIndex, dict]:
+    """Streaming sparse build: ``SparseWalkCounts -> PPRIndex`` on device."""
+    n = graph.n
+    l = min(l, n)
+    # sketch headroom over the index width keeps the running top-L honest:
+    # entries near rank l compete inside the sketch before the final slice
+    sketch_l = min(n, max(2 * l, l + 32))
+    sources = np.asarray(sources, dtype=np.int32)
+    n_src = len(sources)
+    pad_rows = (-n_src) % source_batch
+    padded = np.concatenate(
+        [sources, np.zeros(pad_rows, np.int32)]
+    ) if pad_rows else sources
+    vals_chunks = []
+    idxs_chunks = []
+    kept_parts = []
+    dropped_parts = []
+    for i in range(0, len(padded), source_batch):
+        chunk = jnp.asarray(padded[i : i + source_batch])
+        real = min(source_batch, n_src - i)
+        sub_key = jax.random.fold_in(key, i)
+        vals, idxs, kept, dropped = sparse_chunk_estimates(
+            graph, chunk, sub_key, r=r, l=l, sketch_l=sketch_l, c=c,
+            max_steps=max_steps, compact_every=compact_every,
+        )
+        # device-level slicing of the ragged tail: no host sync, pad rows
+        # never reach the index or the stats
+        vals_chunks.append(vals[:real])
+        idxs_chunks.append(idxs[:real])
+        kept_parts.append(jnp.sum(kept[:real]))
+        dropped_parts.append(jnp.sum(dropped[:real]))
+
+    if not n_src:  # empty sources: a valid all-zero index
+        values = jnp.zeros((n, l), jnp.float32)
+        indices = jnp.zeros((n, l), jnp.int32)
+    elif n_src == n and np.array_equal(
+        sources, np.arange(n, dtype=np.int32)
+    ):
+        values = jnp.concatenate(vals_chunks, axis=0)
+        indices = jnp.concatenate(idxs_chunks, axis=0)
+    else:  # subset build: one scatter into the zero index
+        src_dev = jnp.asarray(sources)
+        values = jnp.zeros((n, l), jnp.float32).at[src_dev].set(
+            jnp.concatenate(vals_chunks, axis=0)
+        )
+        indices = jnp.zeros((n, l), jnp.int32).at[src_dev].set(
+            jnp.concatenate(idxs_chunks, axis=0)
+        )
+    if kept_parts:
+        kept, dropped = jax.device_get(
+            (jnp.sum(jnp.stack(kept_parts)),
+             jnp.sum(jnp.stack(dropped_parts)))
+        )
+        kept, dropped = float(kept), float(dropped)
+    else:
+        kept = dropped = 0.0
+    stats = dict(
+        r=r,
+        l=l,
+        engine="sparse",
+        sketch_l=sketch_l,
+        pad_rows=pad_rows,
+        pad_fraction=pad_rows / max(n_src + pad_rows, 1),
+        kept_mass=kept,
+        dropped_mass=dropped,
+        drop_fraction=dropped / max(kept + dropped, 1e-12),
+        nbytes=n * l * 8,
+    )
+    return PPRIndex(values=values, indices=indices, l=l, n=n), stats
 
 
 def index_from_dense(estimates: jax.Array, l: int) -> PPRIndex:

@@ -10,8 +10,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import frontier
 from repro.core.graph import Graph
-from repro.core.walks import DEFAULT_C, simulate_walks, walks_for_sources
+from repro.core.walks import (
+    DEFAULT_C,
+    simulate_walks,
+    simulate_walks_sparse,
+    walks_for_sources,
+)
 
 
 def estimate_ppr(
@@ -35,3 +41,31 @@ def estimate_ppr(
         max_steps=max_steps,
     )
     return counts.ep_counts / jnp.maximum(counts.walks[:, None], 1.0)
+
+
+def estimate_ppr_sparse(
+    graph: Graph,
+    sources: jax.Array,
+    r: int,
+    key: jax.Array,
+    *,
+    l: int,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    compact_every: int = 8,
+) -> frontier.SparseFrontier:
+    """MCEP estimate as a top-``l`` :class:`~repro.core.frontier.SparseFrontier`.
+
+    An MCEP row from ``r`` walks has at most ``r`` nonzeros (one endpoint
+    per walk), so ``l >= min(r, n)`` is exact; the engine reports any
+    sketch-truncated endpoint mass in ``SparseWalkCounts.ep_dropped``.
+    The visit sketch is disabled (``l=0``) — MCEP never reads it.
+    """
+    counts = simulate_walks_sparse(
+        graph, sources, r, key, l=0, ep_l=l, c=c, max_steps=max_steps,
+        compact_every=compact_every,
+    )
+    vals = counts.ep.values / jnp.maximum(counts.walks[:, None], 1.0)
+    return frontier.SparseFrontier(
+        values=vals, indices=counts.ep.indices, k=counts.ep.k, n=graph.n
+    )

@@ -7,11 +7,19 @@ exponential concentration; see :mod:`repro.core.theory`.
 
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 import jax.numpy as jnp
 
+from repro.core import frontier
 from repro.core.graph import Graph
-from repro.core.walks import DEFAULT_C, simulate_walks, walks_for_sources
+from repro.core.walks import (
+    DEFAULT_C,
+    simulate_walks,
+    simulate_walks_sparse,
+    walks_for_sources,
+)
 
 
 def estimate_ppr(
@@ -37,6 +45,35 @@ def estimate_ppr(
     return counts.fp_counts / jnp.maximum(counts.moves[:, None], 1.0)
 
 
+def estimate_ppr_sparse(
+    graph: Graph,
+    sources: jax.Array,
+    r: int,
+    key: jax.Array,
+    *,
+    l: int,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    compact_every: int = 8,
+) -> frontier.SparseFrontier:
+    """MCFP estimate as a top-``l`` :class:`~repro.core.frontier.SparseFrontier`.
+
+    The compacted sparse-sketch engine end to end: ``O(rows * l)`` memory,
+    no ``f32[S, n]`` anywhere.  Exact (equal in law to :func:`estimate_ppr`)
+    whenever ``l`` covers each row's visited support (``<= r/c`` vertices);
+    a narrower ``l`` truncates the per-row tail, with the dropped mass
+    tracked by the engine (``SparseWalkCounts.fp_dropped``).
+    """
+    counts = simulate_walks_sparse(
+        graph, sources, r, key, l=l, ep_l=0, c=c, max_steps=max_steps,
+        compact_every=compact_every,
+    )
+    vals = counts.fp.values / jnp.maximum(counts.moves[:, None], 1.0)
+    return frontier.SparseFrontier(
+        values=vals, indices=counts.fp.indices, k=counts.fp.k, n=graph.n
+    )
+
+
 def estimate_ppr_batched(
     graph: Graph,
     sources,
@@ -46,19 +83,40 @@ def estimate_ppr_batched(
     c: float = DEFAULT_C,
     max_steps: int = 64,
     source_batch: int = 256,
+    stats: Optional[dict] = None,
 ):
     """Host-chunked MCFP for many sources (bounds the [S*R] walk array).
 
     Yields ``(chunk_sources, estimates)`` pairs so callers (the index
     builder) can stream results into the truncated index without ever
-    holding all dense vectors.
+    holding all dense vectors.  The ragged last chunk is padded to a fixed
+    ``source_batch`` (pad sources are vertex 0) before hitting the walk
+    engine, so ``simulate_walks`` compiles once instead of re-jitting on the
+    tail shape; pad rows are sliced off before yielding and reported in
+    ``stats`` (``pad_rows``/``pad_fraction``, the ``poll()`` convention) —
+    filled in eagerly, before the first chunk is consumed.
     """
     import numpy as np
 
     sources = np.asarray(sources)
-    for i in range(0, len(sources), source_batch):
-        chunk = jnp.asarray(sources[i : i + source_batch])
-        sub_key = jax.random.fold_in(key, i)
-        yield sources[i : i + source_batch], estimate_ppr(
-            graph, chunk, r, sub_key, c=c, max_steps=max_steps
-        )
+    pad_rows = (-len(sources)) % source_batch
+    if stats is not None:
+        stats["pad_rows"] = pad_rows
+        stats["pad_fraction"] = pad_rows / max(len(sources) + pad_rows, 1)
+
+    def chunks():
+        for i in range(0, len(sources), source_batch):
+            chunk = sources[i : i + source_batch]
+            real = len(chunk)
+            if real < source_batch:
+                chunk = np.concatenate(
+                    [chunk, np.zeros(source_batch - real, chunk.dtype)]
+                )
+            sub_key = jax.random.fold_in(key, i)
+            est = estimate_ppr(
+                graph, jnp.asarray(chunk), r, sub_key, c=c,
+                max_steps=max_steps,
+            )
+            yield sources[i : i + real], est[:real]
+
+    return chunks()

@@ -398,11 +398,7 @@ def sparse_push_compact(
         )
         # mid-stream compaction truncates by rank only; the epsilon
         # threshold applies once at the end, like the one-shot path
-        rv, ri = frontier.compact_arrays(
-            jnp.concatenate([rv, pv], axis=1),
-            jnp.concatenate([ri, nb], axis=1),
-            out_w,
-        )
+        rv, ri, _ = frontier.fold_topk(rv, ri, pv, nb, out_w)
         return (rv, ri), ()
 
     (run_v, run_i), _ = jax.lax.scan(

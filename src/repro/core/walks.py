@@ -25,11 +25,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Tuple
+import math
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import frontier as frontier_mod
 from repro.core.graph import Graph
 
 DEFAULT_C = 0.15
@@ -145,3 +147,359 @@ def sample_walk_lengths(
     u = jax.random.uniform(key, (w, max_steps))
     alive = jnp.cumprod((u >= c).astype(jnp.int32), axis=1)
     return 1 + alive.sum(axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Compacted sparse-sketch walk engine (the scalable offline path).
+#
+# Two structural fixes over ``simulate_walks``:
+#
+# * **Live-walk compaction**: walk length is geometric(c) with mean ``1/c``
+#   (~6.7 at the default), so after ``t`` steps only ``(1-c)^t`` of the walk
+#   slots are alive — a fixed-width scan over ``W`` slots for ``max_steps``
+#   rounds spends >85% of its device steps moving dead walks.  Here the slot
+#   array shrinks through a *static bucket schedule* derived from
+#   ``(1-c)^t``: every ``compact_every`` steps the surviving cursors are
+#   compacted into the low slots (``jnp.cumsum`` over the active mask — the
+#   same compaction idiom as ``frontier.py``) and the working width drops to
+#   the next bucket.  Device work tracks live walks, not ``W x max_steps``.
+#
+# * **Sparse count sketches**: the ``f32[rows, n]`` fp/ep accumulators
+#   become per-row fixed-width top-``L`` sketches (the ``SparseFrontier``
+#   idiom ``PPRIndex`` already uses): each round's visit events are folded
+#   into the running sketch by sort-by-(row, vertex) + segment-sum
+#   (:func:`repro.core.frontier.fold_topk`), so memory is ``O(rows * L)``
+#   and the truncated mass is tracked exactly per row.
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseWalkCounts:
+    """Sketched walk statistics grouped into ``rows`` source rows.
+
+    fp: SparseFrontier[rows, L]  top-L visit-count sketch (MCFP numerator).
+    ep: SparseFrontier[rows, Lp] top-Lp end-point sketch (MCEP numerator).
+    moves:      f32[rows] counted positions per row (MCFP denominator).
+    walks:      f32[rows] finished walks per row (MCEP denominator) —
+                terminated + truncated; always exactly ``R`` per row.
+    truncated:  f32[rows] walks cut short by the schedule (compaction
+                overflow or the max_steps cap); their current position is
+                counted as the endpoint, like the legacy engine's cap.
+    fp_dropped: f32[rows] visit mass truncated out of the fp sketch.
+    ep_dropped: f32[rows] endpoint mass truncated out of the ep sketch.
+
+    Conservation (tested): ``fp.mass() + fp_dropped == moves`` and
+    ``ep.mass() + ep_dropped == walks == R`` per row, exactly.
+    """
+
+    fp: frontier_mod.SparseFrontier
+    ep: frontier_mod.SparseFrontier
+    moves: jax.Array
+    walks: jax.Array
+    truncated: jax.Array
+    fp_dropped: jax.Array
+    ep_dropped: jax.Array
+
+
+def compaction_schedule(
+    r: int,
+    *,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    compact_every: int = 8,
+    margin: float = 1.35,
+    floor: int = 8,
+    lane: int = 8,
+) -> Tuple[int, ...]:
+    """Static per-round slot widths for the compacted engine.
+
+    Round ``j`` covers steps ``[j * compact_every, (j+1) * compact_every)``
+    and runs at width ``w_j = min(r, max(floor, margin * r * (1-c)^t_j))``
+    rounded up to a ``lane`` multiple — the expected live-walk count at the
+    round's first step with a safety margin.  Widths are non-increasing and
+    start at exactly ``r`` (every walk launches in round 0).  Survivors that
+    exceed a round's width (a ``margin`` tail event) are truncated to their
+    endpoint and reported, so the schedule is a performance knob, never a
+    correctness one.
+    """
+    if r <= 0:
+        raise ValueError(f"r must be positive, got {r}")
+    widths = []
+    t = 0
+    while t < max_steps:
+        live = r * (1.0 - c) ** t
+        w = int(math.ceil(margin * live))
+        w = ((w + lane - 1) // lane) * lane
+        w = min(r, max(floor, w)) if t else r
+        widths.append(w)
+        t += compact_every
+    return tuple(widths)
+
+
+def sample_edge_offsets(u: jax.Array, deg: jax.Array) -> jax.Array:
+    """Edge offset ``~ Uniform{0..deg-1}`` from ``u ~ U[0, 1)``.
+
+    ``floor(u * deg)`` clipped into range — the one sampling law the jnp
+    step, the Pallas ``walk_step`` launcher, and its oracle all share, so
+    the kernel-routed engine is bit-identical to the jnp engine under the
+    same key."""
+    off = jnp.floor(u * deg.astype(jnp.float32)).astype(jnp.int32)
+    return jnp.clip(off, 0, jnp.maximum(deg - 1, 0))
+
+
+def advance_cursors(
+    graph: Graph,
+    cursors: jax.Array,
+    sources: jax.Array,
+    u: jax.Array,
+    *,
+    use_kernel: bool = False,
+    kernel_interpret: bool = True,
+) -> jax.Array:
+    """Advance every cursor one edge (dangling vertices jump to ``sources``).
+
+    ``u`` is the pre-drawn uniform for the edge choice (see
+    :func:`sample_edge_offsets`).  ``sources`` must broadcast against
+    ``cursors``.  With ``use_kernel`` the degree-gather + edge-sample +
+    dangling-fix run fused through the HBM-resident Pallas kernel
+    (``repro.kernels.ops.walk_step``), bit-identical to the jnp path.
+    """
+    if graph.m == 0:  # every vertex dangling: all walks jump home
+        return jnp.broadcast_to(sources, cursors.shape).astype(cursors.dtype)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+
+        return kernel_ops.walk_step(
+            cursors, jnp.broadcast_to(sources, cursors.shape), u,
+            graph.row_ptr, graph.out_deg, graph.col_idx,
+            interpret=kernel_interpret,
+        )
+    deg = jnp.take(graph.out_deg, cursors)
+    lo = jnp.take(graph.row_ptr, cursors)
+    addr = jnp.clip(lo + sample_edge_offsets(u, deg), 0, graph.m - 1)
+    nxt = jnp.take(graph.col_idx, addr)
+    return jnp.where(deg == 0, sources, nxt)
+
+
+def _compact_slots(
+    cursors: jax.Array, alive: jax.Array, w_new: int
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Compact surviving cursors into the low slots of a width-``w_new`` row.
+
+    Per row: rank survivors with ``cumsum`` over the active mask and scatter
+    rank ``j`` into slot ``j`` (the ``frontier.py`` compaction idiom applied
+    to walk state).  Survivors ranked past ``w_new`` overflow; their
+    ``(weight, cursor)`` events are returned so the caller can truncate them
+    to endpoints.  Returns ``(cursors[rows, w_new], alive[rows, w_new],
+    overflow_w[rows, w_old], overflow_i[rows, w_old])``.
+    """
+    rows, w = cursors.shape
+    rank = jnp.cumsum(alive.astype(jnp.int32), axis=1)       # 1-based
+    keep = alive & (rank <= w_new)
+    # park dropped/dead slots at a sentinel column that is sliced away
+    tgt = jnp.where(keep, rank - 1, w_new)
+    packed = jnp.zeros((rows, w_new + 1), cursors.dtype).at[
+        jnp.arange(rows)[:, None], tgt
+    ].set(jnp.where(keep, cursors, 0), mode="drop")
+    n_kept = jnp.minimum(rank[:, -1], w_new)                 # [rows]
+    new_alive = jnp.arange(w_new, dtype=jnp.int32)[None, :] < n_kept[:, None]
+    over = alive & (rank > w_new)
+    return (
+        packed[:, :w_new],
+        new_alive,
+        over.astype(jnp.float32),
+        jnp.where(over, cursors, 0),
+    )
+
+
+class _EventSketch:
+    """Running top-``k`` sketch fed by buffered event segments.
+
+    Folding (sort + segment-sum + top-k, :func:`frontier.fold_topk`) is the
+    expensive primitive on every backend, so event segments queue in a
+    pending list and one fold runs whenever the pending width reaches
+    ``fold_width`` — the same stream-width batching idea as
+    ``verd.sparse_push_compact``, applied across rounds.  Deferring folds is
+    only ever *more* accurate (fewer intermediate truncations); the pending
+    buffer bounds live memory at ``O(rows * (k + fold_width + one round's
+    events))``.  With ``enabled=False`` nothing is sketched and every event
+    lands in ``dropped`` (the MCFP-only builds skip the ep sketch this way).
+    A trace-time helper: plain Python state, jnp math.
+    """
+
+    def __init__(self, rows: int, k: int, fold_width: int, enabled: bool = True):
+        self.k = k
+        self.enabled = enabled
+        self.fold_width = fold_width
+        self.values = jnp.zeros((rows, k), jnp.float32)
+        self.indices = jnp.zeros((rows, k), jnp.int32)
+        self.dropped = jnp.zeros((rows,), jnp.float32)
+        self._pend_v: list = []
+        self._pend_i: list = []
+        self._pend_w = 0
+
+    def add(self, ev_w: jax.Array, ev_i: jax.Array) -> None:
+        """Queue an event segment ``[rows, w]`` (zero-weight slots fine)."""
+        if not self.enabled:
+            self.dropped = self.dropped + jnp.sum(ev_w, axis=1)
+            return
+        self._pend_v.append(ev_w)
+        self._pend_i.append(ev_i)
+        self._pend_w += ev_w.shape[1]
+        if self._pend_w >= self.fold_width:
+            self.flush()
+
+    def flush(self) -> None:
+        if not self._pend_w:
+            return
+        self.values, self.indices, d = frontier_mod.fold_topk(
+            self.values, self.indices,
+            jnp.concatenate(self._pend_v, axis=1),
+            jnp.concatenate(self._pend_i, axis=1),
+            self.k,
+        )
+        self.dropped = self.dropped + d
+        self._pend_v, self._pend_i, self._pend_w = [], [], 0
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "r", "l", "ep_l", "c", "max_steps", "compact_every", "margin",
+        "fold_width", "use_kernel", "kernel_interpret",
+    ),
+)
+def simulate_walks_sparse(
+    graph: Graph,
+    sources: jax.Array,
+    r: int,
+    key: jax.Array,
+    *,
+    l: int,
+    ep_l: Optional[int] = None,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    compact_every: int = 8,
+    margin: float = 1.35,
+    fold_width: int = 0,
+    use_kernel: bool = False,
+    kernel_interpret: bool = True,
+) -> SparseWalkCounts:
+    """Run ``r`` walks per source through the compacted sparse-sketch engine.
+
+    sources: int32[rows] personalization vertex of each output row (every
+    walk of a row starts there — the :func:`walks_for_sources` layout, made
+    structural).  ``l``/``ep_l`` are the fp/ep sketch widths; ``l >=``
+    distinct visited vertices per row makes the fp sketch exact (an MCFP
+    row from ``r`` walks has support ``<= moves ~ r/c``).  ``ep_l=0``
+    disables endpoint sketching entirely (the MCFP-only index build), and
+    symmetrically ``l=0`` disables the visit sketch (the MCEP-only
+    estimate): the disabled sketch comes back width-1 empty and its whole
+    event mass lands in the ``*_dropped`` ledger, so conservation still
+    closes.  ``fold_width`` batches
+    visit events across rounds before each sketch fold (0 = auto,
+    ``max(4 * l, 512)``): larger folds cost fewer sorts *and* truncate less;
+    live event memory stays ``O(rows * fold_width)``.
+
+    One jit compilation per (shapes, schedule): the round loop is unrolled
+    into a single device computation — per round one ``lax.scan`` of
+    ``compact_every`` steps at that round's static width and one slot
+    compaction, with sketch folds on the ``fold_width`` cadence.  Walks
+    surviving ``max_steps`` total positions are truncated to endpoints
+    exactly like the legacy engine's cap.
+    """
+    rows = sources.shape[0]
+    n = graph.n
+    l = min(l, n)
+    ep_l = min(ep_l if ep_l is not None else l, n)
+    track_fp = l > 0
+    track_ep = ep_l > 0
+    if fold_width <= 0:
+        fold_width = max(4 * l, 512)
+    schedule = compaction_schedule(
+        r, c=c, max_steps=max_steps, compact_every=compact_every,
+        margin=margin,
+    )
+    src32 = sources.astype(jnp.int32)
+    src2d = src32[:, None]
+
+    cursors = jnp.broadcast_to(src2d, (rows, schedule[0])).astype(jnp.int32)
+    alive = jnp.broadcast_to(
+        jnp.arange(schedule[0], dtype=jnp.int32)[None, :] < r,
+        (rows, schedule[0]),
+    )
+    fp = _EventSketch(rows, max(l, 1), fold_width, enabled=track_fp)
+    ep = _EventSketch(rows, max(ep_l, 1), fold_width, enabled=track_ep)
+    moves = jnp.zeros((rows,), jnp.float32)
+    walks_done = jnp.zeros((rows,), jnp.float32)
+    truncated = jnp.zeros((rows,), jnp.float32)
+
+    def step_body(carry, t):
+        cursors, alive, moves, walks_done = carry
+        step_key = jax.random.fold_in(key, t)
+        k_move, k_term = jax.random.split(step_key)
+        af = alive.astype(jnp.float32)
+        pos = cursors                      # position counted this step
+        moves = moves + jnp.sum(af, axis=1)
+        terminate = alive & (
+            jax.random.uniform(k_term, cursors.shape) < c
+        )
+        tf = terminate.astype(jnp.float32)
+        walks_done = walks_done + jnp.sum(tf, axis=1)
+        alive = alive & ~terminate
+        u = jax.random.uniform(k_move, cursors.shape)
+        nxt = advance_cursors(
+            graph, cursors, src2d, u,
+            use_kernel=use_kernel, kernel_interpret=kernel_interpret,
+        )
+        cursors = jnp.where(alive, nxt, cursors)
+        return (cursors, alive, moves, walks_done), (af, pos, tf)
+
+    def per_row(ev):
+        # [steps, rows, w] -> per-row event columns [rows, steps * w]
+        return ev.transpose(1, 0, 2).reshape(rows, -1)
+
+    t0 = 0
+    for w in schedule:
+        if w < cursors.shape[1]:
+            cursors, alive, ov_w, ov_i = _compact_slots(cursors, alive, w)
+            # overflow walks: truncate to endpoint (schedule tail event)
+            n_over = jnp.sum(ov_w, axis=1)
+            walks_done = walks_done + n_over
+            truncated = truncated + n_over
+            ep.add(ov_w, ov_i)
+        # the last round may be ragged: never run past the max_steps cap
+        steps = min(compact_every, max_steps - t0)
+        (cursors, alive, moves, walks_done), (vis_w, vis_i, term_w) = (
+            jax.lax.scan(
+                step_body, (cursors, alive, moves, walks_done),
+                t0 + jnp.arange(steps),
+            )
+        )
+        fp.add(per_row(vis_w), per_row(vis_i))
+        ep.add(per_row(term_w), per_row(vis_i))
+        t0 += steps
+
+    # max_steps cap: survivors' current position is the endpoint (the same
+    # truncation as the legacy engine; tail mass ~ (1-c)^max_steps)
+    af = alive.astype(jnp.float32)
+    n_trunc = jnp.sum(af, axis=1)
+    walks_done = walks_done + n_trunc
+    truncated = truncated + n_trunc
+    ep.add(af, jnp.where(alive, cursors, 0))
+    fp.flush()
+    ep.flush()
+    return SparseWalkCounts(
+        fp=frontier_mod.SparseFrontier(
+            values=fp.values, indices=fp.indices, k=max(l, 1), n=n
+        ),
+        ep=frontier_mod.SparseFrontier(
+            values=ep.values, indices=ep.indices, k=max(ep_l, 1), n=n
+        ),
+        moves=moves,
+        walks=walks_done,
+        truncated=truncated,
+        fp_dropped=fp.dropped,
+        ep_dropped=ep.dropped,
+    )

@@ -10,6 +10,8 @@ expose drop-in replacements for the pure-jnp core ops:
 * :func:`sharded_frontier_push` <-> :func:`repro.core.verd.gather_push_edges`
   (+ :func:`repro.core.frontier.bucket_by_owner`) — the distributed wire step
 * :func:`index_combine_sparse` <-> :func:`repro.core.verd.combine_with_index_sparse`
+* :func:`walk_step` <-> :func:`repro.core.walks.advance_cursors` (jnp path) —
+  the offline walk engine's fused bulk advance
 * :func:`embedding_bag` <-> :func:`repro.models.recsys.embedding` bag path
 
 ``interpret=True`` (default here) runs the kernel bodies in Python on CPU —
@@ -33,6 +35,7 @@ from repro.kernels import ell_spmm as _ell
 from repro.kernels import embedding_bag as _bag
 from repro.kernels import frontier_push as _push
 from repro.kernels import index_combine as _comb
+from repro.kernels import walk_step as _walk
 
 
 # Trace-time invocation counts per wrapper: incremented when a wrapper body
@@ -218,6 +221,43 @@ def index_combine_sparse(
     )
     n = vals.shape[0]
     return SparseFrontier(values=ov[:q], indices=oi[:q], k=k_out, n=n)
+
+
+def walk_step(
+    cursors: jax.Array,
+    sources: jax.Array,
+    u: jax.Array,
+    row_ptr: jax.Array,
+    out_deg: jax.Array,
+    col_idx: jax.Array,
+    *,
+    w_tile: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """One fused bulk walk advance via the Pallas kernel; pads W to the tile.
+
+    Drop-in for the jnp path of :func:`repro.core.walks.advance_cursors`
+    (bit-identical under the same uniforms): accepts any cursor shape,
+    flattens, pads the walk axis with harmless dangling-style rows (pad
+    cursors/sources are vertex 0 — their sampled address is clipped in
+    range and the result rows are sliced off), and restores the shape.
+    """
+    if col_idx.shape[0] == 0:  # edgeless graph: every walk jumps home
+        return jnp.broadcast_to(sources, cursors.shape).astype(jnp.int32)
+    _invocations["walk_step"] += 1
+    shape = cursors.shape
+    cur = cursors.reshape(-1)
+    src = jnp.broadcast_to(sources, shape).reshape(-1)
+    uu = u.reshape(-1)
+    w = cur.shape[0]
+    cur_p = _pad_to(cur, 0, w_tile)
+    src_p = _pad_to(src, 0, w_tile)
+    u_p = _pad_to(uu, 0, w_tile)
+    out = _walk.walk_step(
+        cur_p, src_p, u_p, row_ptr, out_deg, col_idx,
+        w_tile=w_tile, interpret=interpret,
+    )
+    return out[:w].reshape(shape)
 
 
 @functools.partial(

@@ -140,6 +140,34 @@ def index_combine_sparse_ref(
     return F.topk_compact(sf.values, sf.indices, k_out)
 
 
+def walk_step_ref(
+    cursors: jax.Array,
+    sources: jax.Array,
+    u: jax.Array,
+    row_ptr: jax.Array,
+    out_deg: jax.Array,
+    col_idx: jax.Array,
+) -> jax.Array:
+    """Oracle for the fused bulk walk advance.
+
+    Spelled out independently of ``repro.core.walks.advance_cursors`` (the
+    code under test routes through it): gather degree + CSR start, sample
+    the out-edge as ``floor(u * deg)``, read its destination, send dangling
+    walks back to their source.  Bitwise contract — int outputs must match
+    the kernel exactly.
+    """
+    cur = cursors.astype(jnp.int32)
+    deg = jnp.take(out_deg, cur)
+    start = jnp.take(row_ptr, cur)
+    off = jnp.clip(
+        jnp.floor(u * deg.astype(jnp.float32)).astype(jnp.int32),
+        0, jnp.maximum(deg - 1, 0),
+    )
+    m = col_idx.shape[0]
+    nxt = jnp.take(col_idx, jnp.clip(start + off, 0, m - 1))
+    return jnp.where(deg == 0, sources.astype(jnp.int32), nxt)
+
+
 def embedding_bag_ref(
     ids: jax.Array, mask: jax.Array, table: jax.Array
 ) -> jax.Array:

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: fused bulk walk advance with HBM-resident ``col_idx``.
+
+One device step of the offline walk engine advances every cursor one edge:
+gather the degree and CSR offset of each cursor, sample an out-edge, read its
+destination, and send dangling walks back to their personalization source.
+The jnp path does this with three ``jnp.take`` gathers; at billion-edge
+scale the ``col_idx`` gather is the one that matters — it must not require
+``col_idx`` resident in VMEM.
+
+Same memory discipline as ``frontier_push.py`` (PR 3's DMA infrastructure,
+reused directly):
+
+* ``col_idx`` stays in ``pltpu.ANY`` (HBM), never blocked into VMEM.
+* ``row_ptr``/``out_deg`` never enter the kernel: the launcher turns the
+  cursors into per-walk ``deg`` + *sampled* edge addresses via two O(W)
+  gathers and :func:`repro.core.walks.sample_edge_offsets` (the same
+  edge-sampling law as the jnp engine, so kernel == jnp bit-for-bit under
+  one key).  The clipped flat addresses ride in as the
+  ``PrefetchScalarGridSpec`` scalar-prefetch argument — exactly the per-walk
+  DMA offsets the kernel body needs in SMEM before it runs.
+* Each grid step DMA-gathers only its tile's ``w_tile`` single-edge windows
+  (``frontier_push.dma_pipeline`` depth-2 double buffering), then applies
+  the dangling fix in registers.
+
+VMEM per grid step is O(w_tile) — independent of ``n`` and ``nnz`` (see
+:func:`vmem_bytes`).  ``interpret=True`` is the validated mode in this
+container; pass ``interpret=False`` on a real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import walks as walks_mod
+from repro.kernels.frontier_push import _dma_gather_windows
+
+
+def vmem_bytes(w_tile: int) -> int:
+    """Per-grid-step VMEM of the fused walk advance: deg/src/out tiles +
+    the single-edge gather scratch.  Independent of ``n`` and ``nnz``."""
+    return w_tile * 4 * 3 + w_tile * 4
+
+
+def _walk_step_kernel(addr_ref, deg_ref, src_ref, col_hbm, out_ref,
+                      scratch, sem):
+    i = pl.program_id(0)
+    w_tile = deg_ref.shape[1]
+    # one width-1 window per walk: scratch[r, 0] <- col_idx[addr[base + r]]
+    _dma_gather_windows(
+        col_hbm, addr_ref, scratch, sem, rows=w_tile, h=1, base=i * w_tile
+    )
+    nxt = scratch[...].reshape(1, w_tile)
+    deg = deg_ref[...]
+    out_ref[...] = jnp.where(deg == 0, src_ref[...], nxt)
+
+
+@functools.partial(jax.jit, static_argnames=("w_tile", "interpret"))
+def walk_step(
+    cursors: jax.Array,
+    sources: jax.Array,
+    u: jax.Array,
+    row_ptr: jax.Array,
+    out_deg: jax.Array,
+    col_idx: jax.Array,
+    *,
+    w_tile: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused degree-gather + edge-sample + dangling-fix for ``W`` walks.
+
+    cursors/sources: int32[W]; u: f32[W] uniform edge-choice draws.  ``W``
+    must be a multiple of ``w_tile`` (``ops.walk_step`` is the padding
+    wrapper).  Requires ``col_idx`` non-empty (the edgeless case is the
+    wrapper's jnp fallback).  Returns the next cursors, int32[W] — equal to
+    :func:`repro.core.walks.advance_cursors` bit-for-bit.
+    """
+    (w,) = cursors.shape
+    assert sources.shape == (w,) and u.shape == (w,)
+    assert w % w_tile == 0, (w, w_tile)
+    m = col_idx.shape[0]
+    cur32 = cursors.astype(jnp.int32)
+    deg = jnp.take(out_deg, cur32).astype(jnp.int32)
+    start = jnp.take(row_ptr, cur32).astype(jnp.int32)
+    # the edge-sample: same law as the jnp engine (bitwise parity); dangling
+    # rows get a clipped dummy address, overwritten by the in-kernel fix
+    addr = jnp.clip(
+        start + walks_mod.sample_edge_offsets(u, deg), 0, m - 1
+    )
+    tiles = w // w_tile
+    deg2d = deg.reshape(tiles, w_tile)
+    src2d = sources.reshape(tiles, w_tile).astype(jnp.int32)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                 # the flat sampled addresses
+        grid=(tiles,),
+        in_specs=[
+            pl.BlockSpec((1, w_tile), lambda i, a: (i, 0)),
+            pl.BlockSpec((1, w_tile), lambda i, a: (i, 0)),
+            pl.BlockSpec(memory_space=pltpu.ANY),   # col_idx: HBM resident
+        ],
+        out_specs=pl.BlockSpec((1, w_tile), lambda i, a: (i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((w_tile, 1), jnp.int32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+    )
+    out = pl.pallas_call(
+        _walk_step_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((tiles, w_tile), jnp.int32),
+        interpret=interpret,
+    )(addr, deg2d, src2d, col_idx)
+    return out.reshape(w)

@@ -14,6 +14,7 @@ from repro.graphs import formats, synthetic
 from repro.kernels import frontier_push as push_mod
 from repro.kernels import index_combine as comb_mod
 from repro.kernels import ops, ref
+from repro.kernels import walk_step as walk_mod
 from repro.kernels.ell_spmm import ell_spmm, vmem_bytes
 from repro.kernels.embedding_bag import embedding_bag as bag_kernel
 from repro.kernels.index_combine import index_combine as comb_kernel
@@ -830,3 +831,126 @@ def test_index_combine_sparse_compiled(rng):
             values=rv, indices=ri, k=8, n=n).densify()),
         rtol=1e-5, atol=1e-6,
     )
+
+
+# ---------------------------------------------------------------------------
+# walk_step: the offline walk engine's fused bulk advance
+# ---------------------------------------------------------------------------
+
+def _walk_fixture(rng, n=512, avg_deg=5.0, w=256):
+    g = synthetic.erdos_renyi(n, avg_deg, seed=13)
+    cur = jnp.asarray(rng.integers(0, n, w), jnp.int32)
+    src = jnp.asarray(rng.integers(0, n, w), jnp.int32)
+    u = jnp.asarray(rng.random(w), jnp.float32)
+    return g, cur, src, u
+
+
+@pytest.mark.parametrize("w", [128, 256, 384])
+def test_walk_step_matches_ref_bitwise(w, rng):
+    """int outputs: the kernel must equal the oracle exactly, not approx."""
+    g, cur, src, u = _walk_fixture(rng, w=w)
+    got = walk_mod.walk_step(
+        cur, src, u, g.row_ptr, g.out_deg, g.col_idx, interpret=True
+    )
+    want = ref.walk_step_ref(cur, src, u, g.row_ptr, g.out_deg, g.col_idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("w", [1, 5, 130])
+def test_walk_step_wrapper_pads_ragged(w, rng):
+    """W not a multiple of w_tile: ops.walk_step pads and slices."""
+    g, cur, src, u = _walk_fixture(rng, w=max(w, 1))
+    cur, src, u = cur[:w], src[:w], u[:w]
+    got = ops.walk_step(cur, src, u, g.row_ptr, g.out_deg, g.col_idx)
+    want = ref.walk_step_ref(cur, src, u, g.row_ptr, g.out_deg, g.col_idx)
+    assert got.shape == (w,)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_walk_step_wrapper_keeps_2d_shape(rng):
+    g, cur, src, u = _walk_fixture(rng, w=96)
+    cur2 = cur.reshape(8, 12)
+    src2 = src.reshape(8, 12)
+    u2 = u.reshape(8, 12)
+    got = ops.walk_step(cur2, src2, u2, g.row_ptr, g.out_deg, g.col_idx)
+    assert got.shape == (8, 12)
+    want = ref.walk_step_ref(cur, src, u, g.row_ptr, g.out_deg, g.col_idx)
+    np.testing.assert_array_equal(np.asarray(got).reshape(-1),
+                                  np.asarray(want))
+
+
+def test_walk_step_dangling_rows_jump_home(rng):
+    """Dangling cursors must land on their walk's source, not a gather."""
+    from repro.core.graph import Graph
+
+    # vertices 3, 4 dangling; 0-2 form a cycle
+    g = Graph.from_edges([0, 1, 2], [1, 2, 0], n=5)
+    cur = jnp.asarray([3, 4, 0, 3] * 32, jnp.int32)
+    src = jnp.asarray([1, 2, 4, 0] * 32, jnp.int32)
+    u = jnp.asarray(np.linspace(0, 0.999, 128), jnp.float32)
+    got = np.asarray(ops.walk_step(
+        cur, src, u, g.row_ptr, g.out_deg, g.col_idx
+    ))
+    np.testing.assert_array_equal(got[0::4], 1)   # dangling -> source
+    np.testing.assert_array_equal(got[1::4], 2)
+    np.testing.assert_array_equal(got[2::4], 1)   # 0's only edge -> 1
+    np.testing.assert_array_equal(got[3::4], 0)
+
+
+def test_walk_step_clip_at_csr_end(rng):
+    """The last CSR row's sampled address must stay inside col_idx even at
+    u -> 1 (the clipped-window boundary the DMA reads)."""
+    from repro.core.graph import Graph
+
+    g = Graph.from_edges([0, 1, 1, 1], [1, 0, 0, 0], n=2)
+    cur = jnp.full((128,), 1, jnp.int32)          # the last row, deg 3
+    src = jnp.zeros((128,), jnp.int32)
+    u = jnp.full((128,), 0.999999, jnp.float32)   # samples the last edge
+    got = np.asarray(ops.walk_step(
+        cur, src, u, g.row_ptr, g.out_deg, g.col_idx
+    ))
+    np.testing.assert_array_equal(got, 0)
+
+
+def test_walk_step_edgeless_fallback(rng):
+    from repro.core.graph import Graph
+
+    g = Graph.from_edges(np.zeros(0, np.int64), np.zeros(0, np.int64), n=4)
+    cur = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    src = jnp.asarray([3, 2, 1, 0], jnp.int32)
+    u = jnp.zeros((4,), jnp.float32)
+    got = ops.walk_step(cur, src, u, g.row_ptr, g.out_deg, g.col_idx)
+    np.testing.assert_array_equal(np.asarray(got), [3, 2, 1, 0])
+
+
+def test_walk_step_memory_contract(rng):
+    """col_idx must ride as an ANY/HBM ref; every VMEM block stays O(w_tile)
+    — independent of n and nnz (the DMA-gather discipline)."""
+    g, cur, src, u = _walk_fixture(rng, n=4096, w=256)
+    blocks = _pallas_block_specs(
+        walk_mod.walk_step, cur, src, u, g.row_ptr, g.out_deg, g.col_idx,
+        w_tile=128, interpret=True,
+    )
+    budget = walk_mod.vmem_bytes(128) // 4 + 128  # elements, not bytes
+    assert budget < g.m and budget < g.n
+    _assert_hbm_contract(blocks, hbm_shapes={(g.m,)}, vmem_budget=budget)
+    for csr_shape in [(g.n + 1,), (g.n,), (g.m,)]:
+        assert all(
+            space == "any" for shape, space in blocks if shape == csr_shape
+        )
+
+
+def test_walk_step_vmem_accounting():
+    assert walk_mod.vmem_bytes(128) < 16 * 1024
+    assert walk_mod.vmem_bytes(128) == walk_mod.vmem_bytes(128)
+
+
+@pytest.mark.tpu
+def test_walk_step_compiled(rng):
+    """interpret=False compile + run — the real-TPU gate for the DMA path."""
+    g, cur, src, u = _walk_fixture(rng, w=256)
+    got = walk_mod.walk_step(
+        cur, src, u, g.row_ptr, g.out_deg, g.col_idx, interpret=False
+    )
+    want = ref.walk_step_ref(cur, src, u, g.row_ptr, g.out_deg, g.col_idx)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
