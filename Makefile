@@ -3,7 +3,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-parity test-kernels bench bench-smoke bench-walks
+.PHONY: test test-fast test-parity test-kernels bench bench-smoke bench-walks \
+	bench-preprocess-dist
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
@@ -36,3 +37,10 @@ bench-smoke:
 # and BENCH_preprocess.json (docs/indexing_path.md)
 bench-walks:
 	PYTHONPATH=src $(PY) -m benchmarks.run --only walks,preprocess
+
+# sharded offline build on a host-simulated 4-device CPU mesh: records the
+# build_index_sharded rows (schedule vs respawn scheduling — the >= 2x
+# respawn gate at r=16) into BENCH_preprocess.json's dist section
+bench-preprocess-dist:
+	XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
+		$(PY) -m benchmarks.run --only preprocess

@@ -524,6 +524,36 @@ def exchange_bytes_per_iteration(cfg: DistConfig) -> Dict[str, float]:
 # distributed MCFP walk step (offline indexing)
 # ---------------------------------------------------------------------------
 
+def _walk_graph(row_ptr, col_idx, out_deg) -> Graph:
+    """Wrap replicated CSR slabs for the walk engine.
+
+    The walk engine never reads the COO ``src`` field; poison it so any
+    future consumer gathers index -1 instead of silently using
+    destinations as sources (DCE'd while unused)."""
+    m = col_idx.shape[0]
+    return Graph(
+        row_ptr=row_ptr, col_idx=col_idx,
+        src=jnp.broadcast_to(jnp.int32(-1), (m,)),
+        out_deg=out_deg, n=out_deg.shape[0], m=m,
+    )
+
+
+def _merge_sparse_counts(counts, axes, l: int):
+    """Cross-shard sketch merge: one ``all_gather`` of the per-shard
+    ``[rows, l]`` sketches along the width axis + one dedup-merge back to
+    ``l``, plus the psum'd ``moves`` and the full ``dropped`` ledger
+    (per-shard sketch truncation + whatever this merge compacts away), so
+    ``fp_v.sum(1) + dropped == moves`` holds exactly for any ``l``.  The
+    one communication step of both the sharded walk-counts step and the
+    sharded index build."""
+    av = jax.lax.all_gather(counts.fp.values, axes, axis=1, tiled=True)
+    ai = jax.lax.all_gather(counts.fp.indices, axes, axis=1, tiled=True)
+    moves = jax.lax.psum(counts.moves, axes)
+    fp_v, fp_i, dropped = frontier_mod.merge_sketch_parts(
+        av, ai, jax.lax.psum(counts.fp_dropped, axes), l
+    )
+    return fp_v, fp_i, moves, dropped
+
 def make_walk_counts_step(cfg: DistConfig, mesh: Mesh, *, max_steps: int = 64):
     """Returns fn(row_ptr, col_idx, out_deg, sources[S], key) ->
     (fp_counts [S, n] vertex-sharded, moves [S]).
@@ -631,32 +661,13 @@ def make_sparse_walk_counts_step(
     def local_fn(row_ptr, col_idx, out_deg, sources, key):
         for ax in axes:  # distinct walk stream per shard
             key = jax.random.fold_in(key, jax.lax.axis_index(ax))
-        m = col_idx.shape[0]
-        g = Graph(
-            # the walk engine never reads the COO src field; poison it so
-            # any future consumer gathers index -1 instead of silently
-            # using destinations as sources (DCE'd while unused)
-            row_ptr=row_ptr, col_idx=col_idx,
-            src=jnp.broadcast_to(jnp.int32(-1), (m,)),
-            out_deg=out_deg, n=out_deg.shape[0], m=m,
-        )
+        g = _walk_graph(row_ptr, col_idx, out_deg)
         counts = simulate_walks_sparse(
             g, sources, r_local, key, l=l, ep_l=0, c=cfg.c,
             max_steps=max_steps, compact_every=compact_every,
         )
-        # final sketch merge: gather every shard's top-l columns, dedup +
-        # re-compact — the one step that crosses shards
-        av = jax.lax.all_gather(counts.fp.values, axes, axis=1, tiled=True)
-        ai = jax.lax.all_gather(counts.fp.indices, axes, axis=1, tiled=True)
-        fp_v, fp_i = frontier_mod.compact_arrays(av, ai, l)
-        moves = jax.lax.psum(counts.moves, axes)
+        fp_v, fp_i, moves, dropped = _merge_sparse_counts(counts, axes, l)
         walks = jax.lax.psum(counts.walks, axes)
-        # dropped ledger: per-shard sketch truncation + merge truncation,
-        # so fp_v.sum(1) + dropped == moves holds exactly for any l
-        dropped = jax.lax.psum(counts.fp_dropped, axes)
-        dropped = dropped + jnp.maximum(
-            jnp.sum(av, axis=1) - jnp.sum(fp_v, axis=1), 0.0
-        )
         return fp_v, fp_i, moves, walks, dropped
 
     in_specs = (
@@ -665,6 +676,127 @@ def make_sparse_walk_counts_step(
         P(),
     )
     out_specs = (P(), P(), P(), P(), P())
+    return shard_map(
+        local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+
+
+def make_sparse_index_build_step(
+    cfg: DistConfig,
+    mesh: Mesh,
+    *,
+    r: int,
+    l: int,
+    sketch_l: int,
+    real_n: int,
+    max_steps: int = 64,
+    compact_every: int = 8,
+    source_batch: int = 256,
+    respawn: bool = False,
+):
+    """The whole offline index build as one sharded device computation.
+
+    Returns fn(row_ptr, col_idx, out_deg, key) -> ``(values f32[n, l],
+    indices int32[n, l], kept f32[n], dropped f32[n])`` with the index
+    arrays sharded ``P(model, None)`` — each model shard sweeps the source
+    chunks of its own vertex interval with a ``lax.scan`` (so the sweep is
+    device-side, not a host chunk loop) and emits only its ``[n_shard, l]``
+    block; no device ever holds a replicated ``[n, l]`` index (the jaxpr
+    gate in ``tests/dist_engine_check.py``).  Graph arrays arrive
+    replicated and padded to ``cfg.n`` rows.
+
+    Per chunk this drives the :func:`make_sparse_walk_counts_step`
+    machinery restricted to the batch axes: each data replica runs
+    ``r / n_data`` walks per row (:func:`repro.core.walks
+    .simulate_walks_sparse`, respawn-mode when ``respawn``) and the
+    sketches merge through the same one-``all_gather`` dedup
+    (``_merge_sparse_counts``), then normalize/truncate via
+    ``index.normalize_sketch_to_index_rows``.  Key discipline: chunk at
+    global source offset ``o`` uses ``fold_in(key, o)``; data replica
+    ``s`` (the linear index over ``cfg.batch_axes``) folds ``s`` on top —
+    the exact fold order of the single-device ``engine="sparse"`` build at
+    ``r_splits = n_data``, which is what makes the two builders agree row
+    for row under one key.
+
+    Requires ``cfg.n_shard`` divisible by ``source_batch`` (so shard
+    intervals align with the single-device chunk grid) and ``r`` divisible
+    by the batch-axis shard count.
+    """
+    from repro.core.index import normalize_sketch_to_index_rows
+    from repro.core.walks import simulate_walks_sparse
+
+    model = cfg.model_axis
+    ns = cfg.n_shard
+    axes = tuple(cfg.batch_axes)
+    n_split = 1
+    for ax in axes:
+        n_split *= mesh.shape[ax]
+    if r % n_split != 0:
+        raise ValueError(
+            f"r={r} must divide evenly over the {n_split} walk shards"
+        )
+    if ns % source_batch != 0:
+        raise ValueError(
+            f"n_shard={ns} must be a multiple of source_batch={source_batch}"
+        )
+    r_local = r // n_split
+    n_chunks = ns // source_batch
+
+    def local_fn(row_ptr, col_idx, out_deg, key):
+        me = jax.lax.axis_index(model)
+        lo = me * ns
+        # linear data-replica id: the split index the single-device
+        # r_splits emulation folds (row-major over cfg.batch_axes)
+        split = jnp.int32(0)
+        for ax in axes:
+            split = split * mesh.shape[ax] + jax.lax.axis_index(ax)
+        g = _walk_graph(row_ptr, col_idx, out_deg)
+
+        def chunk_body(carry, j):
+            offset = lo + j * source_batch
+            sources = offset + jnp.arange(source_batch, dtype=jnp.int32)
+            chunk_key = jax.random.fold_in(key, offset)
+            sub_key = (
+                chunk_key if n_split == 1
+                else jax.random.fold_in(chunk_key, split)
+            )
+            counts = simulate_walks_sparse(
+                g, sources, r_local, sub_key, l=sketch_l, ep_l=0, c=cfg.c,
+                max_steps=max_steps, compact_every=compact_every,
+                respawn=respawn,
+            )
+            if n_split > 1:
+                fp_v, fp_i, moves, dropped = _merge_sparse_counts(
+                    counts, axes, sketch_l
+                )
+            else:
+                fp_v, fp_i = counts.fp.values, counts.fp.indices
+                moves, dropped = counts.moves, counts.fp_dropped
+            vals, idxs, kept, dropped_est = normalize_sketch_to_index_rows(
+                fp_v, fp_i, moves, dropped, l
+            )
+            # pad vertices (>= real_n): dangling rows that walked in place —
+            # zero them so the sharded index carries no phantom mass
+            realm = sources < real_n
+            vals = jnp.where(realm[:, None], vals, 0.0)
+            idxs = jnp.where(realm[:, None], idxs, 0)
+            kept = jnp.where(realm, kept, 0.0)
+            dropped_est = jnp.where(realm, dropped_est, 0.0)
+            return carry, (vals, idxs, kept, dropped_est)
+
+        _, (vals, idxs, kept, dropped) = jax.lax.scan(
+            chunk_body, 0, jnp.arange(n_chunks, dtype=jnp.int32)
+        )
+        return (
+            vals.reshape(ns, l), idxs.reshape(ns, l),
+            kept.reshape(ns), dropped.reshape(ns),
+        )
+
+    in_specs = (P(None), P(None), P(None), P())   # graph + key replicated
+    out_specs = (
+        P(model, None), P(model, None), P(model), P(model),
+    )
     return shard_map(
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,

@@ -177,6 +177,31 @@ def fold_topk(
     return out_v, out_i, jnp.maximum(dropped, 0.0)
 
 
+def merge_sketch_parts(
+    values: jax.Array,
+    indices: jax.Array,
+    dropped: jax.Array,
+    k: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Dedup-merge concatenated sketch parts back to width ``k``, folding
+    this merge's own truncation into the running ``dropped`` ledger.
+
+    The one merge law shared by the single-device ``r_splits`` chunk
+    estimate (``index.sparse_chunk_estimates``) and the distributed sketch
+    merge (``distributed_engine._merge_sparse_counts``) — the sharded /
+    single-device row-for-row parity gate depends on the two staying
+    bit-identical, so both call here instead of inlining the sequence.
+    ``values/indices [rows, parts * k']`` are the parts concatenated along
+    the width axis (split order == gather order); ``dropped`` carries the
+    per-part truncation already accumulated.
+    """
+    out_v, out_i = compact_arrays(values, indices, k)
+    dropped = dropped + jnp.maximum(
+        jnp.sum(values, axis=1) - jnp.sum(out_v, axis=1), 0.0
+    )
+    return out_v, out_i, dropped
+
+
 def threshold_values(values: jax.Array, threshold: float) -> jax.Array:
     """Epsilon sparsification (paper Section 3.3): zero entries below eps."""
     if threshold <= 0.0:

@@ -17,12 +17,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Iterable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import frontier as frontier_mod
 from repro.core import mcfp
 from repro.core.graph import Graph
 from repro.core.walks import DEFAULT_C, simulate_walks_sparse
@@ -65,9 +67,41 @@ def truncate_topl(estimates: jax.Array, l: int) -> Tuple[jax.Array, jax.Array]:
     return vals, idxs.astype(jnp.int32)
 
 
+def normalize_sketch_to_index_rows(
+    fp_v: jax.Array,
+    fp_i: jax.Array,
+    moves: jax.Array,
+    dropped_counts: jax.Array,
+    l: int,
+) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Sketch counts -> truncated index rows: the one normalization both
+    the single-device chunk (:func:`sparse_chunk_estimates`) and the
+    sharded build step (``distributed_engine.make_sparse_index_build_step``)
+    apply, so the two builders agree bitwise under the same keys.
+
+    ``fp_v/fp_i [rows, sketch_l]`` is a (merged) visit-count sketch sorted
+    descending, ``moves`` the MCFP denominator, ``dropped_counts`` the
+    count-domain dropped-mass ledger.  Returns ``(vals, idxs, kept,
+    dropped)`` in estimate units, ``vals/idxs`` sliced to width ``l``.
+    """
+    inv_moves = 1.0 / jnp.maximum(moves[:, None], 1.0)
+    est_v = fp_v * inv_moves                          # sorted descending
+    vals, idxs = est_v[:, :l], fp_i[:, :l]
+    idxs = jnp.where(vals > 0, idxs, 0)
+    kept = jnp.sum(vals, axis=1)
+    dropped = (
+        jnp.sum(est_v[:, l:], axis=1)
+        + dropped_counts * inv_moves[:, 0]
+    )
+    return vals, idxs, kept, dropped
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("r", "l", "sketch_l", "c", "max_steps", "compact_every"),
+    static_argnames=(
+        "r", "l", "sketch_l", "c", "max_steps", "compact_every", "r_splits",
+        "respawn",
+    ),
 )
 def sparse_chunk_estimates(
     graph: Graph,
@@ -80,6 +114,8 @@ def sparse_chunk_estimates(
     c: float = DEFAULT_C,
     max_steps: int = 64,
     compact_every: int = 8,
+    r_splits: int = 1,
+    respawn: bool = False,
 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """One source chunk of the sparse index build, entirely on device.
 
@@ -91,21 +127,46 @@ def sparse_chunk_estimates(
     device so the builder syncs once at the end, never per chunk.  The
     traced computation holds no ``f32[rows, n]`` array (the memory contract
     ``tests/test_walks_sparse.py`` asserts on this function's jaxpr).
+
+    ``r_splits > 1`` runs the chunk as that many independent sub-passes of
+    ``r / r_splits`` walks (keys ``fold_in(key, split)``) whose sketches are
+    concatenated in split order and dedup-merged back to ``sketch_l`` — the
+    exact per-chunk key/fold discipline of the sharded builder, so a
+    single-device build at ``r_splits = <mesh size>`` reproduces
+    :func:`build_index_sharded` row for row.  ``respawn`` selects
+    respawn-mode walk scheduling (see
+    :func:`repro.core.walks.respawn_schedule`).
     """
-    counts = simulate_walks_sparse(
-        graph, chunk_sources, r, key, l=sketch_l, ep_l=0, c=c,
-        max_steps=max_steps, compact_every=compact_every,
-    )
-    inv_moves = 1.0 / jnp.maximum(counts.moves[:, None], 1.0)
-    est_v = counts.fp.values * inv_moves              # sorted descending
-    vals, idxs = est_v[:, :l], counts.fp.indices[:, :l]
-    idxs = jnp.where(vals > 0, idxs, 0)
-    kept = jnp.sum(vals, axis=1)
-    dropped = (
-        jnp.sum(est_v[:, l:], axis=1)
-        + counts.fp_dropped * inv_moves[:, 0]
-    )
-    return vals, idxs, kept, dropped
+    if r % r_splits != 0:
+        raise ValueError(f"r={r} must divide over r_splits={r_splits}")
+    if r_splits > 1:
+        vs, is_ = [], []
+        moves = jnp.zeros((chunk_sources.shape[0],), jnp.float32)
+        dropped = jnp.zeros_like(moves)
+        for s in range(r_splits):
+            counts = simulate_walks_sparse(
+                graph, chunk_sources, r // r_splits,
+                jax.random.fold_in(key, s), l=sketch_l, ep_l=0, c=c,
+                max_steps=max_steps, compact_every=compact_every,
+                respawn=respawn,
+            )
+            vs.append(counts.fp.values)
+            is_.append(counts.fp.indices)
+            moves = moves + counts.moves
+            dropped = dropped + counts.fp_dropped
+        fp_v, fp_i, dropped = frontier_mod.merge_sketch_parts(
+            jnp.concatenate(vs, axis=1), jnp.concatenate(is_, axis=1),
+            dropped, sketch_l,
+        )
+    else:
+        counts = simulate_walks_sparse(
+            graph, chunk_sources, r, key, l=sketch_l, ep_l=0, c=c,
+            max_steps=max_steps, compact_every=compact_every,
+            respawn=respawn,
+        )
+        fp_v, fp_i = counts.fp.values, counts.fp.indices
+        moves, dropped = counts.moves, counts.fp_dropped
+    return normalize_sketch_to_index_rows(fp_v, fp_i, moves, dropped, l)
 
 
 def build_index(
@@ -120,6 +181,8 @@ def build_index(
     sources: Optional[np.ndarray] = None,
     engine: str = "sparse",
     compact_every: int = 8,
+    r_splits: int = 1,
+    respawn: bool = False,
 ) -> Tuple[PPRIndex, dict]:
     """Offline preprocessing: MCFP for every vertex, truncated to top-L.
 
@@ -129,22 +192,46 @@ def build_index(
     itself — no ``f32[rows, n]`` accumulator, no host numpy round-trip, so
     the build runs at the graph sizes the online sparse path already
     handles.  ``engine="legacy"`` keeps the dense-accumulator oracle.
+    ``r_splits``/``respawn`` (sparse engine only) select the sharded
+    builder's per-chunk walk decomposition and respawn-mode scheduling —
+    see :func:`sparse_chunk_estimates` and :func:`build_index_sharded`.
+
+    Duplicate ``sources`` entries are deduplicated up front (a repeated id
+    would otherwise last-writer-win in the subset scatter *and*
+    double-count the kept/dropped mass ledger); the count is reported as
+    ``stats["duplicate_sources"]`` and the build runs over the sorted
+    unique set.
 
     Returns (index, stats) where stats reports the truncated tail mass —
     the accuracy cost of the memory budget.  All host syncs are deferred to
     one ``device_get`` at the end.
     """
     n = graph.n
+    l = min(l, n)  # a row holds at most n entries (both engines rely on it)
     if sources is None:
+        # the default full sweep is unique by construction: skip the
+        # O(n log n) host sort + copies the dedup would cost at scale
         sources = np.arange(n, dtype=np.int32)
+        duplicate_sources = 0
+    else:
+        sources = np.asarray(sources, dtype=np.int32)
+        unique_sources = np.unique(sources)  # sorted unique set
+        duplicate_sources = len(sources) - len(unique_sources)
+        sources = unique_sources
     if engine == "sparse":
-        return _build_index_sparse(
+        index, stats = _build_index_sparse(
             graph, r, l, key, c=c, max_steps=max_steps,
             source_batch=source_batch, sources=sources,
-            compact_every=compact_every,
+            compact_every=compact_every, r_splits=r_splits, respawn=respawn,
         )
+        stats["duplicate_sources"] = duplicate_sources
+        return index, stats
     if engine != "legacy":
         raise ValueError(f"unknown engine {engine!r}")
+    if r_splits != 1 or respawn:
+        raise ValueError(
+            "r_splits/respawn apply to the sparse engine only"
+        )
 
     values = np.zeros((n, l), dtype=np.float32)
     indices = np.zeros((n, l), dtype=np.int32)
@@ -182,6 +269,7 @@ def build_index(
         r=r,
         l=l,
         engine="legacy",
+        duplicate_sources=duplicate_sources,
         kept_mass=float(kept),
         dropped_mass=dropped,
         drop_fraction=dropped / max(float(total), 1e-12),
@@ -206,8 +294,12 @@ def _build_index_sparse(
     source_batch: int,
     sources: np.ndarray,
     compact_every: int,
+    r_splits: int = 1,
+    respawn: bool = False,
 ) -> Tuple[PPRIndex, dict]:
-    """Streaming sparse build: ``SparseWalkCounts -> PPRIndex`` on device."""
+    """Streaming sparse build: ``SparseWalkCounts -> PPRIndex`` on device.
+
+    ``sources`` must be unique (``build_index`` dedups before dispatch)."""
     n = graph.n
     l = min(l, n)
     # sketch headroom over the index width keeps the running top-L honest:
@@ -230,6 +322,7 @@ def _build_index_sparse(
         vals, idxs, kept, dropped = sparse_chunk_estimates(
             graph, chunk, sub_key, r=r, l=l, sketch_l=sketch_l, c=c,
             max_steps=max_steps, compact_every=compact_every,
+            r_splits=r_splits, respawn=respawn,
         )
         # device-level slicing of the ragged tail: no host sync, pad rows
         # never reach the index or the stats
@@ -267,6 +360,8 @@ def _build_index_sparse(
         l=l,
         engine="sparse",
         sketch_l=sketch_l,
+        r_splits=r_splits,
+        respawn=bool(respawn),
         pad_rows=pad_rows,
         pad_fraction=pad_rows / max(n_src + pad_rows, 1),
         kept_mass=kept,
@@ -275,6 +370,147 @@ def _build_index_sparse(
         nbytes=n * l * 8,
     )
     return PPRIndex(values=values, indices=indices, l=l, n=n), stats
+
+
+@functools.lru_cache(maxsize=32)
+def _cached_sharded_build_step(
+    cfg, mesh, r, l, sketch_l, real_n, max_steps, compact_every,
+    source_batch, respawn,
+):
+    """Jitted sharded-build step, memoized on its static config so repeated
+    :func:`build_index_sharded` calls (benchmark sweeps, rebuild loops)
+    reuse one compilation instead of re-tracing the whole sweep."""
+    from repro.core.distributed_engine import make_sparse_index_build_step
+
+    return jax.jit(make_sparse_index_build_step(
+        cfg, mesh, r=r, l=l, sketch_l=sketch_l, real_n=real_n,
+        max_steps=max_steps, compact_every=compact_every,
+        source_batch=source_batch, respawn=respawn,
+    ))
+
+
+def build_index_sharded(
+    graph: Graph,
+    r: int,
+    l: int,
+    key: jax.Array,
+    *,
+    mesh,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    source_batch: int = 256,
+    compact_every: int = 8,
+    respawn: bool = True,
+    model_axis: str = "model",
+    batch_axes: Tuple[str, ...] = ("data",),
+) -> Tuple[PPRIndex, dict]:
+    """Pod-scale offline preprocessing: the full-index build under a mesh.
+
+    The single-device :func:`build_index` drives every source chunk from
+    the host on one device; here the whole sweep is one device-side
+    computation (``distributed_engine.make_sparse_index_build_step``):
+
+    * **sources shard over the model axis** — each shard sweeps the source
+      chunks of its own vertex interval with a ``lax.scan``, so the
+      resulting ``PPRIndex`` ``values/indices [n, L]`` come back sharded
+      ``P(model, None)`` and no device ever holds (or builds) the full
+      index;
+    * **walks split over the batch axes** — each data replica runs
+      ``r / n_data`` walks per row with a per-replica key and the sketches
+      dedup-merge through one ``all_gather`` (the
+      ``make_sparse_walk_counts_step`` merge);
+    * **respawn-mode scheduling** (default on) keeps walk-slot occupancy
+      ~100% through the sweep instead of re-entering the ``(1-c)^t``
+      schedule tail for every chunk
+      (:func:`repro.core.walks.respawn_schedule`).
+
+    Key discipline: chunk at global source offset ``o`` uses
+    ``fold_in(key, o)`` and data-replica ``s`` folds ``s`` on top — exactly
+    :func:`build_index` with ``engine="sparse", r_splits=n_data`` over the
+    same chunk grid, so the sharded and single-device builds agree row for
+    row (the ``tests/dist_engine_check.py`` parity gate).
+
+    The vertex count pads up to ``ep * ceil_to(source_batch)`` so shard
+    intervals align with the chunk grid; pad vertices are dangling, their
+    rows are zeroed device-side, and the returned index has ``n = n_pad``
+    (consumers only ever gather real rows; ``BatchQueryEngine`` accepts
+    ``index.n >= graph.n``).  Stats mirror :func:`build_index` plus
+    ``n``/``n_pad``/``shards``/``r_splits``.
+    """
+    from repro.core.distributed_engine import DistConfig
+
+    ep = int(mesh.shape[model_axis])
+    n_split = 1
+    for ax in batch_axes:
+        n_split *= int(mesh.shape[ax])
+    if r % n_split != 0:
+        raise ValueError(
+            f"r={r} must divide evenly over the {n_split} walk shards"
+        )
+    n = graph.n
+    l = min(l, n)
+    sketch_l = min(n, max(2 * l, l + 32))  # same headroom as single-device
+    ns = -(-n // ep)
+    if source_batch > ns:
+        # clamping changes the chunk grid — and with it the per-chunk keys.
+        # Row-for-row parity with the single-device build then requires
+        # passing the *effective* batch (stats["source_batch"]) to
+        # build_index, not the requested one.  (Rounding the shard interval
+        # up to the requested batch instead would sweep r walks for every
+        # phantom pad row — worse than the narrower grid.)
+        warnings.warn(
+            f"source_batch={source_batch} exceeds the per-shard interval; "
+            f"clamped to {ns} — single-device parity comparisons must use "
+            "the effective batch from stats['source_batch']",
+            stacklevel=2,
+        )
+    source_batch = max(1, min(source_batch, ns))
+    ns = -(-ns // source_batch) * source_batch
+    n_pad = ns * ep
+    cfg = DistConfig(
+        n=n_pad, ep=ep, c=c, model_axis=model_axis,
+        batch_axes=tuple(batch_axes),
+    )
+    # pad the graph arrays host-side: pad vertices are dangling, so their
+    # (discarded) rows walk in place and never touch real rows' streams
+    rp = np.asarray(graph.row_ptr, np.int32)
+    od = np.asarray(graph.out_deg, np.int32)
+    if n_pad > n:
+        rp = np.concatenate([rp, np.full(n_pad - n, rp[-1], np.int32)])
+        od = np.concatenate([od, np.zeros(n_pad - n, np.int32)])
+    step = _cached_sharded_build_step(
+        cfg, mesh, r, l, sketch_l, n, max_steps, compact_every,
+        source_batch, respawn,
+    )
+    with mesh:
+        values, indices, kept_rows, dropped_rows = step(
+            jnp.asarray(rp), jnp.asarray(np.asarray(graph.col_idx, np.int32)),
+            jnp.asarray(od), key,
+        )
+    kept, dropped = jax.device_get(
+        (jnp.sum(kept_rows), jnp.sum(dropped_rows))
+    )
+    kept, dropped = float(kept), float(dropped)
+    stats = dict(
+        r=r,
+        l=l,
+        engine="sparse-sharded",
+        sketch_l=sketch_l,
+        r_splits=n_split,
+        respawn=bool(respawn),
+        n=n,
+        n_pad=n_pad,
+        shards=ep,
+        source_batch=source_batch,
+        pad_rows=n_pad - n,
+        pad_fraction=(n_pad - n) / max(n_pad, 1),
+        duplicate_sources=0,
+        kept_mass=kept,
+        dropped_mass=dropped,
+        drop_fraction=dropped / max(kept + dropped, 1e-12),
+        nbytes=n_pad * l * 8,
+    )
+    return PPRIndex(values=values, indices=indices, l=l, n=n_pad), stats
 
 
 def index_from_dense(estimates: jax.Array, l: int) -> PPRIndex:

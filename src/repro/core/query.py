@@ -63,6 +63,9 @@ class QueryConfig:
     frontier_path: str = "auto"    # dense | sparse | auto
     hub_split_degree: int = 0      # ELL row-split width for the sparse push
                                    # (0 = no splitting; see verd.gather_push_edges)
+    seed: int = 0                  # base PRNG seed for the Monte-Carlo
+                                   # modes (mcfp); distinct per process so
+                                   # replicas don't share MC noise
 
 
 class BatchQueryEngine:
@@ -79,11 +82,19 @@ class BatchQueryEngine:
         self.config = config or QueryConfig()
         if self.config.mode in ("powerwalk", "fppr") and index is None:
             raise ValueError(f"mode {self.config.mode} requires a PPR index")
+        if index is not None and index.n < graph.n:
+            raise ValueError(
+                f"index covers {index.n} rows < graph.n={graph.n}"
+            )
         if self.config.frontier_path not in ("dense", "sparse", "auto"):
             raise ValueError(
                 f"unknown frontier_path {self.config.frontier_path!r}"
             )
-        self._key = jax.random.PRNGKey(0)
+        # base key is pure config (seed), so a rebuilt engine replays the
+        # same MC noise; the stateful split below serves direct query_dense
+        # calls, while run() folds chunk offsets for per-chunk determinism
+        self._base_key = jax.random.PRNGKey(self.config.seed)
+        self._key = self._base_key
         self._degree_cap: Optional[int] = None  # resolved lazily, host-side
 
     # -- sparse-path plumbing ------------------------------------------------
@@ -153,6 +164,16 @@ class BatchQueryEngine:
         )
         return h
 
+    @property
+    def effective_top_k(self) -> int:
+        """Served answer width: ``cfg.top_k`` clamped to the graph.
+
+        The one place the clamp lives — an unclamped ``top_k > n`` would
+        make ``lax.top_k`` reject the dense rows and the sparse route
+        return a different width than the preallocated host buffers in
+        :meth:`run` / ``PPRService.poll`` expect."""
+        return max(1, min(self.config.top_k, self.graph.n))
+
     def query_sparse(self, sources: jax.Array, out_k: Optional[int] = None):
         """Sparse-path answers as a SparseFrontier (never builds [Q, n])."""
         cfg = self.config
@@ -165,13 +186,19 @@ class BatchQueryEngine:
         return verd_mod.verd_query_sparse(
             self.graph, sources, index,
             t=cfg.t_iterations, k=self.frontier_k, c=cfg.c,
-            threshold=cfg.threshold, out_k=out_k or cfg.top_k,
+            threshold=cfg.threshold, out_k=out_k or self.effective_top_k,
             degree_cap=self.degree_cap(),
             hub_split_degree=cfg.hub_split_degree,
         )
 
     # -- dense answers -----------------------------------------------------
-    def query_dense(self, sources: jax.Array) -> jax.Array:
+    def query_dense(
+        self, sources: jax.Array, *, key: Optional[jax.Array] = None
+    ) -> jax.Array:
+        """Dense [Q, n] answers.  ``key`` overrides the Monte-Carlo stream
+        of the ``mcfp`` mode (``run()`` passes a chunk-offset fold of the
+        config seed so reruns are reproducible chunk by chunk); without it
+        the engine's stateful key advances."""
         cfg = self.config
         g = self.graph
         if cfg.mode == "powerwalk":
@@ -187,8 +214,9 @@ class BatchQueryEngine:
         if cfg.mode == "fppr":
             return self.index.lookup_dense(sources)
         if cfg.mode == "mcfp":
-            self._key, sub = jax.random.split(self._key)
-            return mcfp_mod.estimate_ppr(g, sources, cfg.r_online, sub, c=cfg.c)
+            if key is None:
+                self._key, key = jax.random.split(self._key)
+            return mcfp_mod.estimate_ppr(g, sources, cfg.r_online, key, c=cfg.c)
         if cfg.mode == "pi":
             return pi_mod.power_iteration(
                 g, sources, n_iter=cfg.pi_iterations, c=cfg.c
@@ -197,13 +225,20 @@ class BatchQueryEngine:
 
     # -- top-k answers (the served product) ---------------------------------
     def query_topk(
-        self, sources: jax.Array
+        self, sources: jax.Array, *, key: Optional[jax.Array] = None
     ) -> Tuple[jax.Array, jax.Array]:
+        k = self.effective_top_k
         if self.uses_sparse_path():
-            sf = self.query_sparse(sources, out_k=self.config.top_k)
-            return sf.values, sf.indices
-        dense = self.query_dense(sources)
-        vals, idx = jax.lax.top_k(dense, self.config.top_k)
+            sf = self.query_sparse(sources, out_k=k)
+            vals, idx = sf.values, sf.indices
+        else:
+            dense = self.query_dense(sources, key=key)
+            vals, idx = jax.lax.top_k(dense, k)
+        # static-shape width contract (trace time): every route must hand
+        # back exactly the clamped width the host buffers were sized for
+        assert vals.shape[-1] == k and idx.shape[-1] == k, (
+            vals.shape, idx.shape, k,
+        )
         return vals, idx
 
     # -- batched driver ------------------------------------------------------
@@ -211,15 +246,20 @@ class BatchQueryEngine:
         """Execute a (possibly large) query set in max_batch chunks.
 
         Returns answers + timing; mirrors the paper's Table 3 measurements.
+        The Monte-Carlo mode folds each chunk's offset into the config-seed
+        key, so rerunning the same engine (or a rebuilt one with the same
+        seed) reproduces every chunk bit for bit.
         """
         sources = np.asarray(sources, dtype=np.int32)
-        k = self.config.top_k
+        k = self.effective_top_k
         vals = np.zeros((len(sources), k), dtype=np.float32)
         idxs = np.zeros((len(sources), k), dtype=np.int32)
         start = time.perf_counter()
         for i in range(0, len(sources), self.config.max_batch):
             chunk = jnp.asarray(sources[i : i + self.config.max_batch])
-            v, ix = self.query_topk(chunk)
+            v, ix = self.query_topk(
+                chunk, key=jax.random.fold_in(self._base_key, i)
+            )
             v.block_until_ready()
             vals[i : i + len(chunk)] = np.asarray(v)
             idxs[i : i + len(chunk)] = np.asarray(ix)
@@ -231,4 +271,5 @@ class BatchQueryEngine:
             queries=len(sources),
             qps=len(sources) / max(elapsed, 1e-9),
             mode=self.config.mode,
+            top_k=k,
         )

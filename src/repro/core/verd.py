@@ -81,8 +81,10 @@ def combine_with_index(
     l = index.l
     n_chunks = (n + vertex_chunk - 1) // vertex_chunk
     pad_n = n_chunks * vertex_chunk
-    vals = jnp.pad(index.values, ((0, pad_n - n), (0, 0)))
-    idxs = jnp.pad(index.indices, ((0, pad_n - n), (0, 0)))
+    # a sharded/padded index may carry extra all-zero rows (index.n >= n);
+    # the dense frontier can only touch the first n, so slice before padding
+    vals = jnp.pad(index.values[:n], ((0, pad_n - n), (0, 0)))
+    idxs = jnp.pad(index.indices[:n], ((0, pad_n - n), (0, 0)))
     f_pad = jnp.pad(f, ((0, 0), (0, pad_n - n)))
     vals = vals.reshape(n_chunks, vertex_chunk, l)
     idxs = idxs.reshape(n_chunks, vertex_chunk, l)

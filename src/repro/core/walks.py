@@ -237,6 +237,84 @@ def compaction_schedule(
     return tuple(widths)
 
 
+def respawn_schedule(
+    r: int,
+    *,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    compact_every: int = 8,
+    margin: float = 1.35,
+    width: int = 0,
+    slack: float = 1.15,
+    floor: int = 4,
+    lane: int = 4,
+    drain_eps: float = 0.02,
+) -> Tuple[Tuple[int, ...], int]:
+    """Static rounds for respawn-mode scheduling: ``(widths, total_steps)``.
+
+    Instead of tracking the ``(1-c)^t`` decay with ever-narrower buckets
+    (:func:`compaction_schedule`), respawn mode runs a *narrow fixed-width*
+    slot array at ~100% occupancy: every step, slots freed by termination
+    are refilled with fresh walks from each row's remaining quota (the
+    DrunkardMob slot-reuse idea).  The schedule is then
+
+    * ``launch`` rounds at the fixed width ``w0`` — enough rounds that the
+      expected launches (``c * w0`` per step) cover the quota ``r - w0``
+      with ``slack``; stragglers keep respawning into the drain, and any
+      quota still unspent at the very end is flushed as length-1 walks
+      (ledgered in ``truncated``), so every row still finishes exactly
+      ``r`` walks;
+    * a ``drain`` tail — :func:`compaction_schedule` decay from ``w0``,
+      truncated once ``(1-c)^t`` falls below ``drain_eps`` (the same
+      truncate-to-endpoint semantics as the ``max_steps`` cap).
+
+    Device slots processed — and with them the engine's two real costs,
+    scan steps and sketch-fold event columns — drop from ``sum_j w_j *
+    compact_every`` (which the floor of the decay schedule dominates at
+    small ``r``) to roughly ``slack * r / c`` plus one short drain
+    staircase — the ≥2x positions/sec win
+    ``benchmarks/bench_preprocess.py`` records.  ``width=0`` auto-derives
+    ``w0 ~ r / 3`` (lane-rounded): wide enough that the quota launches in
+    one or two rounds (fewer scan steps), narrow enough that the drain
+    staircase stays a fraction of the launch area.  ``floor``/``lane``
+    default to 4 — narrower than the decay schedule's 8 because the drain
+    cohort here is one fixed-width slot row, not the full launch width
+    (set ``lane=8`` on sublane-sensitive backends).
+    """
+    if r <= 0:
+        raise ValueError(f"r must be positive, got {r}")
+    w0 = width if width > 0 else int(math.ceil(r / 3))
+    w0 = ((w0 + lane - 1) // lane) * lane
+    w0 = min(r, max(floor, w0))
+    quota = r - w0
+    if quota > 0:
+        per_round = max(c * w0 * compact_every, 1e-9)
+        launch_rounds = int(math.ceil(slack * quota / per_round))
+        # trace-size bound: the unrolled round loop must stay O(max_steps)
+        # even under an explicitly narrow ``width`` (launch otherwise grows
+        # as ~r/width rounds).  Quota the capped launch can't place mops up
+        # during the drain or flushes as length-1 walks — ledgered, exact.
+        launch_rounds = min(
+            launch_rounds,
+            int(math.ceil(4 * max_steps / max(compact_every, 1))),
+        )
+    else:
+        launch_rounds = 0
+    drain_target = int(math.ceil(math.log(drain_eps) / math.log(1.0 - c))) \
+        if 0.0 < c < 1.0 else max_steps
+    drain_steps = min(
+        max_steps,
+        ((max(drain_target, 1) + compact_every - 1) // compact_every)
+        * compact_every,
+    )
+    drain = compaction_schedule(
+        w0, c=c, max_steps=drain_steps, compact_every=compact_every,
+        margin=margin, floor=floor, lane=lane,
+    )
+    widths = (w0,) * launch_rounds + drain
+    return widths, launch_rounds * compact_every + drain_steps
+
+
 def sample_edge_offsets(u: jax.Array, deg: jax.Array) -> jax.Array:
     """Edge offset ``~ Uniform{0..deg-1}`` from ``u ~ U[0, 1)``.
 
@@ -367,7 +445,8 @@ class _EventSketch:
     jax.jit,
     static_argnames=(
         "r", "l", "ep_l", "c", "max_steps", "compact_every", "margin",
-        "fold_width", "use_kernel", "kernel_interpret",
+        "fold_width", "use_kernel", "kernel_interpret", "respawn",
+        "respawn_width",
     ),
 )
 def simulate_walks_sparse(
@@ -385,6 +464,8 @@ def simulate_walks_sparse(
     fold_width: int = 0,
     use_kernel: bool = False,
     kernel_interpret: bool = True,
+    respawn: bool = False,
+    respawn_width: int = 0,
 ) -> SparseWalkCounts:
     """Run ``r`` walks per source through the compacted sparse-sketch engine.
 
@@ -408,6 +489,19 @@ def simulate_walks_sparse(
     compaction, with sketch folds on the ``fold_width`` cadence.  Walks
     surviving ``max_steps`` total positions are truncated to endpoints
     exactly like the legacy engine's cap.
+
+    ``respawn=True`` switches to respawn-mode scheduling
+    (:func:`respawn_schedule`): a narrow fixed-width slot array (width
+    ``respawn_width``, 0 = auto) runs at ~100% occupancy — every step,
+    slots freed by termination refill with fresh walks from a per-row
+    quota counter until all ``r`` walks of the row have launched, then the
+    array drains through the usual decay/compaction tail.  Quota still
+    unspent when the pass ends is flushed as length-1 walks (one counted
+    position at the source — ledgered in ``truncated``), so the
+    conservation identities close exactly in both modes.  In respawn mode
+    ``max_steps`` caps the *drain* tail (the per-walk cap is enforced by
+    the pass length rather than per slot; the geometric tail beyond it is
+    the same ``(1-c)^t`` mass either way).
     """
     rows = sources.shape[0]
     n = graph.n
@@ -417,48 +511,77 @@ def simulate_walks_sparse(
     track_ep = ep_l > 0
     if fold_width <= 0:
         fold_width = max(4 * l, 512)
-    schedule = compaction_schedule(
-        r, c=c, max_steps=max_steps, compact_every=compact_every,
-        margin=margin,
-    )
+    if respawn:
+        schedule, total_steps = respawn_schedule(
+            r, c=c, max_steps=max_steps, compact_every=compact_every,
+            margin=margin, width=respawn_width,
+        )
+    else:
+        schedule = compaction_schedule(
+            r, c=c, max_steps=max_steps, compact_every=compact_every,
+            margin=margin,
+        )
+        total_steps = max_steps
     src32 = sources.astype(jnp.int32)
     src2d = src32[:, None]
 
+    launched0 = min(r, schedule[0])
     cursors = jnp.broadcast_to(src2d, (rows, schedule[0])).astype(jnp.int32)
     alive = jnp.broadcast_to(
-        jnp.arange(schedule[0], dtype=jnp.int32)[None, :] < r,
+        jnp.arange(schedule[0], dtype=jnp.int32)[None, :] < launched0,
         (rows, schedule[0]),
     )
+    quota = jnp.full((rows,), r - launched0, jnp.int32)
     fp = _EventSketch(rows, max(l, 1), fold_width, enabled=track_fp)
     ep = _EventSketch(rows, max(ep_l, 1), fold_width, enabled=track_ep)
     moves = jnp.zeros((rows,), jnp.float32)
     walks_done = jnp.zeros((rows,), jnp.float32)
     truncated = jnp.zeros((rows,), jnp.float32)
 
-    def step_body(carry, t):
-        cursors, alive, moves, walks_done = carry
-        step_key = jax.random.fold_in(key, t)
-        k_move, k_term = jax.random.split(step_key)
+    def step_body(carry, xs):
+        cursors, alive, quota, moves, walks_done = carry
+        u_term, u_move = xs
+        if respawn:
+            # refill freed slots from the row quota: rank dead slots with a
+            # cumsum (the _compact_slots idiom) and respawn the first
+            # ``quota`` of them at the source — occupancy stays ~100%
+            dead = ~alive
+            rank = jnp.cumsum(dead.astype(jnp.int32), axis=1)  # 1-based
+            spawn = dead & (rank <= quota[:, None])
+            quota = quota - jnp.sum(spawn.astype(jnp.int32), axis=1)
+            cursors = jnp.where(spawn, src2d, cursors)
+            alive = alive | spawn
         af = alive.astype(jnp.float32)
         pos = cursors                      # position counted this step
         moves = moves + jnp.sum(af, axis=1)
-        terminate = alive & (
-            jax.random.uniform(k_term, cursors.shape) < c
-        )
+        terminate = alive & (u_term < c)
         tf = terminate.astype(jnp.float32)
         walks_done = walks_done + jnp.sum(tf, axis=1)
         alive = alive & ~terminate
-        u = jax.random.uniform(k_move, cursors.shape)
         nxt = advance_cursors(
-            graph, cursors, src2d, u,
+            graph, cursors, src2d, u_move,
             use_kernel=use_kernel, kernel_interpret=kernel_interpret,
         )
         cursors = jnp.where(alive, nxt, cursors)
-        return (cursors, alive, moves, walks_done), (af, pos, tf)
+        return (cursors, alive, quota, moves, walks_done), (af, pos, tf)
 
     def per_row(ev):
         # [steps, rows, w] -> per-row event columns [rows, steps * w]
         return ev.transpose(1, 0, 2).reshape(rows, -1)
+
+    def round_uniforms(t0, steps, w):
+        """Pre-draw the round's step uniforms ``[steps, rows, w]`` in one
+        batched RNG call: per step one (term, move) pair from the split of
+        ``fold_in(key, t)`` — hoisting the threefry chains out of the scan
+        body halves the fixed per-step cost the narrow respawn widths would
+        otherwise be dominated by."""
+        step_keys = jax.vmap(
+            lambda t: jax.random.split(jax.random.fold_in(key, t))
+        )(t0 + jnp.arange(steps))
+        draw = jax.vmap(
+            lambda k: jax.random.uniform(k, (rows, w))
+        )
+        return draw(step_keys[:, 0]), draw(step_keys[:, 1])
 
     t0 = 0
     for w in schedule:
@@ -469,25 +592,36 @@ def simulate_walks_sparse(
             walks_done = walks_done + n_over
             truncated = truncated + n_over
             ep.add(ov_w, ov_i)
-        # the last round may be ragged: never run past the max_steps cap
-        steps = min(compact_every, max_steps - t0)
-        (cursors, alive, moves, walks_done), (vis_w, vis_i, term_w) = (
+        # the last round may be ragged: never run past the step budget
+        steps = min(compact_every, total_steps - t0)
+        u_move, u_term = round_uniforms(t0, steps, w)
+        (cursors, alive, quota, moves, walks_done), (vis_w, vis_i, term_w) = (
             jax.lax.scan(
-                step_body, (cursors, alive, moves, walks_done),
-                t0 + jnp.arange(steps),
+                step_body, (cursors, alive, quota, moves, walks_done),
+                (u_term, u_move),
             )
         )
         fp.add(per_row(vis_w), per_row(vis_i))
         ep.add(per_row(term_w), per_row(vis_i))
         t0 += steps
 
-    # max_steps cap: survivors' current position is the endpoint (the same
-    # truncation as the legacy engine; tail mass ~ (1-c)^max_steps)
+    # step-budget cap: survivors' current position is the endpoint (the
+    # same truncation as the legacy engine; tail mass ~ (1-c)^max_steps)
     af = alive.astype(jnp.float32)
     n_trunc = jnp.sum(af, axis=1)
     walks_done = walks_done + n_trunc
     truncated = truncated + n_trunc
     ep.add(af, jnp.where(alive, cursors, 0))
+    if respawn:
+        # quota the pass never got to launch: flush as length-1 walks (one
+        # counted position at the source) so walks == R stays exact; a
+        # slack-tail event, ledgered like any other truncation
+        q_rem = quota.astype(jnp.float32)
+        moves = moves + q_rem
+        walks_done = walks_done + q_rem
+        truncated = truncated + q_rem
+        fp.add(q_rem[:, None], src2d)
+        ep.add(q_rem[:, None], src2d)
     fp.flush()
     ep.flush()
     return SparseWalkCounts(

@@ -38,6 +38,17 @@ class Answer:
 
 
 class PPRService:
+    """Serves PPR answers against a :class:`PPRIndex`.
+
+    The index may be the output of ``index.build_index_sharded``: its
+    ``values/indices`` arrays stay device-sharded over the model axis
+    (``P("model", None)``) and may carry zeroed pad rows (``index.n >=
+    graph.n``) — the query paths only ever gather real rows, so nothing is
+    replicated or re-laid-out to serve from it.  Answer width is the
+    engine's ``effective_top_k`` (``top_k`` clamped to the graph), so
+    ``poll()`` rows always match the configured buffers.
+    """
+
     def __init__(self, graph: Graph, index: Optional[PPRIndex],
                  cfg: Optional[ServiceConfig] = None, clock=None):
         self.cfg = cfg or ServiceConfig()
@@ -48,6 +59,15 @@ class PPRService:
         # the serving telemetry so capacity planning can see Q x K vs Q x n
         self.frontier_path = (
             "sparse" if self.engine.uses_sparse_path() else "dense"
+        )
+        self.answer_k = self.engine.effective_top_k
+        # index layout telemetry: pad rows of a sharded build + whether the
+        # backing arrays are device-sharded (capacity planning reads this)
+        self.index_rows = index.n if index is not None else 0
+        self.index_sharded = bool(
+            index is not None
+            and getattr(index.values, "sharding", None) is not None
+            and not index.values.sharding.is_fully_replicated
         )
         self.stats: Dict[str, float] = dict(
             served=0, batches=0, total_latency=0.0, max_latency=0.0,
@@ -98,6 +118,9 @@ class PPRService:
         wall = self.clock() - t0
         s = dict(self.stats)
         s["frontier_path"] = self.frontier_path
+        s["answer_k"] = self.answer_k
+        s["index_rows"] = self.index_rows
+        s["index_sharded"] = self.index_sharded
         s["wall_s"] = wall
         s["qps"] = len(answers) / max(wall, 1e-9)
         s["mean_latency"] = s["total_latency"] / max(s["served"], 1)

@@ -17,12 +17,130 @@ import numpy as np
 
 from repro.core import verd as verd_mod
 from repro.core.distributed_engine import (
-    DistConfig, build_sharded_graph, make_sparse_walk_counts_step,
-    make_verd_tile_step, make_walk_counts_step,
+    DistConfig, build_sharded_graph, make_sparse_index_build_step,
+    make_sparse_walk_counts_step, make_verd_tile_step, make_walk_counts_step,
 )
-from repro.core.index import index_from_dense
+from repro.core.index import build_index, build_index_sharded, index_from_dense
 from repro.core.power_iteration import exact_ppr_dense
 from repro.graphs import synthetic
+
+from jaxpr_utils import iter_eqns  # shared walker (tests dir is sys.path[0])
+
+
+def densify_rows(values, indices, n):
+    """Private copy of the conftest scatter oracle (plain subprocess)."""
+    values = np.asarray(values)
+    out = np.zeros((values.shape[0], n), np.float32)
+    np.add.at(
+        out, (np.arange(values.shape[0])[:, None], np.asarray(indices)),
+        values,
+    )
+    return out
+
+
+def check_sharded_build(mesh):
+    """ISSUE 5 acceptance gate: build_index_sharded == single-device
+    engine="sparse" build under the same per-chunk keys (same fold order),
+    with identical drop_fraction; per-device jaxpr holds no replicated
+    [n, L] index arrays; a sharded index serves through the query engine."""
+    from repro.core.query import BatchQueryEngine, QueryConfig
+
+    key = jax.random.PRNGKey(3)
+    g = synthetic.erdos_renyi(64, 4.0, seed=21)   # n == n_pad: exact grid
+    # walk shards = the 2-wide data axis -> single-device r_splits=2
+    for respawn in (False, True):
+        for l in (64, 6):                          # covering + truncating
+            sharded, st_sh = build_index_sharded(
+                g, r=64, l=l, key=key, mesh=mesh, source_batch=16,
+                respawn=respawn,
+            )
+            single, st_si = build_index(
+                g, r=64, l=l, key=key, source_batch=16, r_splits=2,
+                respawn=respawn,
+            )
+            got = densify_rows(
+                np.asarray(sharded.values)[: g.n],
+                np.asarray(sharded.indices)[: g.n], g.n,
+            )
+            want = densify_rows(single.values, single.indices, g.n)
+            l1 = np.abs(got - want).sum(axis=1)
+            assert l1.max() <= 1e-5, (respawn, l, l1.max())
+            ddf = abs(st_sh["drop_fraction"] - st_si["drop_fraction"])
+            assert ddf <= 1e-6, (respawn, l, ddf)
+    print("sharded build parity OK (covering + truncating, both modes)")
+
+    # memory contract: inside the shard_map body every array's leading dim
+    # stays the per-shard interval — a replicated [n, L] index block per
+    # device (what the old host-driven build would produce) must not trace
+    cfg = DistConfig(n=64, ep=2)
+    step = make_sparse_index_build_step(
+        cfg, mesh, r=64, l=16, sketch_l=48, real_n=64, source_batch=16,
+    )
+    rp = jnp.asarray(np.asarray(g.row_ptr))
+    ci = jnp.asarray(np.asarray(g.col_idx))
+    od = jnp.asarray(np.asarray(g.out_deg))
+    jaxpr = jax.make_jaxpr(step)(rp, ci, od, key)
+    shard_bodies = [
+        eqn for eqn in iter_eqns(jaxpr.jaxpr)
+        if eqn.primitive.name == "shard_map"
+    ]
+    assert shard_bodies, "expected a shard_map eqn in the build step"
+    checked = 0
+    for eqn in shard_bodies:
+        for inner in iter_eqns(eqn.params["jaxpr"]):
+            for var in inner.outvars:
+                aval = var.aval
+                if not hasattr(aval, "shape") or len(aval.shape) < 2:
+                    continue
+                checked += 1
+                # an index-shaped block: >= n rows of >= l columns.  The
+                # per-device sweep may hold flattened [q*w, 1] scatter
+                # intermediates (row count is not vertex count there), but
+                # never a full-index [n, L] tile
+                replicated_index = (
+                    aval.shape[-2] >= cfg.n and aval.shape[-1] >= 16
+                )
+                assert not replicated_index, (
+                    inner.primitive.name, aval.shape,
+                )
+    assert checked > 0
+    print(f"sharded build memory contract OK ({checked} arrays checked)")
+
+    # serving: the model-sharded (and, on g2, row-padded) index answers
+    # through the ordinary query engine without re-layout
+    sharded, _ = build_index_sharded(
+        g, r=64, l=16, key=key, mesh=mesh, source_batch=16,
+    )
+    single, _ = build_index(
+        g, r=64, l=16, key=key, source_batch=16, r_splits=2, respawn=True,
+    )
+    qcfg = QueryConfig(mode="powerwalk", t_iterations=2, top_k=10)
+    out_sh = BatchQueryEngine(g, sharded, qcfg).run([0, 5, 9, 33])
+    out_si = BatchQueryEngine(g, single, qcfg).run([0, 5, 9, 33])
+    np.testing.assert_allclose(
+        out_sh["values"], out_si["values"], rtol=1e-5, atol=1e-7,
+    )
+    g2 = synthetic.erdos_renyi(60, 4.0, seed=11)   # n=60 -> n_pad=64
+    sh2, st2 = build_index_sharded(
+        g2, r=32, l=8, key=key, mesh=mesh, source_batch=16,
+    )
+    assert sh2.n == 64 and st2["pad_rows"] == 4
+    assert float(np.abs(np.asarray(sh2.values)[g2.n:]).sum()) == 0.0
+    si2, _ = build_index(
+        g2, r=32, l=8, key=key, source_batch=16, r_splits=2, respawn=True,
+    )
+    got2 = densify_rows(
+        np.asarray(sh2.values)[: g2.n], np.asarray(sh2.indices)[: g2.n],
+        g2.n,
+    )
+    want2 = densify_rows(si2.values, si2.indices, g2.n)
+    assert np.abs(got2 - want2).sum(axis=1).max() <= 1e-5
+    out_p = BatchQueryEngine(g2, sh2, qcfg).run([0, 7, 59])
+    out_q = BatchQueryEngine(g2, si2, qcfg).run([0, 7, 59])
+    np.testing.assert_allclose(
+        out_p["values"], out_q["values"], rtol=1e-5, atol=1e-7,
+    )
+    print("sharded index serving OK (incl. padded rows)")
 
 
 def main():
@@ -123,6 +241,8 @@ def main():
     serr = np.abs(sest - exact[[0, 3, 7, 11]]).sum(axis=1).mean()
     assert serr < 0.15, f"sparse walk L1 err too big: {serr}"
     print(f"sparse walk counts OK (L1={serr:.4f})")
+
+    check_sharded_build(mesh)
 
 
 if __name__ == "__main__":

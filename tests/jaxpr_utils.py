@@ -1,0 +1,23 @@
+"""Shared jaxpr-walking helper for the memory-contract tests.
+
+Lives as a plain module (not a fixture) so both the pytest suites and the
+subprocess harnesses (``dist_engine_check.py``, which run with the tests
+directory as ``sys.path[0]``) can import one copy — recursive jaxpr
+iteration has to track JAX's ``ClosedJaxpr``/params layout, and that must
+not drift across copies.
+"""
+
+import jax.core as jcore
+
+
+def iter_eqns(jaxpr):
+    """Yield every eqn in ``jaxpr``, recursing into sub-jaxpr params."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (tuple, list)) else (v,)
+            for u in vs:
+                if isinstance(u, jcore.ClosedJaxpr):
+                    yield from iter_eqns(u.jaxpr)
+                elif isinstance(u, jcore.Jaxpr):
+                    yield from iter_eqns(u)

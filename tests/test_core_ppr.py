@@ -1,5 +1,7 @@
 """Accuracy/semantics tests for MCFP, MCEP, VERD, PI, index, query engine."""
 
+import dataclasses
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -282,6 +284,88 @@ def test_query_engine_requires_index():
     g = synthetic.cycle(8)
     with pytest.raises(ValueError):
         BatchQueryEngine(g, None, QueryConfig(mode="powerwalk"))
+
+
+def test_query_engine_rejects_short_index(small_graph, key):
+    """An index with fewer rows than the graph has vertices can't answer
+    every query; a *longer* (padded, sharded-build) index is accepted."""
+    idx, _ = build_index(
+        small_graph, r=10, l=4, key=key,
+        sources=np.arange(4, dtype=np.int32),
+    )
+    short = dataclasses.replace(
+        idx, values=idx.values[:4], indices=idx.indices[:4], n=4
+    )
+    with pytest.raises(ValueError):
+        BatchQueryEngine(small_graph, short, QueryConfig(mode="powerwalk"))
+    padded = dataclasses.replace(
+        idx,
+        values=jnp.pad(idx.values, ((0, 8), (0, 0))),
+        indices=jnp.pad(idx.indices, ((0, 8), (0, 0))),
+        n=idx.n + 8,
+    )
+    eng = BatchQueryEngine(
+        small_graph, padded, QueryConfig(mode="powerwalk", top_k=5)
+    )
+    base = BatchQueryEngine(
+        small_graph, idx, QueryConfig(mode="powerwalk", top_k=5)
+    )
+    np.testing.assert_allclose(
+        eng.run([0, 1, 2])["values"], base.run([0, 1, 2])["values"],
+        rtol=1e-6,
+    )
+
+
+def test_top_k_clamped_to_graph(key):
+    """ISSUE 5 bugfix: top_k > n (or > frontier_k on the sparse route) must
+    clamp in one place so every route returns the width the host buffers
+    were allocated for."""
+    from repro.core.graph import Graph
+    from repro.serving.engine import PPRService, ServiceConfig
+
+    g = Graph.from_edges(
+        [0, 1, 2, 3, 4, 5, 6, 0], [1, 2, 3, 4, 5, 6, 0, 3], n=8
+    )
+    idx, _ = build_index(g, r=50, l=8, key=key)
+    for path in ("dense", "sparse"):
+        eng = BatchQueryEngine(
+            g, idx,
+            QueryConfig(mode="powerwalk", top_k=200, frontier_path=path),
+        )
+        assert eng.effective_top_k == 8
+        out = eng.run([0, 3, 5])
+        assert out["values"].shape == (3, 8), path
+        assert out["indices"].shape == (3, 8), path
+        assert out["top_k"] == 8
+    # the served product: poll() answers carry the clamped width too
+    svc = PPRService(
+        g, idx, ServiceConfig(query=QueryConfig(mode="powerwalk", top_k=200))
+    )
+    svc.submit(0)
+    answers = svc.poll(force=True)
+    assert svc.answer_k == 8
+    assert answers[0].top_vertices.shape == (8,)
+    assert answers[0].top_scores.shape == (8,)
+
+
+def test_mcfp_seed_reproducible_per_chunk(small_graph):
+    """ISSUE 5 bugfix: mcfp answers fold (seed, chunk offset) so re-running
+    an engine — or rebuilding one with the same seed — replays identical
+    Monte-Carlo noise chunk by chunk, while distinct seeds decorrelate."""
+    cfg = QueryConfig(mode="mcfp", top_k=10, seed=7, max_batch=2,
+                      r_online=500)
+    srcs = np.arange(4, dtype=np.int32)
+    a = BatchQueryEngine(small_graph, None, cfg).run(srcs)
+    b = BatchQueryEngine(small_graph, None, cfg).run(srcs)
+    np.testing.assert_array_equal(a["values"], b["values"])
+    eng = BatchQueryEngine(small_graph, None, cfg)
+    np.testing.assert_array_equal(
+        eng.run(srcs)["values"], eng.run(srcs)["values"]
+    )
+    other = BatchQueryEngine(
+        small_graph, None, dataclasses.replace(cfg, seed=8)
+    ).run(srcs)
+    assert not np.array_equal(a["values"], other["values"])
 
 
 def test_batching_equivalence(small_graph, key):

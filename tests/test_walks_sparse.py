@@ -68,6 +68,107 @@ def test_schedule_rejects_bad_r():
 
 
 # ---------------------------------------------------------------------------
+# respawn-mode scheduling (ISSUE 5)
+# ---------------------------------------------------------------------------
+
+def _device_slots(widths, total_steps, compact_every=8):
+    """Walk-slot positions one pass processes (the device-work unit)."""
+    t0, slots = 0, 0
+    for w in widths:
+        steps = min(compact_every, total_steps - t0)
+        slots += w * steps
+        t0 += steps
+    return slots
+
+
+def test_respawn_schedule_shape():
+    for r in (1, 8, 16, 100, 3000):
+        widths, total = walks.respawn_schedule(r)
+        assert widths, r
+        assert all(1 <= w <= max(r, 4) for w in widths)
+        assert widths[0] <= max(r, 4)
+        # fixed-width launch plateau, then non-increasing drain
+        assert all(a >= b for a, b in zip(widths, widths[1:]))
+        assert total >= 8
+    with pytest.raises(ValueError):
+        walks.respawn_schedule(0)
+
+
+def test_respawn_schedule_halves_device_work():
+    """The perf contract behind the >= 2x positions/sec bench gate: at the
+    floor-dominated small-R regime, respawn processes <= half the walk-slot
+    positions of the decay schedule for the same R walks (and stays well
+    ahead as R grows)."""
+    sched16 = _device_slots(walks.compaction_schedule(16), 64)
+    widths, total = walks.respawn_schedule(16)
+    assert 2 * _device_slots(widths, total) <= sched16
+    for r, margin in ((32, 1.5), (100, 1.3)):
+        decay = _device_slots(walks.compaction_schedule(r), 64)
+        widths, total = walks.respawn_schedule(r)
+        assert margin * _device_slots(widths, total) <= decay, r
+
+
+@pytest.mark.parametrize("r,l", [(40, 48), (40, 4), (257, 16)])
+def test_respawn_conservation_exact(small_graph, key, r, l):
+    sources = jnp.asarray([0, 5, 11], jnp.int32)
+    counts = walks.simulate_walks_sparse(
+        small_graph, sources, r, key, l=l, respawn=True
+    )
+    # every walk finishes exactly once, respawns and flushes included
+    np.testing.assert_allclose(np.asarray(counts.walks), float(r))
+    np.testing.assert_allclose(
+        np.asarray(counts.fp.mass() + counts.fp_dropped),
+        np.asarray(counts.moves), rtol=1e-6,
+    )
+    np.testing.assert_allclose(
+        np.asarray(counts.ep.mass() + counts.ep_dropped),
+        np.asarray(counts.walks), rtol=1e-6,
+    )
+    assert (np.asarray(counts.moves) >= r).all()
+
+
+def test_respawn_quota_flush_still_conserves(small_graph, key):
+    """A pass too short to launch the whole quota flushes the remainder as
+    length-1 walks: walks == R must still hold exactly, with the flush
+    ledgered in ``truncated``."""
+    sources = jnp.asarray([0, 5, 11], jnp.int32)
+    counts = walks.simulate_walks_sparse(
+        small_graph, sources, 257, key, l=48, respawn=True,
+        respawn_width=4, max_steps=8,
+    )
+    np.testing.assert_allclose(np.asarray(counts.walks), 257.0)
+    assert float(np.asarray(counts.truncated).sum()) > 0.0
+    np.testing.assert_allclose(
+        np.asarray(counts.fp.mass() + counts.fp_dropped),
+        np.asarray(counts.moves), rtol=1e-6,
+    )
+
+
+def test_respawn_matches_schedule_mode_in_distribution(
+    small_graph, exact_small, key
+):
+    sources = jnp.asarray([0, 1, 2, 3], jnp.int32)
+    r = 3000
+    ests = {}
+    for respawn in (False, True):
+        counts = walks.simulate_walks_sparse(
+            small_graph, sources, r, key, l=small_graph.n, respawn=respawn
+        )
+        ests[respawn] = np.asarray(counts.fp.densify()) / np.asarray(
+            counts.moves
+        )[:, None]
+        # realized mean length follows the same geometric(c) law
+        mean_len = float(counts.moves.sum() / counts.walks.sum())
+        assert abs(mean_len - 1 / 0.15) < 0.4, respawn
+    ex = np.asarray(exact_small[:4])
+    for est in ests.values():
+        assert np.abs(est - ex).sum(axis=1).mean() < 0.06
+    # and the two modes agree to within twice the MC noise
+    diff = np.abs(ests[True] - ests[False]).sum(axis=1).mean()
+    assert diff < 0.12
+
+
+# ---------------------------------------------------------------------------
 # conservation (exact, not statistical)
 # ---------------------------------------------------------------------------
 
@@ -274,6 +375,71 @@ def test_build_index_empty_sources(small_graph, key, engine):
     assert stats["kept_mass"] == 0.0 and stats["dropped_mass"] == 0.0
 
 
+def test_build_index_dedups_duplicate_sources(small_graph, key):
+    """Regression (ISSUE 5): a repeated source id used to last-writer-win in
+    the subset scatter and double-count the kept/dropped ledger; the builder
+    now dedups up front and reports the count."""
+    dup = np.asarray([3, 17, 3, 40, 17, 3], np.int32)
+    uniq = np.asarray([3, 17, 40], np.int32)
+    idx_d, st_d = build_index(
+        small_graph, r=50, l=8, key=key, sources=dup, source_batch=2
+    )
+    idx_u, st_u = build_index(
+        small_graph, r=50, l=8, key=key, sources=uniq, source_batch=2
+    )
+    assert st_d["duplicate_sources"] == 3
+    assert st_u["duplicate_sources"] == 0
+    np.testing.assert_array_equal(
+        np.asarray(idx_d.values), np.asarray(idx_u.values)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(idx_d.indices), np.asarray(idx_u.indices)
+    )
+    # the mass ledger counts each source once, not once per duplicate
+    assert st_d["kept_mass"] == pytest.approx(st_u["kept_mass"])
+    assert st_d["dropped_mass"] == pytest.approx(st_u["dropped_mass"])
+
+
+def test_build_index_legacy_reports_duplicates(small_graph, key):
+    _, st = build_index(
+        small_graph, r=10, l=4, key=key, engine="legacy",
+        sources=np.asarray([1, 1, 2], np.int32),
+    )
+    assert st["duplicate_sources"] == 1
+
+
+def test_build_index_r_splits_deterministic(small_graph, exact_small, key):
+    """r_splits replays the sharded builder's per-chunk key fold on one
+    device: deterministic, conservation intact, quality unchanged."""
+    idx_a, st_a = build_index(small_graph, r=100, l=16, key=key, r_splits=2)
+    idx_b, _ = build_index(small_graph, r=100, l=16, key=key, r_splits=2)
+    np.testing.assert_array_equal(
+        np.asarray(idx_a.values), np.asarray(idx_b.values)
+    )
+    idx_1, st_1 = build_index(small_graph, r=100, l=16, key=key)
+    assert abs(st_a["drop_fraction"] - st_1["drop_fraction"]) < 0.05
+    ex = jnp.asarray(exact_small, jnp.float32)
+    verts = jnp.arange(12, dtype=jnp.int32)
+    assert metrics.mean_rag(ex[:12], idx_a.lookup_dense(verts), k=10) > 0.9
+    with pytest.raises(ValueError):
+        build_index(small_graph, r=100, l=16, key=key, r_splits=3)
+
+
+def test_build_index_respawn_matches_schedule_quality(
+    small_graph, exact_small, key
+):
+    idx_r, st_r = build_index(small_graph, r=100, l=16, key=key, respawn=True)
+    idx_s, st_s = build_index(small_graph, r=100, l=16, key=key)
+    assert st_r["respawn"] and not st_s["respawn"]
+    assert abs(st_r["drop_fraction"] - st_s["drop_fraction"]) < 0.05
+    ex = jnp.asarray(exact_small, jnp.float32)
+    verts = jnp.arange(12, dtype=jnp.int32)
+    rag_r = metrics.mean_rag(ex[:12], idx_r.lookup_dense(verts), k=10)
+    rag_s = metrics.mean_rag(ex[:12], idx_s.lookup_dense(verts), k=10)
+    assert rag_r > rag_s - 0.03
+    assert rag_r > 0.9
+
+
 def test_build_index_sparse_subset_sources(small_graph, key):
     subset = np.asarray([3, 17, 40], np.int32)
     idx, stats = build_index(
@@ -284,20 +450,6 @@ def test_build_index_sparse_subset_sources(small_graph, key):
     assert (row_mass[subset] > 0).all()
     others = np.setdiff1d(np.arange(small_graph.n), subset)
     np.testing.assert_allclose(row_mass[others], 0.0)
-
-
-def _iter_eqns(jaxpr):
-    import jax.core as jcore
-
-    for eqn in jaxpr.eqns:
-        yield eqn
-        for v in eqn.params.values():
-            vs = v if isinstance(v, (tuple, list)) else (v,)
-            for u in vs:
-                if isinstance(u, jcore.ClosedJaxpr):
-                    yield from _iter_eqns(u.jaxpr)
-                elif isinstance(u, jcore.Jaxpr):
-                    yield from _iter_eqns(u)
 
 
 def test_build_index_sparse_memory_contract(key):
@@ -314,9 +466,11 @@ def test_build_index_sparse_memory_contract(key):
     jaxpr = jax.make_jaxpr(fn)(g, chunk, key)
     # widest fold candidate row: sketch + a full pending buffer + the last
     # event segment that tipped it over (<= compact_every * r wide)
+    from jaxpr_utils import iter_eqns
+
     budget = rows * (sketch_l + max(4 * sketch_l, 512) + 8 * r + 8)
     assert budget < rows * g.n                   # the assertion has teeth
-    for eqn in _iter_eqns(jaxpr.jaxpr):
+    for eqn in iter_eqns(jaxpr.jaxpr):
         for var in eqn.outvars:
             aval = var.aval
             if not hasattr(aval, "shape") or aval.dtype != jnp.float32:
@@ -338,6 +492,12 @@ def test_build_index_sparse_smoke_4k():
     )
     assert idx_s.values.shape == (g.n, 32)
     assert abs(stats_s["drop_fraction"] - stats_l["drop_fraction"]) < 0.03
+    # respawn-mode sweep: same estimator in distribution — its truncation
+    # cost must match the schedule-mode build's at the smoke point
+    idx_r, stats_r = build_index(
+        g, r=16, l=32, key=key, source_batch=512, respawn=True
+    )
+    assert abs(stats_r["drop_fraction"] - stats_s["drop_fraction"]) < 0.03
     # spot-check quality parity on a few vertices (PI ground truth: the
     # dense 4096^2 solve would dwarf the builds under test)
     from repro.core.power_iteration import power_iteration
@@ -346,4 +506,6 @@ def test_build_index_sparse_smoke_4k():
     ex_rows = power_iteration(g, verts, n_iter=100)
     rag_s = metrics.mean_rag(ex_rows, idx_s.lookup_dense(verts), k=10)
     rag_l = metrics.mean_rag(ex_rows, idx_l.lookup_dense(verts), k=10)
+    rag_r = metrics.mean_rag(ex_rows, idx_r.lookup_dense(verts), k=10)
     assert rag_s > rag_l - 0.1
+    assert rag_r > rag_s - 0.1
