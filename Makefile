@@ -4,7 +4,7 @@
 PY ?= python
 
 .PHONY: test test-fast test-parity test-kernels bench bench-smoke bench-walks \
-	bench-preprocess-dist
+	bench-preprocess-dist bench-serving bench-serving-smoke
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
@@ -31,6 +31,16 @@ bench:
 # CI-sized smoke: small graphs, query + kernel tables only
 bench-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only query,kernels
+
+# serving pipeline: open-loop QPS sweep + depth sweep at the n=100k/K=512
+# reference point; writes BENCH_serving.json (docs/serving_path.md)
+bench-serving:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only serving
+
+# CI-sized serving smoke: writes BENCH_serving.fast.json so the full-size
+# trajectory is never clobbered (PR-4 convention)
+bench-serving-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only serving
 
 # offline walk engine: legacy vs compacted-sparse positions/sec at the
 # n=100k acceptance point + index-build timings; writes BENCH_walks.json

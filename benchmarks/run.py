@@ -14,6 +14,7 @@ Mapping to the paper:
   bench_query      -> Table 3 / Figure 6 (online batch-query latency)
   bench_walks      -> Section 3.1 (walk-engine throughput, legacy vs sparse)
   bench_kernels    -> Pallas kernel micro-benches + correctness gates
+  bench_serving    -> Section 3.3 serving loop (open-loop QPS, pipeline depth)
 """
 
 from __future__ import annotations
@@ -54,10 +55,12 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_kernels, bench_preprocess,
-                            bench_query, bench_verd, bench_walks)
+                            bench_query, bench_serving, bench_verd,
+                            bench_walks)
     modules = dict(
         accuracy=bench_accuracy, verd=bench_verd, preprocess=bench_preprocess,
         query=bench_query, walks=bench_walks, kernels=bench_kernels,
+        serving=bench_serving,
     )
     if args.only:
         keep = set(args.only.split(","))

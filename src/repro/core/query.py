@@ -40,6 +40,14 @@ from repro.core.walks import DEFAULT_C
 # bound, so the old threshold left a 2x band of graphs on the slow path.
 AUTO_SPARSE_MIN_N = 1 << 14
 
+# Serving fast path: the *final* index combine may scatter its candidates
+# into a dense [Q, n] f32 scratch and lax.top_k it instead of running the
+# sort-based sparse compaction (verd.combine_with_index_scatter).  The
+# scratch is transient and only exists at the combine — the iterations stay
+# Q x K — so "auto" takes it whenever Q * n * 4 bytes fits this budget and
+# falls back to the n-independent sparse combine beyond it.
+SCATTER_COMBINE_BUDGET_BYTES = 256 * 1024 * 1024
+
 
 def auto_frontier_floor(top_k: int) -> int:
     """Minimum auto-derived sparse frontier width K: 4x the answer size
@@ -61,6 +69,10 @@ class QueryConfig:
     max_batch: int = 4096          # shared-decomposition batch size
     frontier_k: int = 0            # sparse frontier width (0 = auto-derive)
     frontier_path: str = "auto"    # dense | sparse | auto
+    combine_path: str = "auto"     # sparse | scatter | auto — how the sparse
+                                   # route merges its final combine candidates
+                                   # (auto: scatter while Q*n*4 bytes fits
+                                   # SCATTER_COMBINE_BUDGET_BYTES)
     hub_split_degree: int = 0      # ELL row-split width for the sparse push
                                    # (0 = no splitting; see verd.gather_push_edges)
     seed: int = 0                  # base PRNG seed for the Monte-Carlo
@@ -89,6 +101,10 @@ class BatchQueryEngine:
         if self.config.frontier_path not in ("dense", "sparse", "auto"):
             raise ValueError(
                 f"unknown frontier_path {self.config.frontier_path!r}"
+            )
+        if self.config.combine_path not in ("sparse", "scatter", "auto"):
+            raise ValueError(
+                f"unknown combine_path {self.config.combine_path!r}"
             )
         # base key is pure config (seed), so a rebuilt engine replays the
         # same MC noise; the stateful split below serves direct query_dense
@@ -148,6 +164,24 @@ class BatchQueryEngine:
             and 8 * self.frontier_k <= self.graph.n
             and self.frontier_k * self.effective_gather_width() <= self.graph.n
         )
+
+    def uses_scatter_combine(self, q: int) -> bool:
+        """Route decision for the sparse route's *final* combine: scatter
+        into a transient dense ``[q, n]`` scratch (fast ``lax.top_k``) or
+        keep the n-independent sort-based sparse compaction.
+
+        Only the ``powerwalk`` sparse route has an index combine; ``auto``
+        scatters while the scratch (``q * n * 4`` bytes) fits
+        :data:`SCATTER_COMBINE_BUDGET_BYTES`.  Exact either way — this is a
+        cost knob, not an accuracy knob."""
+        cfg = self.config
+        if cfg.mode != "powerwalk" or not self.uses_sparse_path():
+            return False
+        if cfg.combine_path == "scatter":
+            return True
+        if cfg.combine_path == "sparse":
+            return False
+        return q * self.graph.n * 4 <= SCATTER_COMBINE_BUDGET_BYTES
 
     def degree_cap(self) -> int:
         """Max out-degree (cached): the exact-mode edge budget per slot."""
@@ -241,6 +275,55 @@ class BatchQueryEngine:
         )
         return vals, idx
 
+    # -- async dispatch (the serving pipeline's entry point) -----------------
+    def dispatch_key(self, seq: int) -> jax.Array:
+        """Per-dispatch PRNG key: the config-seed base key with the
+        dispatch sequence number folded in, so Monte-Carlo answers are
+        reproducible for a given (seed, dispatch order) at any pipeline
+        depth — the async path never advances the stateful key."""
+        return jax.random.fold_in(self._base_key, seq)
+
+    def query_topk_async(
+        self, sources: jax.Array, *, key: Optional[jax.Array] = None
+    ) -> Tuple[jax.Array, jax.Array]:
+        """Top-k answers as *unmaterialized* device arrays.
+
+        The whole query — iterate, combine, top-k — is one jitted
+        computation, so this returns as soon as the work is enqueued on the
+        device stream (JAX async dispatch): no host sync, no per-op Python
+        dispatch between stages.  ``serving.pipeline`` launches several of
+        these back to back and harvests them through a completion queue;
+        callers that want a blocking answer can ``block_until_ready()`` the
+        result, which is bit-identical to :meth:`query_topk` on the same
+        route/combine.  ``key`` seeds the ``mcfp`` mode (ignored elsewhere);
+        default is the engine's base key — pass :meth:`dispatch_key` for
+        distinct, replayable noise per dispatch.
+        """
+        sources = jnp.asarray(sources, jnp.int32)
+        q = int(sources.shape[0])
+        cfg = self.config
+        if key is None:
+            key = self._base_key
+        sparse_route = self.uses_sparse_path()
+        return _fused_topk(
+            self.graph,
+            self.index if cfg.mode in ("powerwalk", "fppr") else None,
+            sources,
+            key,
+            mode=cfg.mode,
+            t=cfg.t_iterations,
+            c=cfg.c,
+            top_k=self.effective_top_k,
+            r_online=cfg.r_online,
+            pi_iterations=cfg.pi_iterations,
+            threshold=cfg.threshold,
+            frontier_k=self.frontier_k,
+            degree_cap=self.degree_cap() if sparse_route else 0,
+            hub_split_degree=cfg.hub_split_degree,
+            sparse_route=sparse_route,
+            scatter_combine=self.uses_scatter_combine(q),
+        )
+
     # -- batched driver ------------------------------------------------------
     def run(self, sources) -> dict:
         """Execute a (possibly large) query set in max_batch chunks.
@@ -273,3 +356,76 @@ class BatchQueryEngine:
             mode=self.config.mode,
             top_k=k,
         )
+
+
+# ---------------------------------------------------------------------------
+# Fused top-k query: one jitted computation covering every mode/route, so a
+# serving dispatch is a single async XLA launch.  Module-level (not a bound
+# method) so the jit cache is shared across engines over the same
+# graph/index pytrees and keyed only by the static route arguments.
+# ---------------------------------------------------------------------------
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mode", "t", "c", "top_k", "r_online", "pi_iterations", "threshold",
+        "frontier_k", "degree_cap", "hub_split_degree", "sparse_route",
+        "scatter_combine",
+    ),
+)
+def _fused_topk(
+    graph: Graph,
+    index: Optional[PPRIndex],
+    sources: jax.Array,
+    key: jax.Array,
+    *,
+    mode: str,
+    t: int,
+    c: float,
+    top_k: int,
+    r_online: int,
+    pi_iterations: int,
+    threshold: float,
+    frontier_k: int,
+    degree_cap: int,
+    hub_split_degree: int,
+    sparse_route: bool,
+    scatter_combine: bool,
+) -> Tuple[jax.Array, jax.Array]:
+    if sparse_route:
+        if scatter_combine and mode == "powerwalk":
+            s, f = verd_mod.verd_iterate_sparse(
+                graph, sources, t=t, k=frontier_k, c=c, threshold=threshold,
+                degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+            )
+            vals, idx = verd_mod.combine_with_index_scatter(
+                s, f, index, out_k=top_k,
+            )
+        else:
+            sf = verd_mod.verd_query_sparse(
+                graph, sources, index if mode == "powerwalk" else None,
+                t=t, k=frontier_k, c=c, threshold=threshold, out_k=top_k,
+                degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+            )
+            vals, idx = sf.values, sf.indices
+    else:
+        if mode in ("powerwalk", "verd"):
+            dense = verd_mod.verd_query(
+                graph, sources, index if mode == "powerwalk" else None,
+                t=t, c=c, threshold=threshold,
+            )
+        elif mode == "fppr":
+            dense = index.lookup_dense(sources)
+        elif mode == "mcfp":
+            dense = mcfp_mod.estimate_ppr(graph, sources, r_online, key, c=c)
+        elif mode == "pi":
+            dense = pi_mod.power_iteration(graph, sources, n_iter=pi_iterations, c=c)
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+        vals, idx = jax.lax.top_k(dense, top_k)
+        idx = idx.astype(jnp.int32)
+    # same static-shape width contract as query_topk
+    assert vals.shape[-1] == top_k and idx.shape[-1] == top_k, (
+        vals.shape, idx.shape, top_k,
+    )
+    return vals, idx

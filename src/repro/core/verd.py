@@ -550,6 +550,46 @@ def combine_with_index_sparse(
     return frontier.compact(cand_v, cand_i, out_k, index.n)
 
 
+def combine_with_index_scatter(
+    s: frontier.SparseFrontier,
+    f: frontier.SparseFrontier,
+    index: PPRIndex,
+    *,
+    out_k: int,
+    n_cols: Optional[int] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Final combine via a dense ``[Q, n]`` scatter-add + ``lax.top_k``.
+
+    Same candidate set as :func:`combine_with_index_sparse`, but duplicates
+    are merged by scattering into one zeroed ``[Q, n]`` scratch instead of
+    the sort-based ``frontier.compact`` — ``lax.top_k`` is a fast custom
+    call while the compaction's comparator sorts dominate the whole query
+    at serving widths (``S + K*L`` in the tens of thousands).  Exact:
+    scatter-add merges duplicates just like the segment-sum, and slots the
+    scatter never touched stay 0 and are masked to the ``(0.0, 0)`` empty
+    convention.  The scratch costs ``Q * n * 4`` bytes *once* at the final
+    combine only (iterations stay ``Q x K``), so callers gate on a memory
+    budget (``query.SCATTER_COMBINE_BUDGET_BYTES``) and keep the
+    n-independent sparse combine beyond it.
+    """
+    cand_v, cand_i = gather_combine_candidates(
+        s.values, s.indices, f.values, f.indices,
+        index.values, index.indices,
+    )
+    q = cand_v.shape[0]
+    n = index.n if n_cols is None else n_cols
+    dense = jnp.zeros((q, n), jnp.float32).at[
+        jnp.arange(q)[:, None], cand_i
+    ].add(cand_v, mode="drop")
+    vals, idx = jax.lax.top_k(dense, min(out_k, n))
+    idx = jnp.where(vals > 0, idx, 0).astype(jnp.int32)
+    if out_k > n:  # honor the requested width like frontier.compact does
+        pad = out_k - n
+        vals = jnp.pad(vals, ((0, 0), (0, pad)))
+        idx = jnp.pad(idx, ((0, 0), (0, pad)))
+    return vals, idx
+
+
 def verd_query_sparse(
     graph: Graph,
     sources: jax.Array,

@@ -1,3 +1,5 @@
-"""Serving: request batching + the online PPR query service."""
+"""Serving: request batching + the async pipelined online PPR service."""
 
-from repro.serving.engine import PPRService, ServiceConfig  # noqa: F401
+from repro.serving.engine import Answer, PPRService, ServiceConfig  # noqa: F401
+from repro.serving.loadgen import run_closed_loop, run_open_loop  # noqa: F401
+from repro.serving.pipeline import PipelineConfig, ServingPipeline  # noqa: F401

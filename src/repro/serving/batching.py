@@ -2,15 +2,19 @@
 PPR queries and computes a batch of PPR queries at a time").
 
 The buffer flushes on either (a) reaching ``max_batch`` or (b) a deadline —
-the standard latency/throughput knob for online services.  Deterministic
-and clock-injectable for tests.
+the standard latency/throughput knob for online services.  Requests carry a
+tier (``interactive`` | ``bulk``), each with its own deadline/batch policy;
+drains take interactive requests first so bulk traffic cannot starve the
+latency-sensitive class.  Deterministic and clock-injectable for tests.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
+
+TIERS = ("interactive", "bulk")
 
 
 @dataclasses.dataclass
@@ -18,6 +22,14 @@ class Request:
     request_id: int
     vertex: int
     arrival: float
+    tier: str = "interactive"
+
+
+@dataclasses.dataclass
+class TierPolicy:
+    """Per-tier batching knobs; ``None`` inherits the top-level value."""
+    max_batch: Optional[int] = None
+    max_wait_s: Optional[float] = None
 
 
 @dataclasses.dataclass
@@ -25,6 +37,22 @@ class BatchingConfig:
     max_batch: int = 4096
     max_wait_s: float = 0.010     # flush deadline
     pad_to_power_of_two: bool = True   # avoid jit recompiles per size
+    min_pad: int = 1              # floor for the padded width (bounds the
+                                  # set of jit shapes a service can compile)
+    # per-request-class overrides; by default both tiers inherit the
+    # top-level deadline/batch so single-tier callers see one policy
+    interactive: TierPolicy = dataclasses.field(default_factory=TierPolicy)
+    bulk: TierPolicy = dataclasses.field(default_factory=TierPolicy)
+
+    def tier_policy(self, tier: str) -> Tuple[int, float]:
+        """Resolved ``(max_batch, max_wait_s)`` for ``tier``."""
+        if tier not in TIERS:
+            raise ValueError(f"unknown tier {tier!r} (expected one of {TIERS})")
+        p: TierPolicy = getattr(self, tier)
+        return (
+            self.max_batch if p.max_batch is None else p.max_batch,
+            self.max_wait_s if p.max_wait_s is None else p.max_wait_s,
+        )
 
 
 class RequestBuffer:
@@ -32,33 +60,72 @@ class RequestBuffer:
                  clock: Optional[Callable[[], float]] = None):
         self.cfg = cfg
         self.clock = clock or time.monotonic
-        self._pending: List[Request] = []
+        self._pending: Dict[str, List[Request]] = {t: [] for t in TIERS}
         self._next_id = 0
 
-    def submit(self, vertex: int) -> int:
+    def submit(self, vertex: int, tier: str = "interactive",
+               arrival: Optional[float] = None) -> int:
+        """Enqueue one request; ``arrival`` defaults to the clock but an
+        open-loop load generator may backdate it to the *scheduled* offer
+        time so latency includes queueing delay under backpressure."""
+        if tier not in TIERS:
+            raise ValueError(f"unknown tier {tier!r} (expected one of {TIERS})")
         rid = self._next_id
         self._next_id += 1
-        self._pending.append(Request(rid, int(vertex), self.clock()))
+        t = self.clock() if arrival is None else arrival
+        self._pending[tier].append(Request(rid, int(vertex), t, tier))
         return rid
 
-    def ready(self) -> bool:
-        if not self._pending:
-            return False
-        if len(self._pending) >= self.cfg.max_batch:
+    def size_ready(self) -> bool:
+        """True when any tier (or the buffer overall) hit its batch size —
+        the flush trigger that does *not* depend on the clock."""
+        if sum(len(v) for v in self._pending.values()) >= self.cfg.max_batch:
             return True
-        return (self.clock() - self._pending[0].arrival) >= self.cfg.max_wait_s
+        return any(
+            len(self._pending[tier]) >= self.cfg.tier_policy(tier)[0]
+            for tier in TIERS
+        )
+
+    def ready(self) -> bool:
+        """True when any tier hit its batch size or its *oldest pending*
+        request crossed that tier's deadline."""
+        if self.size_ready():
+            return True
+        now = None
+        for tier in TIERS:
+            pending = self._pending[tier]
+            if not pending:
+                continue
+            _, t_wait = self.cfg.tier_policy(tier)
+            now = self.clock() if now is None else now
+            if (now - pending[0].arrival) >= t_wait:
+                return True
+        return False
 
     def drain(self) -> Tuple[List[Request], int]:
-        """Pop up to max_batch requests; returns (requests, padded_size)."""
-        batch = self._pending[: self.cfg.max_batch]
-        self._pending = self._pending[self.cfg.max_batch:]
+        """Pop up to max_batch requests, interactive-first; returns
+        ``(requests, padded_size)`` with the power-of-two padded width
+        clamped to ``max_batch`` (a 3000-wide config must never compile a
+        4096-wide jit shape)."""
+        batch: List[Request] = []
+        room = self.cfg.max_batch
+        for tier in TIERS:  # interactive before bulk, FIFO within a tier
+            t_batch, _ = self.cfg.tier_policy(tier)
+            take = min(room, t_batch)
+            batch.extend(self._pending[tier][:take])
+            self._pending[tier] = self._pending[tier][take:]
+            room = self.cfg.max_batch - len(batch)
+            if room <= 0:
+                break
         n = len(batch)
         padded = n
         if self.cfg.pad_to_power_of_two and n > 0:
             padded = 1
             while padded < n:
                 padded *= 2
+            padded = max(padded, min(self.cfg.min_pad, self.cfg.max_batch))
+            padded = min(padded, self.cfg.max_batch)
         return batch, padded
 
     def __len__(self) -> int:
-        return len(self._pending)
+        return sum(len(v) for v in self._pending.values())

@@ -5,6 +5,12 @@ vertices; the service batches them (Section 3.3), runs the VERD shared
 decomposition against the PPR index, and returns top-k (vertex, score)
 lists.  Collects the latency/throughput metrics the paper's Table 3
 reports.
+
+Since PR 6 the service is pipelined: ``poll()`` *dispatches* ready batches
+without syncing (JAX async dispatch keeps up to ``pipeline.depth`` batches
+in flight on the device stream) and *harvests* whichever in-flight batches
+have finished — see ``serving/pipeline.py`` and docs/serving_path.md.
+``pipeline.depth=1`` reproduces the old blocking poll exactly.
 """
 
 from __future__ import annotations
@@ -13,19 +19,20 @@ import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.graph import Graph
 from repro.core.index import PPRIndex
 from repro.core.query import BatchQueryEngine, QueryConfig
 from repro.serving.batching import BatchingConfig, RequestBuffer
+from repro.serving.pipeline import CompletedBatch, PipelineConfig, ServingPipeline
 
 
 @dataclasses.dataclass
 class ServiceConfig:
     query: QueryConfig = dataclasses.field(default_factory=QueryConfig)
     batching: BatchingConfig = dataclasses.field(default_factory=BatchingConfig)
+    pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
 
 
 @dataclasses.dataclass
@@ -35,6 +42,7 @@ class Answer:
     top_vertices: np.ndarray
     top_scores: np.ndarray
     latency_s: float
+    tier: str = "interactive"
 
 
 class PPRService:
@@ -55,6 +63,9 @@ class PPRService:
         self.engine = BatchQueryEngine(graph, index, self.cfg.query)
         self.buffer = RequestBuffer(self.cfg.batching, clock=clock)
         self.clock = clock or time.monotonic
+        self.pipeline = ServingPipeline(
+            self.engine, self.buffer, self.cfg.pipeline, clock=self.clock
+        )
         # which execution the engine routed to (docs/query_path.md): part of
         # the serving telemetry so capacity planning can see Q x K vs Q x n
         self.frontier_path = (
@@ -71,58 +82,99 @@ class PPRService:
         )
         self.stats: Dict[str, float] = dict(
             served=0, batches=0, total_latency=0.0, max_latency=0.0,
-            pad_rows=0,
+            pad_rows=0, first_batch_service_s=0.0,
         )
 
-    def submit(self, vertex: int) -> int:
-        return self.buffer.submit(vertex)
+    # -- client API ----------------------------------------------------------
+    def submit(self, vertex: int, tier: str = "interactive",
+               arrival: Optional[float] = None) -> int:
+        return self.buffer.submit(vertex, tier=tier, arrival=arrival)
+
+    @property
+    def in_flight(self) -> int:
+        return self.pipeline.in_flight
 
     def poll(self, force: bool = False) -> List[Answer]:
-        """Flush the buffer if ready; returns completed answers."""
-        if not (self.buffer.ready() or (force and len(self.buffer))):
+        """Advance the pipeline; returns completed answers.
+
+        Dispatches every ready batch (``force`` drains the buffer
+        regardless of deadlines) and harvests finished ones.  At
+        ``pipeline.depth=1`` — or with ``force`` — the harvest blocks, so
+        every dispatched batch's answers come back from the same call,
+        matching the pre-pipeline blocking ``poll()``.
+        """
+        if (not len(self.buffer) or not (self.buffer.ready() or force)) \
+                and not self.pipeline.in_flight:
             return []
-        requests, padded = self.buffer.drain()
-        n_real = len(requests)
-        verts = np.array([r.vertex for r in requests], dtype=np.int32)
-        if padded > n_real:  # pad with vertex 0 to a stable jit shape
-            verts = np.concatenate(
-                [verts, np.zeros(padded - n_real, np.int32)]
-            )
-        vals, idx = self.engine.query_topk(jnp.asarray(verts))
-        vals.block_until_ready()
-        now = self.clock()
-        # pad rows never reach answers or stats: slice them off on device so
-        # only the real rows' top-k is materialized on the host
-        vals = np.asarray(vals[:n_real])
-        idx = np.asarray(idx[:n_real])
-        self.stats["pad_rows"] += padded - n_real
-        out = []
-        for i, r in enumerate(requests):
-            lat = now - r.arrival
-            out.append(Answer(r.request_id, r.vertex, idx[i], vals[i], lat))
-            self.stats["served"] += 1
-            self.stats["total_latency"] += lat
-            self.stats["max_latency"] = max(self.stats["max_latency"], lat)
-        self.stats["batches"] += 1
+        drain = force or self.cfg.pipeline.depth <= 1
+        completed = self.pipeline.dispatch(force=force)
+        completed.extend(self.pipeline.harvest(drain=drain))
+        # harvesting freed pipeline slots; a deadline-fired batch deferred
+        # while the device was busy can launch now instead of next poll
+        more = self.pipeline.dispatch(force=force)
+        if more or (drain and self.pipeline.in_flight):
+            completed.extend(more)
+            completed.extend(self.pipeline.harvest(drain=drain))
+        return self._absorb(completed)
+
+    # -- bookkeeping ---------------------------------------------------------
+    def _absorb(self, completed: List[CompletedBatch]) -> List[Answer]:
+        out: List[Answer] = []
+        for batch in completed:
+            if not self.stats["batches"]:
+                # satellite fix: record first-batch service time (dominated
+                # by jit compilation on a cold service) so load harnesses
+                # can report wall_s_excl_first_batch alongside raw wall
+                self.stats["first_batch_service_s"] = (
+                    batch.completed_at - batch.dispatched_at
+                )
+            self.stats["pad_rows"] += batch.padded - len(batch.requests)
+            self.stats["batches"] += 1
+            for i, r in enumerate(batch.requests):
+                lat = batch.completed_at - r.arrival
+                out.append(Answer(
+                    r.request_id, r.vertex, batch.indices[i],
+                    batch.values[i], lat, r.tier,
+                ))
+                self.stats["served"] += 1
+                self.stats["total_latency"] += lat
+                self.stats["max_latency"] = max(self.stats["max_latency"], lat)
         return out
 
-    def run_closed_loop(self, vertices: Sequence[int]) -> Tuple[List[Answer], dict]:
-        """Serve a fixed workload to completion (benchmark mode)."""
-        answers: List[Answer] = []
-        t0 = self.clock()
-        for v in vertices:
-            self.submit(v)
-            answers.extend(self.poll())
-        while len(self.buffer):
-            answers.extend(self.poll(force=True))
-        wall = self.clock() - t0
+    def reset_stats(self) -> None:
+        """Zero counters (e.g. after warmup dispatches in a benchmark)."""
+        for k in self.stats:
+            self.stats[k] = 0 if isinstance(self.stats[k], int) else 0.0
+        for k in self.pipeline.stats:
+            self.pipeline.stats[k] = 0
+        self.pipeline.batch_hist.clear()
+
+    def snapshot_stats(self) -> dict:
+        """Service + pipeline telemetry as one flat dict (JSON-safe)."""
         s = dict(self.stats)
         s["frontier_path"] = self.frontier_path
         s["answer_k"] = self.answer_k
         s["index_rows"] = self.index_rows
         s["index_sharded"] = self.index_sharded
-        s["wall_s"] = wall
-        s["qps"] = len(answers) / max(wall, 1e-9)
+        s["pipeline_depth"] = self.cfg.pipeline.depth
+        s["dispatch_path"] = self.cfg.pipeline.dispatch
+        s["combine_path"] = (
+            "scatter" if self.engine.uses_scatter_combine(
+                self.cfg.batching.max_batch) else "sparse"
+        ) if self.frontier_path == "sparse" else "dense"
+        s.update({f"pipeline_{k}": v for k, v in self.pipeline.stats.items()})
+        s["batch_hist"] = {
+            int(k): int(v) for k, v in sorted(self.pipeline.batch_hist.items())
+        }
         s["mean_latency"] = s["total_latency"] / max(s["served"], 1)
         s["pad_fraction"] = s["pad_rows"] / max(s["served"] + s["pad_rows"], 1)
-        return answers, s
+        return s
+
+    def run_closed_loop(self, vertices: Sequence[int]) -> Tuple[List[Answer], dict]:
+        """Serve a fixed workload to completion (benchmark mode).
+
+        Thin wrapper over the open-loop harness at unbounded offer rate —
+        see ``serving/loadgen.py`` for the rate-controlled version.
+        """
+        from repro.serving import loadgen
+        return loadgen.run_closed_loop(self, vertices)

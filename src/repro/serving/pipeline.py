@@ -1,0 +1,229 @@
+"""Async serving pipeline: multi-batch in-flight dispatch + completion queue.
+
+JAX dispatch is asynchronous — a jitted call returns device arrays as soon
+as the work is *enqueued* on the device stream.  The old ``poll()`` threw
+that away by calling ``block_until_ready()`` per batch, so host buffering,
+device compute, and top-k readout ran strictly in series.  This module
+splits serving into two phases:
+
+* **dispatch** — drain the request buffer, pad to a stable jit shape,
+  launch ``engine.query_topk_async`` (one fused XLA computation, no sync),
+  and push a :class:`PendingBatch` ticket holding the device arrays plus
+  request metadata onto a bounded :class:`CompletionQueue`;
+* **harvest** — pop tickets whose arrays report ready
+  (``jax.Array.is_ready``), slice off the pad rows, and materialize only
+  the ``n_real`` top-k rows to the host.
+
+The queue depth bounds how many batches are in flight at once (device
+memory for ``depth`` result buffers plus their transient scratch); when
+the queue is full the dispatcher harvests the head *blocking* before
+launching more, which is the natural backpressure.  ``depth=1`` makes
+every dispatch wait for the previous batch — exactly the old blocking
+behavior — and is the baseline the serving benchmark compares against.
+
+``dispatch="legacy"`` additionally routes through the eager
+``engine.query_topk`` + ``block_until_ready`` path (today's code), so the
+benchmark can separate the fused-dispatch win from the pipelining win.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.batching import Request, RequestBuffer
+
+
+@dataclasses.dataclass
+class PipelineConfig:
+    depth: int = 4                # max batches in flight (1 = blocking)
+    dispatch: str = "fused"       # fused (query_topk_async) | legacy
+                                  # (eager query_topk + block, PR-5 behavior)
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError(f"pipeline depth must be >= 1, got {self.depth}")
+        if self.dispatch not in ("fused", "legacy"):
+            raise ValueError(f"unknown dispatch {self.dispatch!r}")
+
+
+@dataclasses.dataclass
+class PendingBatch:
+    """One in-flight batch: device arrays + the metadata needed to turn
+    them into answers later.  Holding this ticket is what keeps the result
+    buffers alive; nothing here has synced with the device."""
+    seq: int
+    requests: List[Request]
+    padded: int
+    values: jax.Array             # [padded, k] f32, possibly unfinished
+    indices: jax.Array            # [padded, k] i32
+    dispatched_at: float
+
+    def is_ready(self) -> bool:
+        """Non-blocking completion probe via ``jax.Array.is_ready``."""
+        try:
+            return bool(self.values.is_ready() and self.indices.is_ready())
+        except AttributeError:  # plain numpy (stub engines in tests)
+            return True
+
+
+@dataclasses.dataclass
+class CompletedBatch:
+    """A harvested batch: host arrays sliced to the real rows."""
+    seq: int
+    requests: List[Request]
+    padded: int
+    values: np.ndarray            # [n_real, k]
+    indices: np.ndarray           # [n_real, k]
+    dispatched_at: float
+    completed_at: float
+
+
+class CompletionQueue:
+    """Bounded FIFO of in-flight batches.  On a single device stream XLA
+    completes computations in dispatch order, so harvesting from the head
+    only is both correct and optimal."""
+
+    def __init__(self, depth: int):
+        self.depth = depth
+        self._q: Deque[PendingBatch] = collections.deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def full(self) -> bool:
+        return len(self._q) >= self.depth
+
+    def push(self, ticket: PendingBatch) -> None:
+        if self.full():
+            raise RuntimeError(
+                f"completion queue full (depth={self.depth}); harvest first"
+            )
+        self._q.append(ticket)
+
+    def pop(self, block: bool = False) -> Optional[PendingBatch]:
+        """Pop the head ticket if finished (or unconditionally when
+        ``block``); returns ``None`` when nothing is harvestable."""
+        if not self._q:
+            return None
+        head = self._q[0]
+        if not block and not head.is_ready():
+            return None
+        self._q.popleft()
+        return head
+
+
+class ServingPipeline:
+    """Glue between a :class:`RequestBuffer` and a query engine.
+
+    Owns the dispatch sequence counter (folded into the engine's config
+    seed key so Monte-Carlo answers replay identically at any depth), the
+    completion queue, and the pipeline telemetry the benchmark reads.
+    """
+
+    def __init__(self, engine, buffer: RequestBuffer, cfg: PipelineConfig,
+                 clock: Optional[Callable[[], float]] = None):
+        self.engine = engine
+        self.buffer = buffer
+        self.cfg = cfg
+        self.clock = clock or time.monotonic
+        self.queue = CompletionQueue(cfg.depth)
+        self._seq = 0
+        self.stats: Dict[str, float] = dict(
+            dispatched=0, harvested=0, queue_full_stalls=0, in_flight_peak=0,
+        )
+        # padded batch width -> count; the benchmark's batch-size histogram
+        self.batch_hist: Dict[int, int] = collections.Counter()
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.queue)
+
+    # -- dispatch phase ------------------------------------------------------
+    def _should_dispatch(self, force: bool) -> bool:
+        if not len(self.buffer):
+            return False
+        if force or self.buffer.size_ready():
+            return True
+        # Deadline-fired batches only launch into an *idle* pipeline: on a
+        # serialized device stream a partial batch dispatched behind another
+        # batch starts no sooner, but its pad rows burn capacity.  Deferring
+        # it lets the buffer keep filling while the device works, so the
+        # next dispatch carries more real rows per launch.
+        return self.in_flight == 0 and self.buffer.ready()
+
+    def dispatch(self, force: bool = False) -> List[CompletedBatch]:
+        """Drain-and-launch until the buffer is quiet.  Returns any batches
+        that had to be harvested to make room (queue-full backpressure) —
+        callers must not drop them."""
+        out: List[CompletedBatch] = []
+        while self._should_dispatch(force):
+            out.extend(self._dispatch_one())
+        return out
+
+    def _dispatch_one(self) -> List[CompletedBatch]:
+        out: List[CompletedBatch] = []
+        if self.queue.full():  # backpressure: block on the oldest batch
+            self.stats["queue_full_stalls"] += 1
+            out.append(self._complete(self.queue.pop(block=True)))
+        requests, padded = self.buffer.drain()
+        verts = np.array([r.vertex for r in requests], dtype=np.int32)
+        if padded > len(requests):  # pad with vertex 0 to a stable jit shape
+            verts = np.concatenate(
+                [verts, np.zeros(padded - len(requests), np.int32)]
+            )
+        if self.cfg.dispatch == "legacy":
+            vals, idx = self.engine.query_topk(jnp.asarray(verts))
+            vals.block_until_ready()
+        else:
+            vals, idx = self.engine.query_topk_async(
+                verts, key=self.engine.dispatch_key(self._seq)
+            )
+        ticket = PendingBatch(
+            self._seq, requests, padded, vals, idx, self.clock()
+        )
+        self._seq += 1
+        self.queue.push(ticket)
+        self.stats["dispatched"] += 1
+        self.stats["in_flight_peak"] = max(
+            self.stats["in_flight_peak"], len(self.queue)
+        )
+        self.batch_hist[padded] += 1
+        return out
+
+    # -- completion phase ----------------------------------------------------
+    def harvest(self, drain: bool = False) -> List[CompletedBatch]:
+        """Pop finished batches from the queue head.  ``drain`` blocks until
+        *everything* in flight has completed (flush semantics); otherwise
+        only ready batches are taken and the call never syncs."""
+        out: List[CompletedBatch] = []
+        while len(self.queue):
+            ticket = self.queue.pop(block=drain)
+            if ticket is None:
+                break
+            out.append(self._complete(ticket))
+        return out
+
+    def flush(self) -> List[CompletedBatch]:
+        """Dispatch whatever is buffered, then block for all of it."""
+        out = self.dispatch(force=True)
+        out.extend(self.harvest(drain=True))
+        return out
+
+    def _complete(self, ticket: PendingBatch) -> CompletedBatch:
+        n_real = len(ticket.requests)
+        # pad rows never reach answers or stats: slice them off on device so
+        # only the real rows' top-k is materialized on the host
+        vals = np.asarray(ticket.values[:n_real])
+        idx = np.asarray(ticket.indices[:n_real])
+        self.stats["harvested"] += 1
+        return CompletedBatch(
+            ticket.seq, ticket.requests, ticket.padded, vals, idx,
+            ticket.dispatched_at, self.clock(),
+        )

@@ -1,0 +1,472 @@
+"""Serving-pipeline suite: batching tiers/padding, the async completion
+queue, answer parity across pipeline depths, and the open-loop harness.
+
+The parity tests are the PR's contract: pipelining changes *when* answers
+materialize, never *what* they are — any depth must produce the same
+arrays as the depth=1 blocking path, on the dense and sparse frontier
+routes and against a padded (sharded-build-shaped) index.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import query as query_mod
+from repro.core.index import PPRIndex
+from repro.core.query import BatchQueryEngine, QueryConfig
+from repro.graphs import synthetic
+from repro.serving import (PipelineConfig, PPRService, ServiceConfig,
+                           run_closed_loop, run_open_loop)
+from repro.serving.batching import BatchingConfig, RequestBuffer, TierPolicy
+from repro.serving.pipeline import CompletionQueue, PendingBatch, ServingPipeline
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def graph():
+    return synthetic.rmat(11, avg_deg=8.0, seed=2)  # n = 2048
+
+
+def _random_index(n: int, l: int, seed: int) -> PPRIndex:
+    kv, ki = jax.random.split(jax.random.PRNGKey(seed))
+    vals = jax.random.uniform(kv, (n, l), jnp.float32)
+    vals = jnp.sort(vals / vals.sum(axis=1, keepdims=True), axis=1)[:, ::-1]
+    idxs = jax.random.randint(ki, (n, l), 0, n, jnp.int32)
+    return PPRIndex(values=vals, indices=idxs, l=l, n=n)
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    return _random_index(graph.n, 16, seed=4)
+
+
+@pytest.fixture(scope="module")
+def padded_index(graph, index):
+    """Sharded-build-shaped index: zeroed pad rows beyond graph.n."""
+    pad = 37
+    vals = jnp.concatenate(
+        [index.values, jnp.zeros((pad, index.l), jnp.float32)])
+    idxs = jnp.concatenate(
+        [index.indices, jnp.zeros((pad, index.l), jnp.int32)])
+    return PPRIndex(values=vals, indices=idxs, l=index.l, n=graph.n + pad)
+
+
+def _service(graph, index, *, depth=1, dispatch="fused", frontier_path="sparse",
+             max_batch=64, clock=None, **batching):
+    cfg = ServiceConfig(
+        query=QueryConfig(mode="powerwalk", t_iterations=2, top_k=32,
+                          frontier_k=128, frontier_path=frontier_path),
+        batching=BatchingConfig(max_batch=max_batch, **batching),
+        pipeline=PipelineConfig(depth=depth, dispatch=dispatch),
+    )
+    return PPRService(graph, index, cfg, clock=clock)
+
+
+def _serve_all(svc, vertices):
+    """Submit everything, then flush; answers stacked by request id."""
+    for v in vertices:
+        svc.submit(int(v))
+    answers = svc.poll(force=True)
+    assert len(answers) == len(vertices)
+    answers.sort(key=lambda a: a.request_id)
+    return (np.stack([a.top_scores for a in answers]),
+            np.stack([a.top_vertices for a in answers]))
+
+
+# ---------------------------------------------------------------------------
+# satellite: power-of-two padding clamped to max_batch
+# ---------------------------------------------------------------------------
+
+def test_pad_clamped_to_max_batch():
+    # regression: max_batch=3000 used to pad a full drain to 4096, a jit
+    # shape wider than the configured limit
+    buf = RequestBuffer(BatchingConfig(max_batch=3000), clock=lambda: 0.0)
+    for v in range(3000):
+        buf.submit(v)
+    reqs, padded = buf.drain()
+    assert len(reqs) == 3000 and padded == 3000
+    # non-power-of-two partial drains still round up within the clamp
+    for v in range(2500):
+        buf.submit(v)
+    reqs, padded = buf.drain()
+    assert len(reqs) == 2500 and padded == 3000
+
+
+def test_pad_min_floor():
+    buf = RequestBuffer(BatchingConfig(max_batch=256, min_pad=64),
+                        clock=lambda: 0.0)
+    for v in range(5):
+        buf.submit(v)
+    reqs, padded = buf.drain()
+    assert len(reqs) == 5 and padded == 64
+    # the floor itself is clamped to max_batch
+    buf2 = RequestBuffer(BatchingConfig(max_batch=8, min_pad=64),
+                         clock=lambda: 0.0)
+    buf2.submit(0)
+    _, padded = buf2.drain()
+    assert padded == 8
+
+
+# ---------------------------------------------------------------------------
+# satellite: tiers and deadlines with an injected clock
+# ---------------------------------------------------------------------------
+
+def test_tier_drain_interactive_first():
+    buf = RequestBuffer(BatchingConfig(max_batch=16), clock=lambda: 0.0)
+    b0 = buf.submit(10, tier="bulk")
+    b1 = buf.submit(11, tier="bulk")
+    i0 = buf.submit(20, tier="interactive")
+    i1 = buf.submit(21, tier="interactive")
+    reqs, _ = buf.drain()
+    assert [r.request_id for r in reqs] == [i0, i1, b0, b1]
+    assert [r.tier for r in reqs] == ["interactive"] * 2 + ["bulk"] * 2
+
+
+def test_tier_deadline_with_empty_opposite_tier():
+    t = [0.0]
+    cfg = BatchingConfig(
+        max_batch=100, max_wait_s=10.0,
+        interactive=TierPolicy(max_wait_s=0.01),
+        bulk=TierPolicy(max_wait_s=1.0),
+    )
+    buf = RequestBuffer(cfg, clock=lambda: t[0])
+    buf.submit(1, tier="bulk")      # interactive tier stays empty
+    assert not buf.ready()
+    t[0] = 0.5
+    assert not buf.ready()          # bulk deadline (1.0s) not yet crossed
+    t[0] = 1.01
+    assert buf.ready()              # fires on bulk's own deadline
+    reqs, _ = buf.drain()
+    assert len(reqs) == 1 and reqs[0].tier == "bulk"
+    # and the interactive deadline fires alone too
+    buf.submit(2, tier="interactive")
+    assert not buf.ready()
+    t[0] = 1.03
+    assert buf.ready()
+
+
+def test_ready_honors_oldest_request_per_tier():
+    t = [0.0]
+    buf = RequestBuffer(BatchingConfig(max_batch=100, max_wait_s=0.01),
+                        clock=lambda: t[0])
+    buf.submit(1)
+    t[0] = 0.008
+    buf.submit(2)                   # young request must not reset the clock
+    assert not buf.ready()
+    t[0] = 0.0101                   # oldest crossed its deadline
+    assert buf.ready()
+
+
+def test_tier_batch_limit_applies_per_tier():
+    cfg = BatchingConfig(max_batch=16, interactive=TierPolicy(max_batch=2))
+    buf = RequestBuffer(cfg, clock=lambda: 0.0)
+    ids = [buf.submit(v) for v in range(3)]                  # interactive
+    bids = [buf.submit(v, tier="bulk") for v in (7, 8)]
+    assert buf.ready()              # interactive tier hit its batch size
+    reqs, _ = buf.drain()
+    # 2 interactive (tier cap) + bulk fills the remaining global room
+    assert [r.request_id for r in reqs] == [ids[0], ids[1], bids[0], bids[1]]
+    assert len(buf) == 1            # third interactive waits for next batch
+
+
+def test_submit_rejects_unknown_tier():
+    buf = RequestBuffer(BatchingConfig(), clock=lambda: 0.0)
+    with pytest.raises(ValueError):
+        buf.submit(0, tier="batch")
+
+
+# ---------------------------------------------------------------------------
+# pipeline mechanics (stub engine: no device work)
+# ---------------------------------------------------------------------------
+
+class _StubEngine:
+    """Returns recognizable host arrays; numpy has no ``is_ready`` so every
+    ticket reports ready immediately."""
+
+    def __init__(self, k=4):
+        self.k = k
+        self.calls = 0
+
+    def dispatch_key(self, seq):
+        return seq
+
+    def query_topk_async(self, verts, *, key=None):
+        self.calls += 1
+        q = len(verts)
+        vals = np.full((q, self.k), float(self.calls), np.float32)
+        idx = np.tile(np.asarray(verts, np.int32)[:, None], (1, self.k))
+        return vals, idx
+
+
+def test_completion_queue_is_bounded():
+    q = CompletionQueue(depth=2)
+    mk = lambda s: PendingBatch(s, [], 0, np.zeros(1), np.zeros(1), 0.0)
+    q.push(mk(0)), q.push(mk(1))
+    assert q.full()
+    with pytest.raises(RuntimeError):
+        q.push(mk(2))
+    assert q.pop().seq == 0         # FIFO
+    q.push(mk(2))
+    assert [q.pop(block=True).seq for _ in range(2)] == [1, 2]
+
+
+def test_queue_pop_waits_for_unready_head():
+    class NotReady:
+        def is_ready(self):
+            return False
+
+    q = CompletionQueue(depth=2)
+    q.push(PendingBatch(0, [], 0, NotReady(), NotReady(), 0.0))
+    assert q.pop(block=False) is None   # head not finished, nothing harvested
+    assert len(q) == 1
+
+
+def test_pipeline_depth_bound_and_backpressure():
+    buf = RequestBuffer(BatchingConfig(max_batch=4, pad_to_power_of_two=False),
+                        clock=lambda: 0.0)
+    pl = ServingPipeline(_StubEngine(), buf, PipelineConfig(depth=2),
+                         clock=lambda: 0.0)
+    for v in range(20):
+        buf.submit(v)
+    completed = pl.dispatch(force=True)          # 5 batches through depth 2
+    completed += pl.harvest(drain=True)
+    assert pl.stats["dispatched"] == 5 and pl.stats["harvested"] == 5
+    assert pl.stats["in_flight_peak"] == 2       # never exceeded depth
+    assert pl.stats["queue_full_stalls"] == 3    # batches 3..5 had to wait
+    served = [r.vertex for b in completed for r in b.requests]
+    assert sorted(served) == list(range(20))
+    # completion order preserved dispatch order (FIFO stream semantics)
+    assert [b.seq for b in completed] == [0, 1, 2, 3, 4]
+
+
+def test_pipeline_batch_histogram():
+    buf = RequestBuffer(BatchingConfig(max_batch=8), clock=lambda: 0.0)
+    pl = ServingPipeline(_StubEngine(), buf, PipelineConfig(depth=1),
+                         clock=lambda: 0.0)
+    for v in range(13):
+        buf.submit(v)
+    pl.flush()
+    assert dict(pl.batch_hist) == {8: 2}         # 8 full + 5 padded to 8
+
+
+def test_deadline_dispatch_deferred_while_busy():
+    """A deadline-fired partial batch must not launch behind an in-flight
+    batch (it would start no sooner and its pad rows burn capacity); it
+    launches once the pipeline drains.  Size-fired batches always launch."""
+    buf = RequestBuffer(BatchingConfig(max_batch=8, max_wait_s=0.0),
+                        clock=lambda: 1.0)
+    pl = ServingPipeline(_StubEngine(), buf, PipelineConfig(depth=2),
+                         clock=lambda: 1.0)
+    for v in range(3):
+        buf.submit(v)
+    assert buf.ready() and not buf.size_ready()
+    pl.dispatch()                                # idle -> deadline batch goes
+    assert pl.stats["dispatched"] == 1 and pl.in_flight == 1
+    for v in range(3):
+        buf.submit(v)
+    pl.dispatch()                                # busy -> deferred, fills up
+    assert pl.stats["dispatched"] == 1 and len(buf) == 3
+    for v in range(8):
+        buf.submit(v)                            # one tier hits max_batch
+    pl.dispatch()                                # size-fired: launches anyway
+    assert pl.stats["dispatched"] == 2 and len(buf) == 3
+    pl.harvest(drain=True)
+    pl.dispatch()                                # idle again -> deferred goes
+    assert pl.stats["dispatched"] == 3 and len(buf) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: answer parity at every depth, both routes, padded index
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("frontier_path", ["sparse", "dense"])
+@pytest.mark.parametrize("depth", [2, 4])
+def test_async_depth_parity(graph, index, frontier_path, depth):
+    rng = np.random.default_rng(3)
+    verts = rng.integers(0, graph.n, size=165)   # 64 + 64 + 37(pad 64)
+    base = _service(graph, index, depth=1, frontier_path=frontier_path)
+    v0, i0 = _serve_all(base, verts)
+    svc = _service(graph, index, depth=depth, frontier_path=frontier_path)
+    v1, i1 = _serve_all(svc, verts)
+    # identical arrays, not merely close: same fused computation, same
+    # per-dispatch keys, only the harvest timing differs
+    np.testing.assert_array_equal(v0, v1)
+    np.testing.assert_array_equal(i0, i1)
+    assert svc.pipeline.stats["in_flight_peak"] <= depth
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_async_parity_padded_index(graph, index, padded_index, depth):
+    rng = np.random.default_rng(5)
+    verts = rng.integers(0, graph.n, size=100)
+    ref = _service(graph, index, depth=1)
+    v0, i0 = _serve_all(ref, verts)
+    svc = _service(graph, padded_index, depth=depth)
+    v1, i1 = _serve_all(svc, verts)
+    # pad rows carry no mass, so a sharded-shaped index serves the same
+    # answers at any depth
+    np.testing.assert_allclose(v0, v1, rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(i0, i1)
+
+
+@pytest.mark.parametrize("frontier_path", ["sparse", "dense"])
+def test_fused_matches_legacy_blocking(graph, index, frontier_path):
+    rng = np.random.default_rng(7)
+    verts = rng.integers(0, graph.n, size=130)
+    leg = _service(graph, index, depth=1, dispatch="legacy",
+                   frontier_path=frontier_path)
+    v0, i0 = _serve_all(leg, verts)
+    fus = _service(graph, index, depth=1, dispatch="fused",
+                   frontier_path=frontier_path)
+    v1, i1 = _serve_all(fus, verts)
+    np.testing.assert_allclose(v0, v1, rtol=1e-6, atol=1e-7)
+    # equal scores can permute within ties; compare the score multisets and
+    # the (vertex -> score) maps instead of raw index order
+    for r in range(len(verts)):
+        m0 = dict(zip(i0[r].tolist(), v0[r].tolist()))
+        m1 = dict(zip(i1[r].tolist(), v1[r].tolist()))
+        for k in set(m0) | set(m1):
+            assert abs(m0.get(k, 0.0) - m1.get(k, 0.0)) < 1e-6
+
+
+def test_service_matches_engine_rows(graph, index):
+    """A full no-pad batch through the service equals the engine's own
+    fused answers row for row."""
+    verts = np.arange(64)
+    svc = _service(graph, index, depth=2)
+    v_srv, i_srv = _serve_all(svc, verts)
+    eng = svc.engine
+    v_ref, i_ref = eng.query_topk_async(
+        jnp.asarray(verts, jnp.int32), key=eng.dispatch_key(0))
+    np.testing.assert_array_equal(v_srv, np.asarray(v_ref))
+    np.testing.assert_array_equal(i_srv, np.asarray(i_ref))
+
+
+# ---------------------------------------------------------------------------
+# scatter-combine routing + parity (the fused path's perf lever)
+# ---------------------------------------------------------------------------
+
+def test_scatter_combine_routing(graph, index, monkeypatch):
+    eng = BatchQueryEngine(graph, index, QueryConfig(
+        mode="powerwalk", frontier_k=128, frontier_path="sparse"))
+    assert eng.uses_scatter_combine(64)          # fits the default budget
+    monkeypatch.setattr(query_mod, "SCATTER_COMBINE_BUDGET_BYTES", 100)
+    assert not eng.uses_scatter_combine(64)      # auto respects the budget
+    eng.config.combine_path = "scatter"
+    assert eng.uses_scatter_combine(64)          # explicit overrides budget
+    eng.config.combine_path = "sparse"
+    assert not eng.uses_scatter_combine(1)
+    # only the powerwalk sparse route has an index combine
+    dense_eng = BatchQueryEngine(graph, index, QueryConfig(
+        mode="powerwalk", frontier_path="dense"))
+    assert not dense_eng.uses_scatter_combine(1)
+
+
+def test_scatter_combine_matches_sparse_combine(graph, index):
+    verts = jnp.arange(48, dtype=jnp.int32)
+    answers = {}
+    for path in ("scatter", "sparse"):
+        eng = BatchQueryEngine(graph, index, QueryConfig(
+            mode="powerwalk", t_iterations=2, top_k=32, frontier_k=128,
+            frontier_path="sparse", combine_path=path))
+        answers[path] = eng.query_topk_async(verts)
+    np.testing.assert_allclose(
+        np.asarray(answers["scatter"][0]), np.asarray(answers["sparse"][0]),
+        rtol=1e-6, atol=1e-7)
+    np.testing.assert_array_equal(
+        np.asarray(answers["scatter"][1]), np.asarray(answers["sparse"][1]))
+
+
+# ---------------------------------------------------------------------------
+# open-loop harness
+# ---------------------------------------------------------------------------
+
+def _virtual_clock_service(graph, index, **kw):
+    t = [0.0]
+    svc = _service(graph, index, clock=lambda: t[0], **kw)
+    return svc, t
+
+
+def test_open_loop_latency_from_scheduled_arrival(graph, index):
+    svc, t = _virtual_clock_service(graph, index, max_batch=16,
+                                    max_wait_s=1.0)
+    def sleep(dt):
+        t[0] += dt
+    answers, stats = run_open_loop(
+        svc, list(range(16)), qps=100.0, sleep=sleep)
+    assert len(answers) == 16
+    # all 16 complete in one final batch at the same (virtual) instant, so
+    # latency must decrease with request id: arrival was backdated to the
+    # *scheduled* offer time i/qps, not the submit time
+    by_id = sorted(answers, key=lambda a: a.request_id)
+    lats = [a.latency_s for a in by_id]
+    assert all(lats[i] > lats[i + 1] for i in range(len(lats) - 1))
+    np.testing.assert_allclose(lats[0] - lats[-1], 15 / 100.0, rtol=1e-6)
+    assert stats["offered_qps"] == 100.0
+    assert stats["latency_p99"] >= stats["latency_p50"] > 0
+
+
+def test_open_loop_tiered_workload(graph, index):
+    svc, t = _virtual_clock_service(graph, index, max_batch=16)
+    work = [(5, "bulk"), (6, "interactive"), (7, "bulk"), (8, "interactive")]
+    answers, _ = run_open_loop(svc, work, qps=None)
+    got = {a.vertex: a.tier for a in answers}
+    assert got == {5: "bulk", 6: "interactive", 7: "bulk", 8: "interactive"}
+
+
+def test_closed_loop_wrapper_keeps_stats_contract(graph, index):
+    svc = _service(graph, index, depth=2, max_batch=16)
+    answers, s = svc.run_closed_loop(list(range(40)))
+    assert len(answers) == 40
+    for key in ("served", "batches", "pad_rows", "wall_s", "qps",
+                "mean_latency", "pad_fraction", "frontier_path", "answer_k",
+                "index_rows", "index_sharded", "wall_s_excl_first_batch",
+                "latency_p50", "latency_p99", "pipeline_depth",
+                "batch_hist", "first_batch_service_s"):
+        assert key in s, key
+    assert s["served"] == 40
+    assert 0.0 <= s["pad_fraction"] < 1.0
+    # cold service: the first (compile-bearing) batch is excluded from the
+    # adjusted wall, so the adjusted qps can only improve
+    assert s["first_batch_service_s"] > 0.0
+    assert s["wall_s_excl_first_batch"] <= s["wall_s"]
+    assert s["qps_excl_first_batch"] >= s["qps"]
+
+
+def test_poll_without_traffic_is_empty(graph, index):
+    svc = _service(graph, index)
+    assert svc.poll() == []
+    assert svc.poll(force=True) == []
+
+
+# ---------------------------------------------------------------------------
+# slow end-to-end: real clock, sparse route, pipelined vs blocking
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_e2e_pipelined_serving_matches_blocking(graph, index):
+    rng = np.random.default_rng(13)
+    verts = rng.integers(0, graph.n, size=400).tolist()
+
+    leg = _service(graph, index, depth=1, dispatch="legacy", max_batch=128)
+    _, s_leg = run_closed_loop(leg, verts)
+    pip = _service(graph, index, depth=4, dispatch="fused", max_batch=128)
+    answers, s_pip = run_open_loop(pip, verts, qps=2000.0)
+
+    assert s_leg["served"] == s_pip["served"] == 400
+    assert len({a.request_id for a in answers}) == 400
+    # batching differs between the two runs, but per-vertex answers are a
+    # pure function of the vertex on the powerwalk route — collect by
+    # vertex and compare across serving stacks
+    leg_by_vertex = {}
+    leg2 = _service(graph, index, depth=1, dispatch="legacy", max_batch=128)
+    for a in run_closed_loop(leg2, sorted(set(verts)))[0]:
+        leg_by_vertex[a.vertex] = (a.top_scores, a.top_vertices)
+    for a in answers:
+        v_ref, i_ref = leg_by_vertex[a.vertex]
+        np.testing.assert_allclose(a.top_scores, v_ref, rtol=1e-5, atol=1e-6)
+    assert s_pip["pipeline_in_flight_peak"] >= 1
