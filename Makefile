@@ -4,7 +4,8 @@
 PY ?= python
 
 .PHONY: test test-fast test-parity test-kernels bench bench-smoke bench-walks \
-	bench-preprocess-dist bench-serving bench-serving-smoke
+	bench-preprocess-dist bench-serving bench-serving-smoke bench-cache \
+	bench-cache-smoke
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
@@ -28,9 +29,10 @@ test-kernels:
 bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
-# CI-sized smoke: small graphs, query + kernel tables only
+# CI-sized smoke: small graphs — query + kernel tables plus the cache
+# knee-shift smoke (the fast suite's bench half)
 bench-smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only query,kernels
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only query,kernels,cache
 
 # serving pipeline: open-loop QPS sweep + depth sweep at the n=100k/K=512
 # reference point; writes BENCH_serving.json (docs/serving_path.md)
@@ -41,6 +43,16 @@ bench-serving:
 # trajectory is never clobbered (PR-4 convention)
 bench-serving-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only serving
+
+# answer cache: Zipf hot-seed traffic x cache size at the n=100k/K=512
+# reference point; writes BENCH_cache.json (knee shift vs cache-off,
+# >= 1.5x gate at skew 1.1 — docs/serving_path.md)
+bench-cache:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only cache
+
+# CI-sized cache smoke: writes BENCH_cache.fast.json
+bench-cache-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only cache
 
 # offline walk engine: legacy vs compacted-sparse positions/sec at the
 # n=100k acceptance point + index-build timings; writes BENCH_walks.json

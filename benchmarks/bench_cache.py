@@ -1,0 +1,135 @@
+"""Answer-cache benchmark: Zipf hot-seed traffic x cache size.
+
+Drives the service with ``zipf_seed_workload`` (hot weighted seed sets,
+spelled with permuted seeds and rescaled weights so hits go through
+canonicalization) and sweeps skew x cache capacity at the n=100k / K=512
+reference point.  For each cell it measures the closed-loop capacity with
+a *warm* cache, then an open-loop rate sweep around that capacity, and
+records the sustained knee + hit rate — the persisted trajectory is how
+much the answer cache moves the saturation knee versus cache-off
+(``knee_speedup_cache``; acceptance gate >= 1.5x at skew 1.1).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.bench_query import _random_index
+from benchmarks.bench_serving import SUSTAIN_FRACTION, _knee, _warmup
+from benchmarks.common import emit
+from repro.core.query import QueryConfig
+from repro.graphs import synthetic
+from repro.serving import PPRService, PipelineConfig, ServiceConfig
+from repro.serving.batching import BatchingConfig
+from repro.serving.cache import CacheConfig
+from repro.serving.loadgen import (run_closed_loop, run_open_loop,
+                                   zipf_seed_workload)
+
+FULL = dict(n=100_000, avg_deg=8.0, L=32, K=512, top_k=100, t=2,
+            max_seeds=4, max_batch=256, min_pad=64, max_wait_s=0.010,
+            depth=2, requests=2048, pool=1024, singles_fraction=0.25,
+            skews=(0.8, 1.1, 1.4), capacities=(0, 128, 512),
+            gate_skew=1.1, rate_grid=(0.6, 0.9, 1.1, 1.4))
+FAST = dict(n=8_192, avg_deg=8.0, L=16, K=128, top_k=50, t=2,
+            max_seeds=4, max_batch=32, min_pad=16, max_wait_s=0.005,
+            depth=2, requests=240, pool=96, singles_fraction=0.25,
+            skews=(1.1,), capacities=(0, 64),
+            gate_skew=1.1, rate_grid=(0.8, 1.2))
+
+
+def _make_service(g, idx, p: dict, capacity: int) -> PPRService:
+    cfg = ServiceConfig(
+        query=QueryConfig(
+            mode="powerwalk", t_iterations=p["t"], top_k=p["top_k"],
+            frontier_k=p["K"], frontier_path="sparse",
+            max_seeds=p["max_seeds"],
+        ),
+        batching=BatchingConfig(
+            max_batch=p["max_batch"], max_wait_s=p["max_wait_s"],
+            min_pad=p["min_pad"],
+        ),
+        pipeline=PipelineConfig(depth=p["depth"], dispatch="fused"),
+        cache=CacheConfig(capacity=capacity),
+    )
+    return PPRService(g, idx, cfg)
+
+
+def _point(stats: dict) -> dict:
+    return dict(
+        offered_qps=stats["offered_qps"], qps=stats["qps"],
+        latency_p50=stats["latency_p50"], latency_p99=stats["latency_p99"],
+        served=stats["served"], batches=stats["batches"],
+        pad_fraction=stats["pad_fraction"],
+        cache_hit_rate=stats["cache_hit_rate"],
+        cache_served=stats["cache_served"],
+        cache_evictions=stats["cache_evictions"],
+    )
+
+
+def run(fast: bool = False) -> dict:
+    p = FAST if fast else FULL
+    g = synthetic.erdos_renyi(p["n"], p["avg_deg"], seed=5)
+    idx = _random_index(g.n, p["L"], jax.random.PRNGKey(7))
+
+    out: dict = dict(
+        reference=dict(
+            n=p["n"], K=p["K"], L=p["L"], top_k=p["top_k"], t=p["t"],
+            max_seeds=p["max_seeds"], max_batch=p["max_batch"],
+            depth=p["depth"], requests=p["requests"], pool=p["pool"],
+            singles_fraction=p["singles_fraction"],
+            sustain_fraction=SUSTAIN_FRACTION,
+        ),
+        closed_loop={}, open_loop={}, knee={}, hit_rate={},
+    )
+
+    for skew in p["skews"]:
+        workload = zipf_seed_workload(
+            g.n, p["requests"], skew=skew, max_seeds=p["max_seeds"],
+            pool=p["pool"], singles_fraction=p["singles_fraction"],
+            seed=13,
+        )
+        for capacity in p["capacities"]:
+            cell = f"skew{skew:g}_cap{capacity}"
+            svc = _make_service(g, idx, p, capacity)
+            _warmup(svc, p)
+            # warm pass: measures closed-loop capacity *and* leaves the
+            # cache warm (reset_stats zeros counters, entries persist) —
+            # the acceptance gate is a warm-cache knee vs cache-off
+            _, stats = run_closed_loop(svc, workload)
+            capacity_qps = stats["qps"]
+            out["closed_loop"][cell] = _point(stats)
+            emit(f"cache_closed_{cell}", 1e6 / max(capacity_qps, 1e-9),
+                 f"qps={capacity_qps:.1f};"
+                 f"hit={stats['cache_hit_rate']:.2f}")
+
+            points = []
+            for frac in p["rate_grid"]:
+                offered = frac * capacity_qps
+                svc.reset_stats()
+                _, stats = run_open_loop(svc, workload, qps=offered)
+                points.append(_point(stats))
+                emit(f"cache_open_{cell}_r{frac:g}",
+                     1e6 / max(stats["qps"], 1e-9),
+                     f"offered={offered:.1f};qps={stats['qps']:.1f};"
+                     f"hit={stats['cache_hit_rate']:.2f};"
+                     f"p99={stats['latency_p99']*1e3:.1f}ms")
+            out["open_loop"][cell] = points
+            out["knee"][cell] = _knee(points)
+            out["hit_rate"][cell] = max(pt["cache_hit_rate"] for pt in points)
+
+    # -- the acceptance gate: warm-cache knee vs cache-off at gate_skew -----
+    gate = f"skew{p['gate_skew']:g}"
+    base = out["knee"][f"{gate}_cap0"]["knee_qps"]
+    best_cap = max(
+        (c for c in p["capacities"] if c > 0),
+        key=lambda c: out["knee"][f"{gate}_cap{c}"]["knee_qps"],
+    )
+    best = out["knee"][f"{gate}_cap{best_cap}"]["knee_qps"]
+    out["knee_speedup_cache"] = best / max(base, 1e-9)
+    out["knee_best_capacity"] = best_cap
+    out["gate_skew"] = p["gate_skew"]
+    emit("cache_knee_speedup", 0.0,
+         f"cap{best_cap}_{best:.1f}qps_vs_cap0_{base:.1f}qps;"
+         f"x{out['knee_speedup_cache']:.2f}")
+    return out

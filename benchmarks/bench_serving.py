@@ -56,13 +56,14 @@ def _make_service(g, idx, p: dict, depth: int, dispatch: str) -> PPRService:
 
 def _warmup(svc: PPRService, p: dict) -> None:
     """Compile every padded batch shape the buffer can form, then zero the
-    counters so measurements see a warm service only."""
-    shape = max(p["min_pad"], 1)
-    while shape <= p["max_batch"]:
+    counters so measurements see a warm service only.  Iterates the
+    batcher's own closed shape set (``BatchingConfig.padded_shapes``) —
+    the old pow2 walk missed the bucketed quantum-multiple widths (e.g.
+    192 at max_batch=256), so those compiled mid-measurement."""
+    for shape in svc.cfg.batching.padded_shapes():
         for v in range(shape):
             svc.submit(v % svc.engine.graph.n)
         svc.poll(force=True)
-        shape *= 2
     svc.reset_stats()
 
 

@@ -15,6 +15,7 @@ Mapping to the paper:
   bench_walks      -> Section 3.1 (walk-engine throughput, legacy vs sparse)
   bench_kernels    -> Pallas kernel micro-benches + correctness gates
   bench_serving    -> Section 3.3 serving loop (open-loop QPS, pipeline depth)
+  bench_cache      -> answer cache under Zipf hot-seed traffic (knee shift)
 """
 
 from __future__ import annotations
@@ -54,13 +55,13 @@ def main() -> None:
                     help="directory for the BENCH_<module>.json files")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_kernels, bench_preprocess,
-                            bench_query, bench_serving, bench_verd,
-                            bench_walks)
+    from benchmarks import (bench_accuracy, bench_cache, bench_kernels,
+                            bench_preprocess, bench_query, bench_serving,
+                            bench_verd, bench_walks)
     modules = dict(
         accuracy=bench_accuracy, verd=bench_verd, preprocess=bench_preprocess,
         query=bench_query, walks=bench_walks, kernels=bench_kernels,
-        serving=bench_serving,
+        serving=bench_serving, cache=bench_cache,
     )
     if args.only:
         keep = set(args.only.split(","))

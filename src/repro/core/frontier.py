@@ -70,6 +70,25 @@ def from_sources(sources: jax.Array, n: int) -> SparseFrontier:
     return SparseFrontier(values=fv, indices=fi, k=1, n=n)
 
 
+def from_seed_sets(
+    seeds: jax.Array, weights: jax.Array, n: int
+) -> SparseFrontier:
+    """Width-``S`` weighted frontier: each query starts at its seed set.
+
+    ``seeds int32[Q, S]`` / ``weights f32[Q, S]`` — pad slots carry weight
+    0 (the shared empty-slot convention), so a padded seed set is exactly
+    the unpadded one.  Duplicate seeds within a row are fine: they sit in
+    separate slots here and every downstream push/combine dedup-merges
+    colliding columns, so the state never widens past ``S``.
+    """
+    return SparseFrontier(
+        values=weights.astype(jnp.float32),
+        indices=seeds.astype(jnp.int32),
+        k=int(seeds.shape[1]),
+        n=n,
+    )
+
+
 def from_dense(dense: jax.Array, k: int) -> SparseFrontier:
     """Top-K sparsification of dense rows (drops everything below rank K)."""
     n = dense.shape[1]

@@ -150,6 +150,26 @@ def transition_with_dangling(
     return pushed.at[jnp.arange(q), sources].add(dm)
 
 
+def transition_with_dangling_seeds(
+    graph: Graph, frontier: jax.Array, seeds: jax.Array, weights: jax.Array
+) -> jax.Array:
+    """``frontier @ A`` where dangling rows of ``A`` point at each query's
+    *seed distribution*.
+
+    ``seeds``: int32[q, S] seed vertices per batch row; ``weights``:
+    f32[q, S], nonnegative, pad slots 0.  Dangling mass is redistributed
+    proportionally to the (normalized) weights — for ``S = 1`` this is
+    exactly :func:`transition_with_dangling`.  Duplicate seeds simply
+    receive the sum of their slots' shares (scatter-add).
+    """
+    pushed = push_forward(graph, frontier)
+    dm = dangling_mass(graph, frontier)
+    wsum = jnp.maximum(jnp.sum(weights, axis=-1, keepdims=True), 1e-30)
+    share = dm[:, None] * (weights / wsum)
+    q = frontier.shape[0]
+    return pushed.at[jnp.arange(q)[:, None], seeds].add(share)
+
+
 def reverse(graph: Graph) -> Graph:
     """Graph with every edge reversed (used by pull-mode kernels)."""
     return Graph.from_edges(

@@ -57,6 +57,34 @@ def auto_frontier_floor(top_k: int) -> int:
     return max(4 * top_k, 256)
 
 
+def normalize_seed_weights(weights: jax.Array) -> jax.Array:
+    """Seed-set weights normalized to sum 1 per row (f32).
+
+    The engine's one normalization point: queries are scale-invariant in
+    their seed weights (PPR restarts at a *distribution*), so the engine
+    divides by the row sum before anything downstream sees the weights —
+    which is also what lets ``serving.cache`` canonicalize rescaled seed
+    sets onto one cache entry.  Weight-0 pad slots stay 0.  All-zero rows
+    (nothing real in the row — pad queries) degrade to all-zero weights
+    rather than NaN.
+    """
+    w = jnp.asarray(weights, jnp.float32)
+    return w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-30)
+
+
+def _fppr_lookup(
+    index: PPRIndex, sources: jax.Array, seed_w: Optional[jax.Array]
+) -> jax.Array:
+    """fppr dense answers: a plain row lookup, or — for seed sets — the
+    weighted sum of each seed's index row (fppr has no iterate to seed, but
+    PPR linearity makes the lookup combine exact at index precision)."""
+    if seed_w is None:
+        return index.lookup_dense(sources)
+    q, s = sources.shape
+    rows = index.lookup_dense(sources.reshape(-1)).reshape(q, s, -1)
+    return jnp.sum(seed_w[:, :, None] * rows, axis=1)
+
+
 @dataclasses.dataclass
 class QueryConfig:
     mode: str = "powerwalk"       # powerwalk | verd | fppr | mcfp | pi
@@ -75,6 +103,11 @@ class QueryConfig:
                                    # SCATTER_COMBINE_BUDGET_BYTES)
     hub_split_degree: int = 0      # ELL row-split width for the sparse push
                                    # (0 = no splitting; see verd.gather_push_edges)
+    max_seeds: int = 1             # seed-set width S_max: queries may carry up
+                                   # to this many weighted seed vertices per
+                                   # row, padded with weight-0 slots to one
+                                   # stable jit shape (1 = classic
+                                   # single-vertex queries)
     seed: int = 0                  # base PRNG seed for the Monte-Carlo
                                    # modes (mcfp); distinct per process so
                                    # replicas don't share MC noise
@@ -106,6 +139,12 @@ class BatchQueryEngine:
             raise ValueError(
                 f"unknown combine_path {self.config.combine_path!r}"
             )
+        if self.config.max_seeds > 1 and self.config.mode in ("mcfp", "pi"):
+            raise ValueError(
+                f"mode {self.config.mode!r} does not support seed-set "
+                "queries (max_seeds > 1): it is not linear in a start "
+                "vector the engine can combine"
+            )
         # base key is pure config (seed), so a rebuilt engine replays the
         # same MC noise; the stateful split below serves direct query_dense
         # calls, while run() folds chunk offsets for per-chunk determinism
@@ -129,8 +168,13 @@ class BatchQueryEngine:
         if cfg.frontier_k > 0:
             return min(cfg.frontier_k, n)
         mean_deg = self.graph.m / max(n, 1)
-        # log space: mean_deg ** t overflows float at absurd t; saturate at n
-        log_support = cfg.t_iterations * math.log(max(mean_deg, 1.0))
+        # log space: mean_deg ** t overflows float at absurd t; saturate at n.
+        # A seed-set query starts from up to max_seeds vertices, so its
+        # frontier support scales the single-vertex estimate by S_max.
+        log_support = (
+            cfg.t_iterations * math.log(max(mean_deg, 1.0))
+            + math.log(max(cfg.max_seeds, 1))
+        )
         if log_support >= math.log(max(n, 1)):
             support = float(n)
         else:
@@ -208,8 +252,16 @@ class BatchQueryEngine:
         :meth:`run` / ``PPRService.poll`` expect."""
         return max(1, min(self.config.top_k, self.graph.n))
 
-    def query_sparse(self, sources: jax.Array, out_k: Optional[int] = None):
-        """Sparse-path answers as a SparseFrontier (never builds [Q, n])."""
+    def query_sparse(
+        self,
+        sources: jax.Array,
+        out_k: Optional[int] = None,
+        weights: Optional[jax.Array] = None,
+    ):
+        """Sparse-path answers as a SparseFrontier (never builds [Q, n]).
+
+        ``weights f32[Q, S]`` switches ``sources`` to seed-set rows
+        ``int32[Q, S]`` (weights are normalized to sum 1 per row first)."""
         cfg = self.config
         if cfg.mode not in ("powerwalk", "verd"):
             raise ValueError(
@@ -217,36 +269,48 @@ class BatchQueryEngine:
                 "the VERD modes (powerwalk, verd) only"
             )
         index = self.index if cfg.mode == "powerwalk" else None
+        seed_w = None if weights is None else normalize_seed_weights(weights)
         return verd_mod.verd_query_sparse(
             self.graph, sources, index,
             t=cfg.t_iterations, k=self.frontier_k, c=cfg.c,
             threshold=cfg.threshold, out_k=out_k or self.effective_top_k,
             degree_cap=self.degree_cap(),
             hub_split_degree=cfg.hub_split_degree,
+            seed_weights=seed_w,
         )
 
     # -- dense answers -----------------------------------------------------
     def query_dense(
-        self, sources: jax.Array, *, key: Optional[jax.Array] = None
+        self,
+        sources: jax.Array,
+        *,
+        key: Optional[jax.Array] = None,
+        weights: Optional[jax.Array] = None,
     ) -> jax.Array:
         """Dense [Q, n] answers.  ``key`` overrides the Monte-Carlo stream
         of the ``mcfp`` mode (``run()`` passes a chunk-offset fold of the
         config seed so reruns are reproducible chunk by chunk); without it
-        the engine's stateful key advances."""
+        the engine's stateful key advances.  ``weights`` switches to
+        seed-set rows (linear modes only — mcfp/pi raise)."""
         cfg = self.config
         g = self.graph
+        seed_w = None if weights is None else normalize_seed_weights(weights)
+        if seed_w is not None and cfg.mode in ("mcfp", "pi"):
+            raise ValueError(
+                f"mode {cfg.mode!r} does not support seed-set queries"
+            )
         if cfg.mode == "powerwalk":
             return verd_mod.verd_query(
                 g, sources, self.index, t=cfg.t_iterations, c=cfg.c,
-                threshold=cfg.threshold,
+                threshold=cfg.threshold, seed_weights=seed_w,
             )
         if cfg.mode == "verd":
             return verd_mod.verd_query(
                 g, sources, None, t=cfg.t_iterations, c=cfg.c,
-                threshold=cfg.threshold,
+                threshold=cfg.threshold, seed_weights=seed_w,
             )
         if cfg.mode == "fppr":
-            return self.index.lookup_dense(sources)
+            return _fppr_lookup(self.index, sources, seed_w)
         if cfg.mode == "mcfp":
             if key is None:
                 self._key, key = jax.random.split(self._key)
@@ -259,14 +323,18 @@ class BatchQueryEngine:
 
     # -- top-k answers (the served product) ---------------------------------
     def query_topk(
-        self, sources: jax.Array, *, key: Optional[jax.Array] = None
+        self,
+        sources: jax.Array,
+        *,
+        key: Optional[jax.Array] = None,
+        weights: Optional[jax.Array] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         k = self.effective_top_k
         if self.uses_sparse_path():
-            sf = self.query_sparse(sources, out_k=k)
+            sf = self.query_sparse(sources, out_k=k, weights=weights)
             vals, idx = sf.values, sf.indices
         else:
-            dense = self.query_dense(sources, key=key)
+            dense = self.query_dense(sources, key=key, weights=weights)
             vals, idx = jax.lax.top_k(dense, k)
         # static-shape width contract (trace time): every route must hand
         # back exactly the clamped width the host buffers were sized for
@@ -284,7 +352,12 @@ class BatchQueryEngine:
         return jax.random.fold_in(self._base_key, seq)
 
     def query_topk_async(
-        self, sources: jax.Array, *, key: Optional[jax.Array] = None
+        self,
+        sources: jax.Array,
+        *,
+        key: Optional[jax.Array] = None,
+        weights: Optional[jax.Array] = None,
+        out: Optional[Tuple[jax.Array, jax.Array]] = None,
     ) -> Tuple[jax.Array, jax.Array]:
         """Top-k answers as *unmaterialized* device arrays.
 
@@ -298,18 +371,25 @@ class BatchQueryEngine:
         route/combine.  ``key`` seeds the ``mcfp`` mode (ignored elsewhere);
         default is the engine's base key — pass :meth:`dispatch_key` for
         distinct, replayable noise per dispatch.
+
+        ``weights f32[Q, S]`` switches ``sources`` to seed-set rows
+        ``int32[Q, S]``.  ``out = (vals f32[Q, k], idx int32[Q, k])``
+        optionally *donates* a pair of result buffers: the answer is written
+        into their device memory instead of a fresh allocation (the passed
+        arrays are consumed — use the returned ones), which is how the
+        serving pipeline's buffer ring avoids a per-dispatch allocation.
         """
         sources = jnp.asarray(sources, jnp.int32)
         q = int(sources.shape[0])
         cfg = self.config
         if key is None:
             key = self._base_key
+        if weights is not None and cfg.mode in ("mcfp", "pi"):
+            raise ValueError(
+                f"mode {cfg.mode!r} does not support seed-set queries"
+            )
         sparse_route = self.uses_sparse_path()
-        return _fused_topk(
-            self.graph,
-            self.index if cfg.mode in ("powerwalk", "fppr") else None,
-            sources,
-            key,
+        statics = dict(
             mode=cfg.mode,
             t=cfg.t_iterations,
             c=cfg.c,
@@ -323,25 +403,43 @@ class BatchQueryEngine:
             sparse_route=sparse_route,
             scatter_combine=self.uses_scatter_combine(q),
         )
+        index = self.index if cfg.mode in ("powerwalk", "fppr") else None
+        if out is None:
+            return _fused_topk(
+                self.graph, index, sources, key, weights, **statics
+            )
+        return _fused_topk_into(
+            self.graph, index, sources, key, out[0], out[1], weights,
+            **statics,
+        )
 
     # -- batched driver ------------------------------------------------------
-    def run(self, sources) -> dict:
+    def run(self, sources, weights=None) -> dict:
         """Execute a (possibly large) query set in max_batch chunks.
 
         Returns answers + timing; mirrors the paper's Table 3 measurements.
         The Monte-Carlo mode folds each chunk's offset into the config-seed
         key, so rerunning the same engine (or a rebuilt one with the same
-        seed) reproduces every chunk bit for bit.
+        seed) reproduces every chunk bit for bit.  ``weights f32[N, S]``
+        switches ``sources int32[N, S]`` to seed-set rows.
         """
         sources = np.asarray(sources, dtype=np.int32)
+        weights = (
+            None if weights is None else np.asarray(weights, dtype=np.float32)
+        )
         k = self.effective_top_k
         vals = np.zeros((len(sources), k), dtype=np.float32)
         idxs = np.zeros((len(sources), k), dtype=np.int32)
         start = time.perf_counter()
         for i in range(0, len(sources), self.config.max_batch):
             chunk = jnp.asarray(sources[i : i + self.config.max_batch])
+            w_chunk = (
+                None if weights is None
+                else jnp.asarray(weights[i : i + self.config.max_batch])
+            )
             v, ix = self.query_topk(
-                chunk, key=jax.random.fold_in(self._base_key, i)
+                chunk, key=jax.random.fold_in(self._base_key, i),
+                weights=w_chunk,
             )
             v.block_until_ready()
             vals[i : i + len(chunk)] = np.asarray(v)
@@ -365,19 +463,19 @@ class BatchQueryEngine:
 # graph/index pytrees and keyed only by the static route arguments.
 # ---------------------------------------------------------------------------
 
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "mode", "t", "c", "top_k", "r_online", "pi_iterations", "threshold",
-        "frontier_k", "degree_cap", "hub_split_degree", "sparse_route",
-        "scatter_combine",
-    ),
+_FUSED_STATICS = (
+    "mode", "t", "c", "top_k", "r_online", "pi_iterations", "threshold",
+    "frontier_k", "degree_cap", "hub_split_degree", "sparse_route",
+    "scatter_combine",
 )
-def _fused_topk(
+
+
+def _fused_topk_impl(
     graph: Graph,
     index: Optional[PPRIndex],
     sources: jax.Array,
     key: jax.Array,
+    weights: Optional[jax.Array],
     *,
     mode: str,
     t: int,
@@ -392,10 +490,12 @@ def _fused_topk(
     sparse_route: bool,
     scatter_combine: bool,
 ) -> Tuple[jax.Array, jax.Array]:
+    seed_w = None if weights is None else normalize_seed_weights(weights)
     if sparse_route:
         if scatter_combine and mode == "powerwalk":
             s, f = verd_mod.verd_iterate_sparse(
-                graph, sources, t=t, k=frontier_k, c=c, threshold=threshold,
+                graph, sources, seed_w,
+                t=t, k=frontier_k, c=c, threshold=threshold,
                 degree_cap=degree_cap, hub_split_degree=hub_split_degree,
             )
             vals, idx = verd_mod.combine_with_index_scatter(
@@ -406,16 +506,17 @@ def _fused_topk(
                 graph, sources, index if mode == "powerwalk" else None,
                 t=t, k=frontier_k, c=c, threshold=threshold, out_k=top_k,
                 degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+                seed_weights=seed_w,
             )
             vals, idx = sf.values, sf.indices
     else:
         if mode in ("powerwalk", "verd"):
             dense = verd_mod.verd_query(
                 graph, sources, index if mode == "powerwalk" else None,
-                t=t, c=c, threshold=threshold,
+                t=t, c=c, threshold=threshold, seed_weights=seed_w,
             )
         elif mode == "fppr":
-            dense = index.lookup_dense(sources)
+            dense = _fppr_lookup(index, sources, seed_w)
         elif mode == "mcfp":
             dense = mcfp_mod.estimate_ppr(graph, sources, r_online, key, c=c)
         elif mode == "pi":
@@ -429,3 +530,39 @@ def _fused_topk(
         vals.shape, idx.shape, top_k,
     )
     return vals, idx
+
+
+@functools.partial(jax.jit, static_argnames=_FUSED_STATICS)
+def _fused_topk(
+    graph: Graph,
+    index: Optional[PPRIndex],
+    sources: jax.Array,
+    key: jax.Array,
+    weights: Optional[jax.Array] = None,
+    **statics,
+) -> Tuple[jax.Array, jax.Array]:
+    return _fused_topk_impl(graph, index, sources, key, weights, **statics)
+
+
+@functools.partial(
+    jax.jit, static_argnames=_FUSED_STATICS, donate_argnums=(4, 5)
+)
+def _fused_topk_into(
+    graph: Graph,
+    index: Optional[PPRIndex],
+    sources: jax.Array,
+    key: jax.Array,
+    out_v: jax.Array,
+    out_i: jax.Array,
+    weights: Optional[jax.Array] = None,
+    **statics,
+) -> Tuple[jax.Array, jax.Array]:
+    """:func:`_fused_topk` writing into *donated* result buffers.
+
+    ``out_v``/``out_i`` (f32/int32 ``[Q, top_k]``) are donated to XLA: the
+    answer lands in their device memory, so a steady-state serving loop that
+    rings a fixed pool of buffers through dispatch -> harvest -> redispatch
+    performs no per-dispatch result allocation at all.
+    """
+    vals, idx = _fused_topk_impl(graph, index, sources, key, weights, **statics)
+    return out_v.at[:].set(vals), out_i.at[:].set(idx.astype(jnp.int32))

@@ -27,15 +27,62 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import frontier
-from repro.core.graph import Graph, transition_with_dangling
+from repro.core.graph import (Graph, transition_with_dangling,
+                              transition_with_dangling_seeds)
 from repro.core.index import PPRIndex
 from repro.core.walks import DEFAULT_C
+
+
+# ---------------------------------------------------------------------------
+# Weighted seed sets.  VERD is linear in its start vector, so a *seed-set*
+# query (the shape real PPR consumers issue: personalize over a weighted set
+# of vertices, not one source) is the same iterate seeded with a weighted
+# one-hot row instead of a single 1.0.  Everywhere below, ``sources`` may be
+#
+# * ``int32[Q]``            — the classic single-vertex batch (weights None),
+# * ``int32[Q, S]`` + ``seed_weights f32[Q, S]`` — one weighted seed set per
+#   query row, padded to a stable width ``S`` with weight-0 slots.
+#
+# Dangling convention: a single-vertex query returns dangling mass to its
+# source (paper Section 2.1); a seed-set query returns it to the query's
+# *normalized seed distribution* (restart-vector semantics).  On supports
+# that reach no dangling vertex the seed-set answer is exactly the weighted
+# sum of the single-vertex answers (the linearity the serving cache relies
+# on); with dangling flow the two differ only in where the reclaimed mass
+# restarts, bounded by the per-seed dangling-mass variation.
+# ---------------------------------------------------------------------------
+
+def dangling_seed_candidates(
+    dm: jax.Array,
+    sources: jax.Array,
+    seed_weights: Optional[jax.Array],
+    *,
+    c: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Sparse candidates returning dangling mass ``dm f32[Q]`` to the seeds.
+
+    Single-vertex (``seed_weights is None``): one ``(1-c)*dm`` candidate at
+    each query's source — the historical last slot.  Seed sets: ``S``
+    candidates splitting ``(1-c)*dm`` proportionally to the normalized
+    weights (weight-0 pad slots emit weight-0 candidates, which compact
+    away).  Shared by every sparse push so the one-shot and streamed paths
+    stay bit-identical.
+    """
+    if seed_weights is None:
+        return (
+            (1.0 - c) * dm[:, None],
+            sources.reshape(-1, 1).astype(jnp.int32),
+        )
+    wsum = jnp.maximum(jnp.sum(seed_weights, axis=1, keepdims=True), 1e-30)
+    share = dm[:, None] * (seed_weights / wsum)
+    return (1.0 - c) * share, sources.astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("t", "c", "threshold"))
 def verd_iterate(
     graph: Graph,
     sources: jax.Array,
+    seed_weights: Optional[jax.Array] = None,
     *,
     t: int,
     c: float = DEFAULT_C,
@@ -45,17 +92,29 @@ def verd_iterate(
 
     Returns ``(s, f)``, both ``f32[Q, n]``.  ``threshold`` optionally drops
     tiny frontier entries (the paper's epsilon sparsification) — exactness
-    tests use 0.0.
+    tests use 0.0.  With ``seed_weights`` (see the seed-set note above),
+    ``sources int32[Q, S]`` seeds each row with its weighted one-hot
+    combination and dangling mass restarts at the seed distribution.
     """
     q = sources.shape[0]
-    f = jnp.zeros((q, graph.n), dtype=jnp.float32)
-    f = f.at[jnp.arange(q), sources].set(1.0)
+    if seed_weights is None:
+        f = jnp.zeros((q, graph.n), dtype=jnp.float32)
+        f = f.at[jnp.arange(q), sources].set(1.0)
+    else:
+        # .add, not .set: duplicate seeds within a row sum their weights
+        f = jnp.zeros((q, graph.n), dtype=jnp.float32)
+        f = f.at[jnp.arange(q)[:, None], sources].add(seed_weights)
     s = jnp.zeros_like(f)
 
     def body(carry, _):
         s, f = carry
         s = s + c * f
-        f = (1.0 - c) * transition_with_dangling(graph, f, sources)
+        if seed_weights is None:
+            f = (1.0 - c) * transition_with_dangling(graph, f, sources)
+        else:
+            f = (1.0 - c) * transition_with_dangling_seeds(
+                graph, f, sources, seed_weights
+            )
         if threshold > 0.0:
             f = jnp.where(f >= threshold, f, 0.0)
         return (s, f), ()
@@ -110,10 +169,14 @@ def verd_query(
     t: int,
     c: float = DEFAULT_C,
     threshold: float = 0.0,
+    seed_weights: Optional[jax.Array] = None,
 ) -> jax.Array:
     """Full online query: iterate then combine (index=None -> return s,
-    the paper's R=0 mode)."""
-    s, f = verd_iterate(graph, sources, t=t, c=c, threshold=threshold)
+    the paper's R=0 mode).  ``seed_weights`` switches ``sources`` to
+    weighted seed-set rows (see the seed-set note at the top)."""
+    s, f = verd_iterate(
+        graph, sources, seed_weights, t=t, c=c, threshold=threshold
+    )
     if index is None:
         return s
     return combine_with_index(s, f, index)
@@ -266,6 +329,7 @@ def gather_push_candidates(
     c: float,
     degree_cap: int,
     hub_split_degree: int = 0,
+    seed_weights: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """Array-level gather push shared by the core op and the Pallas kernel
     body (``kernels/frontier_push.py``); see :func:`sparse_push_candidates`
@@ -277,10 +341,9 @@ def gather_push_candidates(
         c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
     dm = jnp.sum(jnp.where(deg == 0, fv, 0.0), axis=1)  # dangling mass [Q]
-    cand_v = jnp.concatenate([push_v, (1.0 - c) * dm[:, None]], axis=1)
-    cand_i = jnp.concatenate(
-        [nbrs, sources.reshape(-1, 1).astype(jnp.int32)], axis=1
-    )
+    dang_v, dang_i = dangling_seed_candidates(dm, sources, seed_weights, c=c)
+    cand_v = jnp.concatenate([push_v, dang_v], axis=1)
+    cand_i = jnp.concatenate([nbrs, dang_i], axis=1)
     return cand_v, cand_i
 
 
@@ -293,15 +356,19 @@ def sparse_push_candidates(
     c: float = DEFAULT_C,
     degree_cap: int,
     hub_split_degree: int = 0,
+    seed_weights: Optional[jax.Array] = None,
 ) -> Tuple[jax.Array, jax.Array]:
     """One VERD push ``(1-c) * f @ A`` in sparse form, uncompacted.
 
     For each frontier slot ``(q, j)`` holding mass ``fv`` at vertex ``fi``,
     gathers up to ``degree_cap`` out-edges from CSR and emits one candidate
-    per edge; dangling mass returns to each query's source (last slot).
-    Returns ``(cand_v, cand_i)`` of width ``K * degree_cap + 1`` (``K * s *
-    h + 1`` with hub splitting, see :func:`gather_push_edges`) — callers
-    dedup + top-K compact (``frontier.compact``).
+    per edge; dangling mass returns to each query's source (last slot) —
+    or, with ``seed_weights``, to the query's weighted seed set (last ``S``
+    slots, :func:`dangling_seed_candidates`).
+    Returns ``(cand_v, cand_i)`` of width ``K * degree_cap + 1`` (``+ S``
+    for seed sets; ``K * s * h`` with hub splitting, see
+    :func:`gather_push_edges`) — callers dedup + top-K compact
+    (``frontier.compact``).
 
     ``degree_cap`` below the max out-degree of any *frontier* vertex drops
     the tail edges of that vertex (mass ``fv * (deg - cap) / deg``); with
@@ -309,15 +376,13 @@ def sparse_push_candidates(
     changes only the gather geometry (hub rows split across sub-slots), not
     the pushed mass.
     """
-    if graph.m == 0:  # every vertex dangling: all mass returns to source
+    if graph.m == 0:  # every vertex dangling: all mass returns to the seeds
         dm = jnp.sum(fv, axis=1)
-        return (
-            (1.0 - c) * dm[:, None],
-            sources.reshape(-1, 1).astype(jnp.int32),
-        )
+        return dangling_seed_candidates(dm, sources, seed_weights, c=c)
     return gather_push_candidates(
         fv, fi, sources, graph.row_ptr, graph.out_deg, graph.col_idx,
         c=c, degree_cap=degree_cap, hub_split_degree=hub_split_degree,
+        seed_weights=seed_weights,
     )
 
 
@@ -333,6 +398,7 @@ def sparse_push_compact(
     hub_split_degree: int = 0,
     threshold: float = 0.0,
     stream_width: int = 0,
+    seed_weights: Optional[jax.Array] = None,
 ) -> frontier.SparseFrontier:
     """One VERD push + compaction with bounded live candidate width.
 
@@ -354,9 +420,13 @@ def sparse_push_compact(
     """
     q, k = fv.shape
     m = graph.m
-    if m == 0:  # all-dangling: one candidate per row, nothing to stream
+    # seed-set queries emit S dangling candidates instead of 1 (see
+    # dangling_seed_candidates) — the one-shot width grows accordingly
+    s_width = 1 if seed_weights is None else int(seed_weights.shape[1])
+    if m == 0:  # all-dangling: S candidates per row, nothing to stream
         cv, ci = sparse_push_candidates(
-            graph, fv, fi, sources, c=c, degree_cap=degree_cap
+            graph, fv, fi, sources, c=c, degree_cap=degree_cap,
+            seed_weights=seed_weights,
         )
         return frontier.compact(
             cv, ci, min(k_out, cv.shape[1]), graph.n, threshold=threshold
@@ -364,14 +434,14 @@ def sparse_push_compact(
     cap = min(degree_cap, max(m, 1))
     h, s = resolve_hub_splits(cap, hub_split_degree)
     slot_w = s * h
-    out_w = min(k_out, k * slot_w + 1)   # same width as the one-shot path
+    out_w = min(k_out, k * slot_w + s_width)  # same width as one-shot path
     target = stream_width if stream_width > 0 else max(
         4 * out_w, slot_w, 4096
     )
-    if k * slot_w + 1 <= 2 * target:     # narrow enough: one-shot gather
+    if k * slot_w + s_width <= 2 * target:    # narrow enough: one-shot
         cv, ci = sparse_push_candidates(
             graph, fv, fi, sources, c=c, degree_cap=degree_cap,
-            hub_split_degree=hub_split_degree,
+            hub_split_degree=hub_split_degree, seed_weights=seed_weights,
         )
         return frontier.compact(cv, ci, out_w, graph.n, threshold=threshold)
     slots = max(1, target // slot_w)
@@ -384,12 +454,11 @@ def sparse_push_compact(
     deg = jnp.take(graph.out_deg, fi_p)
     n_chunks = (k + pad) // slots
     chunk = lambda x: x.reshape(q, n_chunks, slots).transpose(1, 0, 2)
-    # dangling mass seeds the running state (the one-shot path's last slot)
+    # dangling mass seeds the running state (the one-shot path's last
+    # slot(s)); duplicate seed candidates dedup-merge on the first fold
     dm = jnp.sum(jnp.where(deg == 0, fv_p, 0.0), axis=1)
-    run_v, run_i = frontier.topk_compact(
-        (1.0 - c) * dm[:, None], sources.reshape(-1, 1).astype(jnp.int32),
-        out_w,
-    )
+    dang_v, dang_i = dangling_seed_candidates(dm, sources, seed_weights, c=c)
+    run_v, run_i = frontier.topk_compact(dang_v, dang_i, out_w)
 
     def fold(carry, xs):
         rv, ri = carry
@@ -424,6 +493,7 @@ def sparse_push_compact(
 def _verd_iterate_sparse(
     graph: Graph,
     sources: jax.Array,
+    seed_weights: Optional[jax.Array] = None,
     *,
     t: int,
     k: int,
@@ -433,7 +503,10 @@ def _verd_iterate_sparse(
     hub_split_degree: int,
 ) -> Tuple[frontier.SparseFrontier, frontier.SparseFrontier]:
     q = sources.shape[0]
-    f = frontier.from_sources(sources, graph.n)
+    if seed_weights is None:
+        f = frontier.from_sources(sources, graph.n)
+    else:
+        f = frontier.from_seed_sets(sources, seed_weights, graph.n)
     s_vals, s_idxs = [], []
     for _ in range(t):
         s_vals.append(c * f.values)
@@ -441,7 +514,7 @@ def _verd_iterate_sparse(
         f = sparse_push_compact(
             graph, f.values, f.indices, sources, c=c, k_out=k,
             degree_cap=degree_cap, hub_split_degree=hub_split_degree,
-            threshold=threshold,
+            threshold=threshold, seed_weights=seed_weights,
         )
     if s_vals:
         sv = jnp.concatenate(s_vals, axis=1)
@@ -459,6 +532,7 @@ def _verd_iterate_sparse(
 def verd_iterate_sparse(
     graph: Graph,
     sources: jax.Array,
+    seed_weights: Optional[jax.Array] = None,
     *,
     t: int,
     k: int,
@@ -481,12 +555,15 @@ def verd_iterate_sparse(
 
     Returns ``(s, f)`` as :class:`~repro.core.frontier.SparseFrontier`; the
     accumulated ``s`` keeps its natural (un-truncated) width ``<= 1 +
-    (t-1)*k``.
+    (t-1)*k``.  ``seed_weights`` switches ``sources`` to weighted seed-set
+    rows ``int32[Q, S]`` (see the seed-set note at the top): the initial
+    frontier is the width-``S`` weighted seed frontier and dangling mass
+    restarts at the seed distribution.
     """
     if degree_cap is None:
         degree_cap = resolve_degree_cap(graph)
     return _verd_iterate_sparse(
-        graph, sources, t=t, k=k, c=c, threshold=threshold,
+        graph, sources, seed_weights, t=t, k=k, c=c, threshold=threshold,
         degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
 
@@ -602,13 +679,15 @@ def verd_query_sparse(
     out_k: Optional[int] = None,
     degree_cap: Optional[int] = None,
     hub_split_degree: int = 0,
+    seed_weights: Optional[jax.Array] = None,
 ) -> frontier.SparseFrontier:
     """Full online query on the sparse path; answers come back as a
     :class:`~repro.core.frontier.SparseFrontier` of width ``out_k`` with
     entries sorted descending — exactly the served top-k shape, no ``[Q, n]``
-    materialization anywhere."""
+    materialization anywhere.  ``seed_weights`` switches ``sources`` to
+    weighted seed-set rows (see the seed-set note at the top)."""
     s, f = verd_iterate_sparse(
-        graph, sources, t=t, k=k, c=c, threshold=threshold,
+        graph, sources, seed_weights, t=t, k=k, c=c, threshold=threshold,
         degree_cap=degree_cap, hub_split_degree=hub_split_degree,
     )
     if index is None:

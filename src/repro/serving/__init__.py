@@ -1,5 +1,10 @@
 """Serving: request batching + the async pipelined online PPR service."""
 
+from repro.serving.cache import (  # noqa: F401
+    AnswerCache, CacheConfig, canonicalize_seed_set,
+)
 from repro.serving.engine import Answer, PPRService, ServiceConfig  # noqa: F401
-from repro.serving.loadgen import run_closed_loop, run_open_loop  # noqa: F401
+from repro.serving.loadgen import (  # noqa: F401
+    run_closed_loop, run_open_loop, zipf_seed_workload,
+)
 from repro.serving.pipeline import PipelineConfig, ServingPipeline  # noqa: F401

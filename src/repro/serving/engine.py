@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -25,6 +25,7 @@ from repro.core.graph import Graph
 from repro.core.index import PPRIndex
 from repro.core.query import BatchQueryEngine, QueryConfig
 from repro.serving.batching import BatchingConfig, RequestBuffer
+from repro.serving.cache import AnswerCache, CacheConfig, canonicalize_seed_set
 from repro.serving.pipeline import CompletedBatch, PipelineConfig, ServingPipeline
 
 
@@ -33,6 +34,7 @@ class ServiceConfig:
     query: QueryConfig = dataclasses.field(default_factory=QueryConfig)
     batching: BatchingConfig = dataclasses.field(default_factory=BatchingConfig)
     pipeline: PipelineConfig = dataclasses.field(default_factory=PipelineConfig)
+    cache: CacheConfig = dataclasses.field(default_factory=CacheConfig)
 
 
 @dataclasses.dataclass
@@ -43,6 +45,7 @@ class Answer:
     top_scores: np.ndarray
     latency_s: float
     tier: str = "interactive"
+    cached: bool = False          # served from the answer cache (no dispatch)
 
 
 class PPRService:
@@ -82,13 +85,71 @@ class PPRService:
         )
         self.stats: Dict[str, float] = dict(
             served=0, batches=0, total_latency=0.0, max_latency=0.0,
-            pad_rows=0, first_batch_service_s=0.0,
+            pad_rows=0, first_batch_service_s=0.0, cache_served=0,
         )
+        # answer cache (serving/cache.py): consulted at submit, filled at
+        # absorb.  _pending_cached holds hit answers awaiting the next
+        # poll(); _inflight_keys maps computed requests back to their
+        # canonical key so their answers populate the cache.
+        self.cache = AnswerCache(self.cfg.cache)
+        self._pending_cached: List[Tuple[int, int, str, float, Tuple]] = []
+        self._inflight_keys: Dict[int, Tuple] = {}
 
     # -- client API ----------------------------------------------------------
-    def submit(self, vertex: int, tier: str = "interactive",
-               arrival: Optional[float] = None) -> int:
-        return self.buffer.submit(vertex, tier=tier, arrival=arrival)
+    def submit(self, vertex: Optional[int] = None, tier: str = "interactive",
+               arrival: Optional[float] = None,
+               seeds: Optional[Sequence[int]] = None,
+               weights: Optional[Sequence[float]] = None) -> int:
+        """Enqueue a query: a single ``vertex`` or a weighted seed set
+        (``seeds``/``weights``, uniform when weights omitted; at most
+        ``query.max_seeds`` seeds).  With the answer cache enabled, a
+        request whose canonical seed set is cached never reaches the
+        request buffer — its answer is delivered by the next ``poll()``.
+        """
+        if seeds is not None:
+            s_arr = np.asarray(seeds, dtype=np.int64).reshape(-1)
+            if s_arr.size > self.cfg.query.max_seeds:
+                raise ValueError(
+                    f"seed set of {s_arr.size} exceeds "
+                    f"query.max_seeds={self.cfg.query.max_seeds}"
+                )
+        if self.cache.enabled:
+            key = canonicalize_seed_set(
+                [vertex] if seeds is None else seeds,
+                None if seeds is None else weights,
+                weight_quantum=self.cfg.cache.weight_quantum,
+            )
+            if key[0]:  # non-degenerate seed set: cacheable
+                primary = (
+                    int(vertex) if seeds is None
+                    else int(np.asarray(seeds).reshape(-1)[0])
+                )
+                hit = self.cache.get(key)
+                if hit is not None:
+                    rid = self.buffer.allocate_id()
+                    t = self.clock() if arrival is None else arrival
+                    self._pending_cached.append((rid, primary, tier, t, hit))
+                    return rid
+                # miss: dispatch the *canonical* spelling (sorted seeds,
+                # quantized normalized weights) — every spelling of this
+                # key then computes byte-identical answers, so the cached
+                # answer is exact for all of them, not just the first
+                quantum = self.cfg.cache.weight_quantum
+                rid = self.buffer.submit(
+                    primary, tier=tier, arrival=arrival,
+                    seeds=list(key[0]),
+                    weights=[q * quantum for q in key[1]],
+                )
+                self._inflight_keys[rid] = key
+                return rid
+        return self.buffer.submit(
+            vertex, tier=tier, arrival=arrival, seeds=seeds, weights=weights
+        )
+
+    def invalidate(self, vertices: Iterable[int]) -> int:
+        """Drop cached answers whose seed sets touch ``vertices`` (the hook
+        an index/graph update calls); returns entries removed."""
+        return self.cache.invalidate(vertices)
 
     @property
     def in_flight(self) -> int:
@@ -101,11 +162,13 @@ class PPRService:
         regardless of deadlines) and harvests finished ones.  At
         ``pipeline.depth=1`` — or with ``force`` — the harvest blocks, so
         every dispatched batch's answers come back from the same call,
-        matching the pre-pipeline blocking ``poll()``.
+        matching the pre-pipeline blocking ``poll()``.  Cache-hit answers
+        pending since ``submit`` are always delivered, pipeline or not.
         """
+        cached = self._drain_cached()
         if (not len(self.buffer) or not (self.buffer.ready() or force)) \
                 and not self.pipeline.in_flight:
-            return []
+            return cached
         drain = force or self.cfg.pipeline.depth <= 1
         completed = self.pipeline.dispatch(force=force)
         completed.extend(self.pipeline.harvest(drain=drain))
@@ -115,9 +178,27 @@ class PPRService:
         if more or (drain and self.pipeline.in_flight):
             completed.extend(more)
             completed.extend(self.pipeline.harvest(drain=drain))
-        return self._absorb(completed)
+        return cached + self._absorb(completed)
 
     # -- bookkeeping ---------------------------------------------------------
+    def _drain_cached(self) -> List[Answer]:
+        """Materialize answers for cache hits recorded at submit time.
+        Latency runs from the (possibly backdated) arrival to *now* — a hit
+        still pays its queueing delay in the metrics, it just skips the
+        device."""
+        if not self._pending_cached:
+            return []
+        out: List[Answer] = []
+        now = self.clock()
+        for rid, vertex, tier, arrival, (tv, ts) in self._pending_cached:
+            lat = now - arrival
+            out.append(Answer(rid, vertex, tv, ts, lat, tier, cached=True))
+            self.stats["served"] += 1
+            self.stats["cache_served"] += 1
+            self.stats["total_latency"] += lat
+            self.stats["max_latency"] = max(self.stats["max_latency"], lat)
+        self._pending_cached.clear()
+        return out
     def _absorb(self, completed: List[CompletedBatch]) -> List[Answer]:
         out: List[Answer] = []
         for batch in completed:
@@ -136,6 +217,9 @@ class PPRService:
                     r.request_id, r.vertex, batch.indices[i],
                     batch.values[i], lat, r.tier,
                 ))
+                key = self._inflight_keys.pop(r.request_id, None)
+                if key is not None:
+                    self.cache.put(key, batch.indices[i], batch.values[i])
                 self.stats["served"] += 1
                 self.stats["total_latency"] += lat
                 self.stats["max_latency"] = max(self.stats["max_latency"], lat)
@@ -148,6 +232,8 @@ class PPRService:
         for k in self.pipeline.stats:
             self.pipeline.stats[k] = 0
         self.pipeline.batch_hist.clear()
+        for k in self.cache.stats:  # counters only; cached entries persist
+            self.cache.stats[k] = 0
 
     def snapshot_stats(self) -> dict:
         """Service + pipeline telemetry as one flat dict (JSON-safe)."""
@@ -167,7 +253,16 @@ class PPRService:
             int(k): int(v) for k, v in sorted(self.pipeline.batch_hist.items())
         }
         s["mean_latency"] = s["total_latency"] / max(s["served"], 1)
-        s["pad_fraction"] = s["pad_rows"] / max(s["served"] + s["pad_rows"], 1)
+        # pad_fraction is a *batch* occupancy metric: cache-served answers
+        # never occupied a batch row, so they stay out of the denominator
+        computed = s["served"] - s["cache_served"]
+        s["pad_fraction"] = s["pad_rows"] / max(computed + s["pad_rows"], 1)
+        s.update({f"cache_{k}": v for k, v in self.cache.stats.items()})
+        s["cache_size"] = len(self.cache)
+        s["cache_capacity"] = self.cfg.cache.capacity
+        s["cache_hit_rate"] = self.cache.stats["hits"] / max(
+            self.cache.stats["hits"] + self.cache.stats["misses"], 1
+        )
         return s
 
     def run_closed_loop(self, vertices: Sequence[int]) -> Tuple[List[Answer], dict]:

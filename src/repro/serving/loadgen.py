@@ -21,12 +21,76 @@ from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-# a workload item is a vertex or an explicit (vertex, tier) pair
-WorkItem = Union[int, Tuple[int, str]]
+# a workload item is a vertex, an explicit (vertex, tier) pair, or a
+# seed-set dict: {"seeds": [...], "weights": [...], "tier": "..."}
+# (weights/tier optional — uniform weights, interactive tier)
+WorkItem = Union[int, Tuple[int, str], dict]
 
 
 def _percentile(xs: List[float], p: float) -> float:
     return float(np.percentile(np.asarray(xs, np.float64), p)) if xs else 0.0
+
+
+def _submit(service, item: WorkItem, arrival: Optional[float] = None) -> None:
+    """Submit one work item of any spelling."""
+    if isinstance(item, dict):
+        service.submit(
+            tier=item.get("tier", "interactive"), arrival=arrival,
+            seeds=item["seeds"], weights=item.get("weights"),
+        )
+        return
+    v, tier = item if isinstance(item, tuple) else (item, "interactive")
+    service.submit(v, tier=tier, arrival=arrival)
+
+
+def zipf_seed_workload(
+    n_vertices: int,
+    n_requests: int,
+    *,
+    skew: float = 1.1,
+    max_seeds: int = 4,
+    pool: int = 1024,
+    singles_fraction: float = 0.0,
+    tier: str = "interactive",
+    seed: int = 0,
+) -> List[WorkItem]:
+    """Zipf-skewed hot-seed traffic: the cache benchmark's arrival stream.
+
+    Draws a ``pool`` of distinct weighted seed sets once, then samples each
+    request's set from a Zipf(``skew``) rank distribution over the pool —
+    the classic hot-key shape of real personalization traffic (a few hot
+    users/communities dominate), which is what gives an answer cache
+    something to hit.  Repeated picks are spelled with *permuted* seeds and
+    *rescaled* weights, so cache hit rate exercises canonicalization, not
+    memcmp.  ``singles_fraction`` of requests degrade to plain single-vertex
+    items (the set's primary seed) for mixed single/seed-set traffic.
+    """
+    rng = np.random.default_rng(seed)
+    pool = max(1, pool)
+    sizes = rng.integers(1, max_seeds + 1, pool)
+    pool_seeds = [
+        rng.integers(0, n_vertices, int(sz)).tolist() for sz in sizes
+    ]
+    pool_weights = [
+        (rng.random(int(sz)) + 0.1).tolist() for sz in sizes
+    ]
+    ranks = np.arange(1, pool + 1, dtype=np.float64) ** (-skew)
+    picks = rng.choice(pool, size=n_requests, p=ranks / ranks.sum())
+    items: List[WorkItem] = []
+    for j in picks:
+        s = pool_seeds[j]
+        w = pool_weights[j]
+        if singles_fraction > 0 and rng.random() < singles_fraction:
+            items.append(int(s[0]))
+            continue
+        perm = rng.permutation(len(s))
+        scale = float(rng.uniform(0.5, 2.0))
+        items.append(dict(
+            seeds=[s[i] for i in perm],
+            weights=[w[i] * scale for i in perm],
+            tier=tier,
+        ))
+    return items
 
 
 def run_open_loop(
@@ -64,14 +128,10 @@ def run_open_loop(
             # the service falls behind, due requests land in its queue as a
             # group (and batch up) instead of trickling one per poll
             while i < len(vertices) and t0 + i / qps <= now:
-                item = vertices[i]
-                v, tier = item if isinstance(item, tuple) else (item, "interactive")
-                service.submit(v, tier=tier, arrival=t0 + i / qps)
+                _submit(service, vertices[i], arrival=t0 + i / qps)
                 i += 1
         else:
-            item = vertices[i]
-            v, tier = item if isinstance(item, tuple) else (item, "interactive")
-            service.submit(v, tier=tier)
+            _submit(service, vertices[i])
             i += 1
         answers.extend(service.poll())
     answers.extend(service.poll(force=True))

@@ -1,0 +1,296 @@
+"""Answer-cache suite: seed-set canonicalization, LRU/invalidation
+mechanics, and the service integration contract — cached answers are
+byte-identical to uncached ones because a cache miss dispatches the
+*canonical* spelling (serving/engine.py), so every spelling of a key
+computes the same bytes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.index import PPRIndex
+from repro.core.query import QueryConfig
+from repro.graphs import synthetic
+from repro.serving import PPRService, ServiceConfig, zipf_seed_workload
+from repro.serving.batching import BatchingConfig
+from repro.serving.cache import AnswerCache, CacheConfig, canonicalize_seed_set
+from repro.serving.pipeline import PipelineConfig
+
+
+# ---------------------------------------------------------------------------
+# canonicalization
+# ---------------------------------------------------------------------------
+
+def test_canonical_key_sorts_by_vertex():
+    key = canonicalize_seed_set([9, 3, 7], [0.2, 0.5, 0.3])
+    assert key[0] == (3, 7, 9)
+    assert len(key[1]) == 3
+
+
+def test_permutation_invariance():
+    a = canonicalize_seed_set([1, 2, 3], [0.1, 0.2, 0.7])
+    b = canonicalize_seed_set([3, 1, 2], [0.7, 0.1, 0.2])
+    assert a == b
+
+
+def test_rescale_invariance():
+    a = canonicalize_seed_set([4, 8], [1.0, 3.0])
+    b = canonicalize_seed_set([4, 8], [2.5, 7.5])
+    assert a == b
+
+
+def test_duplicate_seeds_dedup_sum():
+    # [a, a, b] with weights (1, 1, 2) is the distribution {a: 2, b: 2}
+    a = canonicalize_seed_set([5, 5, 6], [1.0, 1.0, 2.0])
+    b = canonicalize_seed_set([5, 6], [2.0, 2.0])
+    assert a == b
+    assert a[0] == (5, 6)
+    # equal quantized weights after normalization
+    assert a[1][0] == a[1][1]
+
+
+def test_uniform_default_and_zero_slots():
+    # weights=None means uniform; weight-0 slots are pad, dropped
+    assert canonicalize_seed_set([3, 1]) == canonicalize_seed_set(
+        [1, 3], [5.0, 5.0])
+    assert canonicalize_seed_set([1, 2, 0], [0.5, 0.5, 0.0]) == \
+        canonicalize_seed_set([1, 2], [1.0, 1.0])
+
+
+def test_empty_and_all_zero_map_to_empty_key():
+    assert canonicalize_seed_set([]) == ((), ())
+    assert canonicalize_seed_set([1, 2], [0.0, 0.0]) == ((), ())
+
+
+def test_quantization_merges_near_identical_weights():
+    a = canonicalize_seed_set([1, 2], [0.5, 0.5], weight_quantum=1e-4)
+    b = canonicalize_seed_set([1, 2], [0.500004, 0.499996],
+                              weight_quantum=1e-4)
+    assert a == b
+    c = canonicalize_seed_set([1, 2], [0.51, 0.49], weight_quantum=1e-4)
+    assert a != c
+
+
+def test_single_vertex_key():
+    assert canonicalize_seed_set([7]) == ((7,), (10000,))  # 1.0 / 1e-4
+
+
+def test_shape_mismatch_raises():
+    with pytest.raises(ValueError):
+        canonicalize_seed_set([1, 2], [1.0])
+
+
+# ---------------------------------------------------------------------------
+# AnswerCache mechanics
+# ---------------------------------------------------------------------------
+
+def _ans(tag):
+    return (np.full(4, tag, np.int32), np.full(4, float(tag), np.float32))
+
+
+def _key(*verts):
+    return canonicalize_seed_set(list(verts))
+
+
+def test_lru_eviction_order():
+    c = AnswerCache(CacheConfig(capacity=2))
+    c.put(_key(1), *_ans(1))
+    c.put(_key(2), *_ans(2))
+    assert c.get(_key(1)) is not None         # freshen 1: LRU is now 2
+    c.put(_key(3), *_ans(3))                  # evicts 2, not 1
+    assert c.get(_key(2)) is None
+    assert c.get(_key(1)) is not None
+    assert c.get(_key(3)) is not None
+    assert c.stats["evictions"] == 1
+    assert len(c) == 2
+
+
+def test_stats_counters():
+    c = AnswerCache(CacheConfig(capacity=4))
+    assert c.get(_key(1)) is None
+    c.put(_key(1), *_ans(1))
+    assert c.get(_key(1)) is not None
+    assert c.stats == dict(hits=1, misses=1, evictions=0, invalidated=0)
+
+
+def test_put_copies_arrays():
+    c = AnswerCache(CacheConfig(capacity=2))
+    idx, vals = _ans(1)
+    c.put(_key(1), idx, vals)
+    idx[:] = -1                               # mutate the caller's buffer
+    vals[:] = -1.0
+    got_i, got_v = c.get(_key(1))
+    np.testing.assert_array_equal(got_i, np.full(4, 1, np.int32))
+    np.testing.assert_array_equal(got_v, np.full(4, 1.0, np.float32))
+
+
+def test_invalidate_exactly_touched_entries():
+    c = AnswerCache(CacheConfig(capacity=8))
+    c.put(_key(1, 2), *_ans(1))
+    c.put(_key(2, 3), *_ans(2))
+    c.put(_key(4, 5), *_ans(3))
+    assert c.invalidate([2]) == 2             # both entries containing 2
+    assert c.get(_key(1, 2)) is None
+    assert c.get(_key(2, 3)) is None
+    assert c.get(_key(4, 5)) is not None      # untouched entry survives
+    assert c.stats["invalidated"] == 2
+    # the reverse index was cleaned up: re-invalidating removes nothing
+    assert c.invalidate([1, 2, 3]) == 0
+
+
+def test_invalidate_then_reinsert():
+    c = AnswerCache(CacheConfig(capacity=8))
+    c.put(_key(1, 2), *_ans(1))
+    c.invalidate([1])
+    c.put(_key(1, 2), *_ans(9))
+    got_i, _ = c.get(_key(1, 2))
+    assert got_i[0] == 9
+
+
+def test_eviction_unindexes():
+    c = AnswerCache(CacheConfig(capacity=1))
+    c.put(_key(1), *_ans(1))
+    c.put(_key(2), *_ans(2))                  # evicts key(1)
+    assert c.invalidate([1]) == 0             # stale index entry is gone
+
+
+def test_disabled_cache_is_inert():
+    c = AnswerCache(CacheConfig(capacity=0))
+    assert not c.enabled
+    c.put(_key(1), *_ans(1))
+    assert c.get(_key(1)) is None
+    assert len(c) == 0
+    assert c.stats["misses"] == 0             # disabled get doesn't count
+
+
+def test_clear():
+    c = AnswerCache(CacheConfig(capacity=4))
+    c.put(_key(1), *_ans(1))
+    c.clear()
+    assert len(c) == 0
+    assert c.invalidate([1]) == 0
+
+
+# ---------------------------------------------------------------------------
+# service integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def graph():
+    return synthetic.rmat(11, avg_deg=8.0, seed=2)  # n = 2048
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    kv, ki = jax.random.split(jax.random.PRNGKey(4))
+    vals = jax.random.uniform(kv, (graph.n, 16), jnp.float32)
+    vals = jnp.sort(vals / vals.sum(axis=1, keepdims=True), axis=1)[:, ::-1]
+    idxs = jax.random.randint(ki, (graph.n, 16), 0, graph.n, jnp.int32)
+    return PPRIndex(values=vals, indices=idxs, l=16, n=graph.n)
+
+
+def _service(graph, index, *, capacity, max_seeds=4, max_batch=16, depth=1):
+    cfg = ServiceConfig(
+        query=QueryConfig(mode="powerwalk", t_iterations=2, top_k=32,
+                          frontier_k=128, max_seeds=max_seeds),
+        batching=BatchingConfig(max_batch=max_batch),
+        pipeline=PipelineConfig(depth=depth),
+        cache=CacheConfig(capacity=capacity),
+    )
+    return PPRService(graph, index, cfg)
+
+
+def test_cache_hit_skips_dispatch(graph, index):
+    svc = _service(graph, index, capacity=32)
+    svc.submit(seeds=[3, 5], weights=[1.0, 1.0])
+    first = svc.poll(force=True)
+    assert len(first) == 1 and not first[0].cached
+    batches_before = svc.stats["batches"]
+    # same distribution, different spelling: permuted + rescaled
+    rid = svc.submit(seeds=[5, 3], weights=[2.0, 2.0])
+    hits = svc.poll(force=True)
+    assert len(hits) == 1 and hits[0].request_id == rid
+    assert hits[0].cached
+    assert svc.stats["batches"] == batches_before      # no dispatch
+    np.testing.assert_array_equal(hits[0].top_vertices,
+                                  first[0].top_vertices)
+    np.testing.assert_array_equal(hits[0].top_scores, first[0].top_scores)
+    s = svc.snapshot_stats()
+    assert s["cache_served"] == 1 and s["cache_hits"] == 1
+    assert s["cache_hit_rate"] > 0
+
+
+def test_single_vertex_requests_share_cache_with_s1_sets(graph, index):
+    svc = _service(graph, index, capacity=32)
+    svc.submit(77)
+    svc.poll(force=True)
+    svc.submit(seeds=[77])                    # S=1 set, same canonical key
+    a = svc.poll(force=True)
+    assert a[0].cached
+
+
+def test_service_invalidate_hook(graph, index):
+    svc = _service(graph, index, capacity=32)
+    svc.submit(seeds=[3, 5])
+    svc.submit(seeds=[8, 9])
+    svc.poll(force=True)
+    assert svc.invalidate([5]) == 1           # exactly the touched entry
+    svc.submit(seeds=[3, 5])                  # recomputes
+    a = svc.poll(force=True)
+    assert not a[0].cached
+    svc.submit(seeds=[9, 8])                  # untouched entry still hits
+    a = svc.poll(force=True)
+    assert a[0].cached
+    assert svc.snapshot_stats()["cache_invalidated"] == 1
+
+
+def test_cached_answers_byte_identical_to_uncached(graph, index):
+    """The acceptance property: run Zipf hot-seed traffic (permuted and
+    rescaled spellings) through a cache-on service; every answer must be
+    byte-identical to a cache-off service answering the same canonical
+    query.  Holds because misses dispatch the canonical spelling."""
+    items = zipf_seed_workload(graph.n, 90, skew=1.2, max_seeds=4, pool=16,
+                               seed=9)
+    svc = _service(graph, index, capacity=64)
+    rid_to_item = {}
+    answers = {}
+    for i, it in enumerate(items):
+        rid = svc.submit(seeds=it["seeds"], weights=it["weights"])
+        rid_to_item[rid] = it
+        if i % 6 == 5:                        # absorb so later repeats hit
+            for a in svc.poll(force=True):
+                answers[a.request_id] = a
+    for a in svc.poll(force=True):
+        answers[a.request_id] = a
+    assert len(answers) == len(items)
+    assert svc.snapshot_stats()["cache_hits"] > 0      # traffic was hot
+    assert any(a.cached for a in answers.values())
+
+    # uncached reference: a cache-off service answering each distinct
+    # canonical query once
+    ref = _service(graph, index, capacity=0)
+    ref_rids = {}
+    for it in items:
+        key = canonicalize_seed_set(it["seeds"], it["weights"])
+        if key not in ref_rids:
+            ref_rids[key] = ref.submit(
+                seeds=list(key[0]), weights=[q * 1e-4 for q in key[1]])
+    ref_answers = {a.request_id: a for a in ref.poll(force=True)}
+    for rid, it in rid_to_item.items():
+        key = canonicalize_seed_set(it["seeds"], it["weights"])
+        a, r = answers[rid], ref_answers[ref_rids[key]]
+        np.testing.assert_array_equal(a.top_vertices, r.top_vertices)
+        np.testing.assert_array_equal(a.top_scores, r.top_scores)
+
+
+def test_cache_off_by_default(graph, index):
+    svc = _service(graph, index, capacity=0)
+    svc.submit(seeds=[3, 5])
+    svc.poll(force=True)
+    svc.submit(seeds=[3, 5])
+    a = svc.poll(force=True)
+    assert not a[0].cached
+    s = svc.snapshot_stats()
+    assert s["cache_served"] == 0 and s["cache_capacity"] == 0

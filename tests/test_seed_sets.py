@@ -1,0 +1,351 @@
+"""Weighted seed-set query parity suite (PR 7's tentpole contract).
+
+PPR is linear in its restart distribution, so a seed-set answer must equal
+the weighted sum of the single-vertex answers — that is the oracle every
+route is held to here: sparse == dense == weighted singles to <= 1e-5 L1,
+including the padded (sharded-build-shaped) index and both index-combine
+paths.  The strict bound needs dangling-free graphs: with dangling
+vertices, a seed-set query returns leaked mass to the normalized seed
+*distribution* while the weighted-singles oracle returns each single's
+mass to its own seed — the same convention only once no mass leaks, so the
+fixtures close every dangling vertex with a self-loop.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.core.index import PPRIndex
+from repro.core.query import BatchQueryEngine, QueryConfig
+from repro.graphs import synthetic
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+def _dangling_free(g: Graph) -> Graph:
+    """Close dangling vertices with self-loops (see module docstring)."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.col_idx)
+    dang = np.flatnonzero(np.asarray(g.dangling_mask))
+    if dang.size:
+        src = np.concatenate([src, dang])
+        dst = np.concatenate([dst, dang])
+    return Graph.from_edges(src, dst, n=g.n)
+
+
+def _random_index(n: int, l: int, seed: int) -> PPRIndex:
+    kv, ki = jax.random.split(jax.random.PRNGKey(seed))
+    vals = jax.random.uniform(kv, (n, l), jnp.float32)
+    vals = jnp.sort(vals / vals.sum(axis=1, keepdims=True), axis=1)[:, ::-1]
+    idxs = jax.random.randint(ki, (n, l), 0, n, jnp.int32)
+    return PPRIndex(values=vals, indices=idxs, l=l, n=n)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    # small enough that frontier_k = out_k = n makes the sparse route
+    # exact (no truncation anywhere), so full-vector L1 bounds apply
+    return _dangling_free(synthetic.erdos_renyi(256, avg_deg=4.0, seed=1))
+
+
+@pytest.fixture(scope="module")
+def small_index(small_graph):
+    return _random_index(small_graph.n, 8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return _dangling_free(synthetic.rmat(11, avg_deg=8.0, seed=2))  # n=2048
+
+
+@pytest.fixture(scope="module")
+def index(graph):
+    return _random_index(graph.n, 16, seed=4)
+
+
+def _engine(graph, index, **kw):
+    cfg = dict(mode="powerwalk", t_iterations=2, top_k=32, frontier_k=128,
+               max_seeds=4)
+    cfg.update(kw)
+    return BatchQueryEngine(graph, index, QueryConfig(**cfg))
+
+
+def _seed_sets(n, q=6, s=4, seed=0):
+    rng = np.random.default_rng(seed)
+    seeds = rng.integers(0, n, (q, s)).astype(np.int32)
+    weights = (rng.random((q, s)) + 0.1).astype(np.float32)
+    return jnp.asarray(seeds), jnp.asarray(weights)
+
+
+def _densify(sf, n):
+    vals = np.asarray(sf.values, np.float64)
+    idx = np.asarray(sf.indices)
+    out = np.zeros((vals.shape[0], n))
+    np.add.at(out, (np.arange(vals.shape[0])[:, None], idx), vals)
+    return out
+
+
+def _topk_map(vals, idx):
+    return dict(zip(np.asarray(idx).tolist(), np.asarray(vals).tolist()))
+
+
+def _assert_topk_close(a, b, atol=1e-6):
+    """Top-k rows as (vertex -> score) maps; robust to ties permuting."""
+    va, ia = a
+    vb, ib = b
+    for r in range(np.asarray(va).shape[0]):
+        ma = _topk_map(va[r], ia[r])
+        mb = _topk_map(vb[r], ib[r])
+        for k in set(ma) | set(mb):
+            assert abs(ma.get(k, 0.0) - mb.get(k, 0.0)) < atol, (r, k)
+
+
+# ---------------------------------------------------------------------------
+# the parity oracle chain: sparse == dense == weighted singles (<= 1e-5 L1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["powerwalk", "verd"])
+def test_dense_seed_set_equals_weighted_singles(small_graph, small_index, mode):
+    eng = _engine(small_graph, small_index, mode=mode,
+                  frontier_k=small_graph.n)
+    seeds, weights = _seed_sets(small_graph.n)
+    dense = np.asarray(eng.query_dense(seeds, weights=weights), np.float64)
+    wn = np.asarray(weights, np.float64)
+    wn /= wn.sum(axis=1, keepdims=True)
+    oracle = np.zeros_like(dense)
+    for j in range(seeds.shape[1]):
+        single = np.asarray(eng.query_dense(seeds[:, j]), np.float64)
+        oracle += wn[:, j, None] * single
+    l1 = np.abs(dense - oracle).sum(axis=1)
+    assert l1.max() <= 1e-5, l1
+
+
+def test_sparse_seed_set_matches_dense_oracle(small_graph, small_index):
+    """Full chain at full width: the sparse route's densified answer, the
+    dense route, and the weighted-singles oracle all agree to <= 1e-5 L1."""
+    n = small_graph.n
+    eng = _engine(small_graph, small_index, frontier_k=n)
+    seeds, weights = _seed_sets(n)
+    sf = eng.query_sparse(seeds, out_k=n, weights=weights)
+    sparse = _densify(sf, n)
+    dense = np.asarray(eng.query_dense(seeds, weights=weights), np.float64)
+    assert np.abs(sparse - dense).sum(axis=1).max() <= 1e-5
+    wn = np.asarray(weights, np.float64)
+    wn /= wn.sum(axis=1, keepdims=True)
+    oracle = np.zeros_like(dense)
+    for j in range(seeds.shape[1]):
+        sf_j = eng.query_sparse(seeds[:, j], out_k=n)
+        oracle += wn[:, j, None] * _densify(sf_j, n)
+    assert np.abs(sparse - oracle).sum(axis=1).max() <= 1e-5
+
+
+def test_seed_set_parity_on_padded_index(small_graph, small_index):
+    """A sharded-build-shaped index (zeroed pad rows, index.n > graph.n)
+    serves identical seed-set answers on both routes."""
+    pad = 19
+    padded = PPRIndex(
+        values=jnp.concatenate(
+            [small_index.values, jnp.zeros((pad, small_index.l), jnp.float32)]),
+        indices=jnp.concatenate(
+            [small_index.indices, jnp.zeros((pad, small_index.l), jnp.int32)]),
+        l=small_index.l, n=small_graph.n + pad)
+    seeds, weights = _seed_sets(small_graph.n, seed=5)
+    for path in ("sparse", "dense"):
+        a = _engine(small_graph, small_index, frontier_path=path).query_topk(
+            seeds, weights=weights)
+        b = _engine(small_graph, padded, frontier_path=path).query_topk(
+            seeds, weights=weights)
+        _assert_topk_close(a, b, atol=1e-6)
+
+
+def test_combine_paths_agree_on_seed_sets(graph, index):
+    """scatter-combine vs sparse-combine: identical seed-set answers (the
+    acceptance criterion's "both combine paths")."""
+    seeds, weights = _seed_sets(graph.n, q=8, seed=7)
+    answers = {}
+    for path in ("scatter", "sparse"):
+        eng = _engine(graph, index, frontier_path="sparse",
+                      combine_path=path)
+        answers[path] = eng.query_topk_async(seeds, weights=weights)
+    np.testing.assert_allclose(
+        np.asarray(answers["scatter"][0]), np.asarray(answers["sparse"][0]),
+        rtol=1e-6, atol=1e-7)
+    _assert_topk_close(answers["scatter"], answers["sparse"])
+
+
+# ---------------------------------------------------------------------------
+# reductions and invariances
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("frontier_path", ["sparse", "dense"])
+def test_single_seed_reduces_to_single_vertex(graph, index, frontier_path):
+    """S=1 with weight 1 is *bit-identical* to the classic single-vertex
+    query — the seed-set path is a strict generalization, not a parallel
+    implementation."""
+    eng = _engine(graph, index, frontier_path=frontier_path, max_seeds=1)
+    verts = jnp.arange(16, dtype=jnp.int32)
+    v0, i0 = eng.query_topk(verts)
+    v1, i1 = eng.query_topk(
+        verts[:, None], weights=jnp.ones((16, 1), jnp.float32))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+@pytest.mark.parametrize("frontier_path", ["sparse", "dense"])
+def test_duplicate_seeds_dedup_sum(graph, index, frontier_path):
+    """A vertex listed twice carries the sum of its weights — same answer
+    as the deduped spelling (scatter-add seeding on the dense route,
+    dedup-merge in the sparse frontier)."""
+    eng = _engine(graph, index, frontier_path=frontier_path)
+    a, b = 17, 400
+    dup = eng.query_topk(
+        jnp.asarray([[a, a, b, 0]], jnp.int32),
+        weights=jnp.asarray([[0.25, 0.25, 0.5, 0.0]], jnp.float32))
+    ded = eng.query_topk(
+        jnp.asarray([[a, b, 0, 0]], jnp.int32),
+        weights=jnp.asarray([[0.5, 0.5, 0.0, 0.0]], jnp.float32))
+    np.testing.assert_allclose(
+        np.asarray(dup[0]), np.asarray(ded[0]), rtol=1e-6, atol=1e-7)
+    _assert_topk_close(dup, ded)
+
+
+def test_rescale_invariance(graph, index):
+    """Weights are normalized per row: rescaling changes nothing.  A
+    power-of-two rescale is bit-exact (f32 division rounds identically);
+    arbitrary scales agree to float tolerance."""
+    eng = _engine(graph, index)
+    seeds, weights = _seed_sets(graph.n, seed=9)
+    v0, i0 = eng.query_topk(seeds, weights=weights)
+    v2, i2 = eng.query_topk(seeds, weights=2.0 * weights)
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i2))
+    v3, i3 = eng.query_topk(seeds, weights=3.0 * weights)
+    _assert_topk_close((v0, i0), (v3, i3))
+
+
+@pytest.mark.parametrize("frontier_path", ["sparse", "dense"])
+def test_zero_weight_row_yields_zero_answers(graph, index, frontier_path):
+    """All-zero weight rows (the pipeline's pad rows) produce all-zero
+    answers instead of NaNs — the contract ``_batch_arrays`` relies on."""
+    eng = _engine(graph, index, frontier_path=frontier_path)
+    seeds = jnp.asarray([[5, 9, 2, 0], [0, 0, 0, 0]], jnp.int32)
+    weights = jnp.asarray(
+        [[0.5, 0.3, 0.2, 0.0], [0.0, 0.0, 0.0, 0.0]], jnp.float32)
+    vals, _ = eng.query_topk(seeds, weights=weights)
+    vals = np.asarray(vals)
+    assert np.all(np.isfinite(vals))
+    assert vals[0].max() > 0.0
+    np.testing.assert_array_equal(vals[1], np.zeros_like(vals[1]))
+
+
+# ---------------------------------------------------------------------------
+# mode coverage and validation
+# ---------------------------------------------------------------------------
+
+def test_fppr_seed_set_is_weighted_row_sum(graph, index):
+    """fppr mode: a seed-set answer is the weighted sum of the seeds'
+    index rows (pure lookup, no online iterations)."""
+    eng = _engine(graph, index, mode="fppr")
+    seeds, weights = _seed_sets(graph.n, q=4, seed=11)
+    vals, idx = eng.query_topk(seeds, weights=weights)
+    wn = np.asarray(weights, np.float64)
+    wn /= wn.sum(axis=1, keepdims=True)
+    iv = np.asarray(index.values, np.float64)
+    ii = np.asarray(index.indices)
+    s_np = np.asarray(seeds)
+    for r in range(s_np.shape[0]):
+        dense = np.zeros(graph.n)
+        for j in range(s_np.shape[1]):
+            np.add.at(dense, ii[s_np[r, j]], wn[r, j] * iv[s_np[r, j]])
+        got = _topk_map(vals[r], idx[r])
+        for k, v in got.items():
+            assert abs(v - dense[k]) < 1e-6, (r, k)
+
+
+def test_nonlinear_modes_reject_seed_sets(graph, index):
+    for mode in ("mcfp", "pi"):
+        with pytest.raises(ValueError):
+            BatchQueryEngine(graph, index, QueryConfig(mode=mode, max_seeds=4))
+        eng = BatchQueryEngine(graph, index, QueryConfig(mode=mode))
+        with pytest.raises(ValueError):
+            eng.query_dense(jnp.asarray([[1, 2]], jnp.int32),
+                            weights=jnp.ones((1, 2), jnp.float32))
+        with pytest.raises(ValueError):
+            eng.query_topk_async(jnp.asarray([[1, 2]], jnp.int32),
+                                 weights=jnp.ones((1, 2), jnp.float32))
+
+
+def test_run_chunks_seed_sets(graph, index):
+    """The batched driver chunks weights alongside sources and matches the
+    one-shot answer."""
+    eng = _engine(graph, index, max_batch=8)
+    seeds, weights = _seed_sets(graph.n, q=20, seed=13)
+    out = eng.run(np.asarray(seeds), weights=np.asarray(weights))
+    assert out["queries"] == 20
+    ref_v, ref_i = _engine(graph, index).query_topk(seeds, weights=weights)
+    _assert_topk_close((out["values"], out["indices"]),
+                       (np.asarray(ref_v), np.asarray(ref_i)))
+
+
+# ---------------------------------------------------------------------------
+# serving integration: seed sets end to end through the service
+# ---------------------------------------------------------------------------
+
+def test_service_seed_sets_end_to_end(graph, index):
+    from repro.serving import PPRService, ServiceConfig
+    from repro.serving.batching import BatchingConfig
+    from repro.serving.pipeline import PipelineConfig
+
+    cfg = ServiceConfig(
+        query=QueryConfig(mode="powerwalk", t_iterations=2, top_k=32,
+                          frontier_k=128, max_seeds=4),
+        batching=BatchingConfig(max_batch=16),
+        pipeline=PipelineConfig(depth=2),
+    )
+    svc = PPRService(graph, index, cfg)
+    rng = np.random.default_rng(17)
+    sets = [
+        (rng.integers(0, graph.n, rng.integers(1, 5)).tolist(),
+         (rng.random(4) + 0.1).tolist())
+        for _ in range(9)
+    ]
+    rids = {}
+    for s, w in sets:
+        rids[svc.submit(seeds=s, weights=w[: len(s)])] = (s, w[: len(s)])
+    single = svc.submit(42)                   # mixed traffic
+    answers = {a.request_id: a for a in svc.poll(force=True)}
+    assert len(answers) == 10
+    eng = svc.engine
+    for rid, (s, w) in rids.items():
+        row_s = np.zeros(4, np.int32)
+        row_w = np.zeros(4, np.float32)
+        row_s[: len(s)] = s
+        row_w[: len(s)] = w
+        v_ref, i_ref = eng.query_topk_async(
+            jnp.asarray(row_s[None]), weights=jnp.asarray(row_w[None]))
+        # batch width differs between the service dispatch and this Q=1
+        # reference (which can even flip the combine-path auto-route), so
+        # compare answers as (vertex -> score) maps, not bytes
+        _assert_topk_close(
+            (answers[rid].top_scores[None], answers[rid].top_vertices[None]),
+            (np.asarray(v_ref), np.asarray(i_ref)))
+        assert answers[rid].vertex == s[0]    # primary seed labels answers
+    v_ref, i_ref = eng.query_topk_async(
+        jnp.asarray([[42, 0, 0, 0]], jnp.int32),
+        weights=jnp.asarray([[1.0, 0, 0, 0]], jnp.float32))
+    _assert_topk_close(
+        (answers[single].top_scores[None], answers[single].top_vertices[None]),
+        (np.asarray(v_ref), np.asarray(i_ref)))
+
+
+def test_service_rejects_oversized_seed_set(graph, index):
+    from repro.serving import PPRService, ServiceConfig
+
+    svc = PPRService(graph, index, ServiceConfig(
+        query=QueryConfig(mode="powerwalk", max_seeds=2)))
+    with pytest.raises(ValueError):
+        svc.submit(seeds=[1, 2, 3])

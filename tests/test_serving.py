@@ -78,7 +78,7 @@ def _serve_all(svc, vertices):
 
 
 # ---------------------------------------------------------------------------
-# satellite: power-of-two padding clamped to max_batch
+# satellite: bucketed padding clamped to max_batch
 # ---------------------------------------------------------------------------
 
 def test_pad_clamped_to_max_batch():
@@ -89,11 +89,40 @@ def test_pad_clamped_to_max_batch():
         buf.submit(v)
     reqs, padded = buf.drain()
     assert len(reqs) == 3000 and padded == 3000
-    # non-power-of-two partial drains still round up within the clamp
+    # partial drains round up to the next pad_quantum multiple (the old
+    # pow2 rule padded 2500 all the way to the 3000 clamp)
     for v in range(2500):
         buf.submit(v)
     reqs, padded = buf.drain()
-    assert len(reqs) == 2500 and padded == 3000
+    assert len(reqs) == 2500 and padded == 2560
+
+
+def test_bucketed_padding_reduces_pad_fraction():
+    """Regression for the PR 6 open-loop histogram: drains in the
+    (quantum, 2*quantum] .. (max/2, max] bands used to double to the next
+    power of two; bucketing pads them to the next multiple of 64."""
+    cfg = BatchingConfig(max_batch=256)
+    for n, want in [(1, 1), (2, 2), (33, 64), (64, 64), (65, 128),
+                    (128, 128), (129, 192), (200, 256), (256, 256)]:
+        assert cfg.pad_width(n) == want, (n, want, cfg.pad_width(n))
+    # the shape a saturated service lives at: 129..192 real rows used to
+    # pad to 256; bucketing halves the wasted pad rows (127 -> 63) and
+    # drops pad_fraction from ~0.50 to ~0.33 at the worst point
+    old_pow2 = 256
+    assert cfg.pad_width(129) - 129 <= (old_pow2 - 129) / 2
+    pad_old = (old_pow2 - 129) / old_pow2
+    pad_new = (cfg.pad_width(129) - 129) / cfg.pad_width(129)
+    assert pad_new < pad_old
+    # closed shape set: pow2 up to the quantum, then quantum multiples —
+    # with the serving bench's min_pad=64 floor the set is 4 shapes
+    assert cfg.padded_shapes() == [1, 2, 4, 8, 16, 32, 64, 128, 192, 256]
+    bench = BatchingConfig(max_batch=256, min_pad=64)
+    assert bench.padded_shapes() == [64, 128, 192, 256]
+
+
+def test_padding_disabled_passthrough():
+    cfg = BatchingConfig(max_batch=256, pad_to_power_of_two=False)
+    assert cfg.pad_width(129) == 129
 
 
 def test_pad_min_floor():
@@ -177,6 +206,51 @@ def test_submit_rejects_unknown_tier():
     buf = RequestBuffer(BatchingConfig(), clock=lambda: 0.0)
     with pytest.raises(ValueError):
         buf.submit(0, tier="batch")
+
+
+def test_bulk_aging_bound_prevents_starvation():
+    """Satellite bugfix: the interactive-first drain used to starve bulk —
+    under sustained interactive load every drain filled with interactive
+    requests and the bulk request aged in the buffer forever.  A fired bulk
+    deadline now outranks fresher interactive traffic (oldest-deadline-
+    first), so ``max_wait_s`` is an aging bound."""
+    t = [0.0]
+    cfg = BatchingConfig(
+        max_batch=4, max_wait_s=0.01,
+        bulk=TierPolicy(max_wait_s=0.045),
+        pad_to_power_of_two=False,
+    )
+    buf = RequestBuffer(cfg, clock=lambda: t[0])
+    b0 = buf.submit(99, tier="bulk")          # deadline: t = 0.045
+    bulk_served_round = None
+    for rnd in range(5):
+        for v in range(4):                    # sustained: a full batch of
+            buf.submit(v)                     # interactive every round
+        t[0] += 0.02
+        reqs, _ = buf.drain()
+        if any(r.request_id == b0 for r in reqs):
+            bulk_served_round = rnd
+            # the fired bulk deadline outranked interactive traffic that
+            # was itself past deadline — pre-fix, interactive always won
+            assert reqs[0].request_id == b0
+            assert len(buf) > 0               # interactive left waiting
+            break
+    # served within one drain period of its 0.045s deadline (round 2 ends
+    # at t=0.06), not starved through all 5 rounds
+    assert bulk_served_round == 2
+    # latency bound: deadline + one drain period, not 5 rounds
+    assert t[0] - 0.0 <= cfg.tier_policy("bulk")[1] + 0.02
+
+
+def test_drain_order_keeps_interactive_first_when_nothing_fired():
+    t = [0.0]
+    cfg = BatchingConfig(max_batch=4, max_wait_s=10.0)
+    buf = RequestBuffer(cfg, clock=lambda: t[0])
+    buf.submit(9, tier="bulk")
+    buf.submit(1, tier="interactive")
+    t[0] = 0.001                              # no deadline fired
+    reqs, _ = buf.drain()
+    assert [r.tier for r in reqs] == ["interactive", "bulk"]
 
 
 # ---------------------------------------------------------------------------
@@ -344,6 +418,56 @@ def test_service_matches_engine_rows(graph, index):
         jnp.asarray(verts, jnp.int32), key=eng.dispatch_key(0))
     np.testing.assert_array_equal(v_srv, np.asarray(v_ref))
     np.testing.assert_array_equal(i_srv, np.asarray(i_ref))
+
+
+# ---------------------------------------------------------------------------
+# satellite: per-dispatch result buffers ring instead of allocating
+# ---------------------------------------------------------------------------
+
+def test_buffer_ring_no_allocation_growth(graph, index):
+    """Satellite bugfix: each fused dispatch used to allocate a fresh
+    [padded, k] result pair.  With the buffer ring, a long run at a fixed
+    shape set allocates at most ``depth`` pairs per shape and re-donates
+    them forever after — allocation count plateaus, reuse count grows."""
+    svc = _service(graph, index, depth=2, max_batch=16, min_pad=16)
+    rng = np.random.default_rng(11)
+    _, s = run_closed_loop(svc, rng.integers(0, graph.n, 16 * 12).tolist())
+    assert s["served"] == 16 * 12
+    dispatched = s["pipeline_dispatched"]
+    assert dispatched >= 10                   # long run, many dispatches
+    # single padded shape (min_pad == max_batch == 16): the ring bounds
+    # allocations by pipeline depth, everything else reuses
+    assert set(s["batch_hist"]) == {16}
+    assert s["pipeline_buffers_allocated"] <= 2
+    assert s["pipeline_buffers_reused"] == dispatched - s["pipeline_buffers_allocated"]
+
+
+def test_buffer_ring_reuses_device_memory(graph, index):
+    """The ring actually re-donates device buffers: a dispatch that pops a
+    ringed pair writes its answer into the same device memory."""
+    eng = BatchQueryEngine(graph, index, QueryConfig(
+        mode="powerwalk", t_iterations=2, top_k=32, frontier_k=128,
+        frontier_path="sparse"))
+    verts = jnp.arange(8, dtype=jnp.int32)
+    v0, i0 = eng.query_topk_async(verts)
+    v0.block_until_ready()
+    ptr_v = v0.unsafe_buffer_pointer()
+    ref_vals = np.asarray(v0).copy()
+    v1, i1 = eng.query_topk_async(verts + 1, out=(v0, i0))
+    v1.block_until_ready()
+    assert v1.unsafe_buffer_pointer() == ptr_v   # same device memory
+    # and the answers are the fresh query's, not the donor's
+    v_ref, _ = eng.query_topk_async(jnp.arange(8, dtype=jnp.int32) + 1)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v_ref))
+    assert not np.array_equal(np.asarray(v1), ref_vals)
+
+
+def test_buffer_ring_disabled_never_reuses(graph, index):
+    svc = _service(graph, index, depth=1, max_batch=16, min_pad=16)
+    svc.cfg.pipeline.reuse_buffers = False
+    rng = np.random.default_rng(12)
+    _, s = run_closed_loop(svc, rng.integers(0, graph.n, 48).tolist())
+    assert s["pipeline_buffers_reused"] == 0
 
 
 # ---------------------------------------------------------------------------
