@@ -5,7 +5,7 @@ PY ?= python
 
 .PHONY: test test-fast test-parity test-kernels bench bench-smoke bench-walks \
 	bench-preprocess-dist bench-serving bench-serving-smoke bench-cache \
-	bench-cache-smoke
+	bench-cache-smoke bench-updates bench-updates-smoke
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
@@ -30,9 +30,10 @@ bench:
 	PYTHONPATH=src $(PY) -m benchmarks.run
 
 # CI-sized smoke: small graphs — query + kernel tables plus the cache
-# knee-shift smoke (the fast suite's bench half)
+# knee-shift and evolving-graph update smokes (the fast suite's bench half)
 bench-smoke:
-	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only query,kernels,cache
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast \
+		--only query,kernels,cache,updates
 
 # serving pipeline: open-loop QPS sweep + depth sweep at the n=100k/K=512
 # reference point; writes BENCH_serving.json (docs/serving_path.md)
@@ -53,6 +54,16 @@ bench-cache:
 # CI-sized cache smoke: writes BENCH_cache.fast.json
 bench-cache-smoke:
 	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only cache
+
+# evolving-graph maintenance: incremental repair vs full rebuild over an
+# edge-update sequence at n=32k; writes BENCH_updates.json (>= 10x fewer
+# resampled positions at <= 2x drift — docs/indexing_path.md)
+bench-updates:
+	PYTHONPATH=src $(PY) -m benchmarks.run --only updates
+
+# CI-sized update smoke: writes BENCH_updates.fast.json
+bench-updates-smoke:
+	PYTHONPATH=src $(PY) -m benchmarks.run --fast --only updates
 
 # offline walk engine: legacy vs compacted-sparse positions/sec at the
 # n=100k acceptance point + index-build timings; writes BENCH_walks.json

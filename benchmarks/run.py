@@ -16,6 +16,7 @@ Mapping to the paper:
   bench_kernels    -> Pallas kernel micro-benches + correctness gates
   bench_serving    -> Section 3.3 serving loop (open-loop QPS, pipeline depth)
   bench_cache      -> answer cache under Zipf hot-seed traffic (knee shift)
+  bench_updates    -> evolving-graph maintenance (incremental vs rebuild)
 """
 
 from __future__ import annotations
@@ -57,11 +58,11 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_cache, bench_kernels,
                             bench_preprocess, bench_query, bench_serving,
-                            bench_verd, bench_walks)
+                            bench_updates, bench_verd, bench_walks)
     modules = dict(
         accuracy=bench_accuracy, verd=bench_verd, preprocess=bench_preprocess,
         query=bench_query, walks=bench_walks, kernels=bench_kernels,
-        serving=bench_serving, cache=bench_cache,
+        serving=bench_serving, cache=bench_cache, updates=bench_updates,
     )
     if args.only:
         keep = set(args.only.split(","))

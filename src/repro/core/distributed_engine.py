@@ -694,6 +694,7 @@ def make_sparse_index_build_step(
     compact_every: int = 8,
     source_batch: int = 256,
     respawn: bool = False,
+    touch_bits: int = 0,
 ):
     """The whole offline index build as one sharded device computation.
 
@@ -722,6 +723,11 @@ def make_sparse_index_build_step(
     Requires ``cfg.n_shard`` divisible by ``source_batch`` (so shard
     intervals align with the single-device chunk grid) and ``r`` divisible
     by the batch-axis shard count.
+
+    ``touch_bits > 0`` appends a fifth output: the per-row walks-through
+    Bloom filter ``bool[n, touch_bits]`` (``P(model, None)`` like the index
+    rows), OR-merged across data replicas with a psum and zeroed on pad
+    rows — the invalidation sketch ``core/updates.py`` consumes.
     """
     from repro.core.index import normalize_sketch_to_index_rows
     from repro.core.walks import simulate_walks_sparse
@@ -764,7 +770,7 @@ def make_sparse_index_build_step(
             counts = simulate_walks_sparse(
                 g, sources, r_local, sub_key, l=sketch_l, ep_l=0, c=cfg.c,
                 max_steps=max_steps, compact_every=compact_every,
-                respawn=respawn,
+                respawn=respawn, touch_bits=touch_bits,
             )
             if n_split > 1:
                 fp_v, fp_i, moves, dropped = _merge_sparse_counts(
@@ -783,20 +789,32 @@ def make_sparse_index_build_step(
             idxs = jnp.where(realm[:, None], idxs, 0)
             kept = jnp.where(realm, kept, 0.0)
             dropped_est = jnp.where(realm, dropped_est, 0.0)
-            return carry, (vals, idxs, kept, dropped_est)
+            out = (vals, idxs, kept, dropped_est)
+            if touch_bits:
+                touch = counts.touch
+                if n_split > 1:   # OR-merge the replicas' bloom filters
+                    touch = jax.lax.psum(
+                        touch.astype(jnp.int32), axes) > 0
+                touch = jnp.where(realm[:, None], touch, False)
+                out = out + (touch,)
+            return carry, out
 
-        _, (vals, idxs, kept, dropped) = jax.lax.scan(
+        _, scanned = jax.lax.scan(
             chunk_body, 0, jnp.arange(n_chunks, dtype=jnp.int32)
         )
-        return (
+        vals, idxs, kept, dropped = scanned[:4]
+        out = (
             vals.reshape(ns, l), idxs.reshape(ns, l),
             kept.reshape(ns), dropped.reshape(ns),
         )
+        if touch_bits:
+            out = out + (scanned[4].reshape(ns, touch_bits),)
+        return out
 
     in_specs = (P(None), P(None), P(None), P())   # graph + key replicated
     out_specs = (
         P(model, None), P(model, None), P(model), P(model),
-    )
+    ) + ((P(model, None),) if touch_bits else ())
     return shard_map(
         local_fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
         check_vma=False,

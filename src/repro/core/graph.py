@@ -115,6 +115,73 @@ class Graph:
         return a
 
 
+def _edge_pairs(edges) -> np.ndarray:
+    """Coerce an edge batch to an int64 ``[k, 2]`` array (empty ok)."""
+    if edges is None:
+        return np.zeros((0, 2), dtype=np.int64)
+    arr = np.asarray(edges, dtype=np.int64)
+    if arr.size == 0:
+        return np.zeros((0, 2), dtype=np.int64)
+    if arr.ndim != 2 or arr.shape[1] != 2:
+        raise ValueError(f"edge batch must have shape [k, 2], got {arr.shape}")
+    return arr
+
+
+def apply_edge_updates(
+    graph: Graph, inserts=None, deletes=None
+) -> Tuple[Graph, np.ndarray]:
+    """Apply a batch of edge inserts/deletes; returns ``(new_graph, touched)``.
+
+    ``inserts``/``deletes`` are ``[k, 2]`` arrays of ``(src, dst)`` pairs
+    (vertex ids must already exist — ``n`` never changes here).  Deleting an
+    edge that is not present raises; inserting a duplicate edge is allowed
+    (CSR stores multiplicity).  ``touched`` is the sorted unique set of
+    source vertices whose out-neighborhood changed — the seed of the
+    index-invalidation set in :mod:`repro.core.updates`.
+
+    Determinism contract (what incremental repair relies on): edges of an
+    *untouched* source keep their exact CSR window contents and order, so a
+    walk trajectory that never visits a touched vertex re-simulates
+    bit-identically on the new graph.  This holds because ``from_edges``
+    sorts by source with a *stable* sort and we only remove/append edges of
+    touched sources.
+    """
+    ins = _edge_pairs(inserts)
+    dele = _edge_pairs(deletes)
+    for name, arr in (("inserts", ins), ("deletes", dele)):
+        if arr.size and (arr.min() < 0 or arr.max() >= graph.n):
+            raise ValueError(f"{name} contain vertex ids outside [0, {graph.n})")
+    if not ins.size and not dele.size:
+        return graph, np.zeros(0, dtype=np.int64)
+
+    src = np.asarray(graph.src, dtype=np.int64)
+    dst = np.asarray(graph.col_idx, dtype=np.int64)
+    if dele.size:
+        key = src * graph.n + dst
+        order = np.argsort(key, kind="stable")
+        skey = key[order]
+        dkey, dcnt = np.unique(dele[:, 0] * graph.n + dele[:, 1],
+                               return_counts=True)
+        lo = np.searchsorted(skey, dkey, side="left")
+        hi = np.searchsorted(skey, dkey, side="right")
+        missing = dcnt > (hi - lo)
+        if missing.any():
+            bad = dkey[missing][0]
+            raise ValueError(
+                f"cannot delete edge ({bad // graph.n}, {bad % graph.n}): "
+                "not present (or multiplicity exceeded)")
+        remove = np.zeros(src.shape[0], dtype=bool)
+        for pos, cnt in zip(lo, dcnt):
+            remove[order[pos:pos + cnt]] = True
+        keep = ~remove
+        src, dst = src[keep], dst[keep]
+    if ins.size:
+        src = np.concatenate([src, ins[:, 0]])
+        dst = np.concatenate([dst, ins[:, 1]])
+    touched = np.unique(np.concatenate([ins[:, 0], dele[:, 0]]))
+    return Graph.from_edges(src, dst, n=graph.n), touched
+
+
 def push_forward(graph: Graph, frontier: jax.Array) -> jax.Array:
     """One substochastic push ``frontier @ A0``.
 

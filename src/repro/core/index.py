@@ -27,7 +27,9 @@ import numpy as np
 from repro.core import frontier as frontier_mod
 from repro.core import mcfp
 from repro.core.graph import Graph
-from repro.core.walks import DEFAULT_C, simulate_walks_sparse
+from repro.core.walks import (DEFAULT_C, compaction_schedule,
+                              respawn_schedule, schedule_slot_area,
+                              simulate_walks_sparse)
 
 
 @jax.tree_util.register_dataclass
@@ -56,6 +58,30 @@ class PPRIndex:
         out = jnp.zeros((vertices.shape[0], self.n), dtype=vals.dtype)
         rows = jnp.arange(vertices.shape[0])[:, None]
         return out.at[rows, idxs].add(vals)
+
+    def replace_rows(
+        self, rows: jax.Array, values: jax.Array, indices: jax.Array
+    ) -> "PPRIndex":
+        """Functionally replace the fingerprint rows ``rows`` — the repair
+        primitive of incremental maintenance (``core/updates.py``).
+
+        Sharded-aware: if this index lives model-sharded (the
+        ``build_index_sharded`` ``P(model, None)`` layout) the scattered
+        result is ``device_put`` back onto the same sharding, so a repaired
+        index keeps the serving path's layout instead of silently
+        gathering to one device.
+        """
+        rows = jnp.asarray(rows, jnp.int32)
+        new_v = self.values.at[rows].set(
+            jnp.asarray(values, self.values.dtype))
+        new_i = self.indices.at[rows].set(
+            jnp.asarray(indices, self.indices.dtype))
+        sh = getattr(self.values, "sharding", None)
+        if sh is not None and not sh.is_fully_replicated:
+            new_v = jax.device_put(new_v, sh)
+            new_i = jax.device_put(
+                new_i, getattr(self.indices, "sharding", sh))
+        return PPRIndex(values=new_v, indices=new_i, l=self.l, n=self.n)
 
 
 def truncate_topl(estimates: jax.Array, l: int) -> Tuple[jax.Array, jax.Array]:
@@ -100,7 +126,7 @@ def normalize_sketch_to_index_rows(
     jax.jit,
     static_argnames=(
         "r", "l", "sketch_l", "c", "max_steps", "compact_every", "r_splits",
-        "respawn",
+        "respawn", "touch_bits",
     ),
 )
 def sparse_chunk_estimates(
@@ -116,7 +142,8 @@ def sparse_chunk_estimates(
     compact_every: int = 8,
     r_splits: int = 1,
     respawn: bool = False,
-) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    touch_bits: int = 0,
+) -> Tuple[jax.Array, ...]:
     """One source chunk of the sparse index build, entirely on device.
 
     Runs the compacted sparse-sketch walk engine at width ``sketch_l``,
@@ -136,9 +163,18 @@ def sparse_chunk_estimates(
     :func:`build_index_sharded` row for row.  ``respawn`` selects
     respawn-mode walk scheduling (see
     :func:`repro.core.walks.respawn_schedule`).
+
+    ``touch_bits > 0`` appends a fifth output — the per-row
+    "walks-through" Bloom filter ``bool[rows, touch_bits]`` (OR-merged
+    across ``r_splits`` sub-passes) that incremental maintenance
+    (``core/updates.py``) uses to find the rows an edge update dirties.
+    With ``touch_bits=0`` the signature and traced computation are
+    unchanged (the jaxpr memory contract in ``tests/test_walks_sparse.py``
+    keeps holding as-is).
     """
     if r % r_splits != 0:
         raise ValueError(f"r={r} must divide over r_splits={r_splits}")
+    touch = None
     if r_splits > 1:
         vs, is_ = [], []
         moves = jnp.zeros((chunk_sources.shape[0],), jnp.float32)
@@ -148,12 +184,14 @@ def sparse_chunk_estimates(
                 graph, chunk_sources, r // r_splits,
                 jax.random.fold_in(key, s), l=sketch_l, ep_l=0, c=c,
                 max_steps=max_steps, compact_every=compact_every,
-                respawn=respawn,
+                respawn=respawn, touch_bits=touch_bits,
             )
             vs.append(counts.fp.values)
             is_.append(counts.fp.indices)
             moves = moves + counts.moves
             dropped = dropped + counts.fp_dropped
+            if touch_bits:
+                touch = counts.touch if touch is None else touch | counts.touch
         fp_v, fp_i, dropped = frontier_mod.merge_sketch_parts(
             jnp.concatenate(vs, axis=1), jnp.concatenate(is_, axis=1),
             dropped, sketch_l,
@@ -162,11 +200,13 @@ def sparse_chunk_estimates(
         counts = simulate_walks_sparse(
             graph, chunk_sources, r, key, l=sketch_l, ep_l=0, c=c,
             max_steps=max_steps, compact_every=compact_every,
-            respawn=respawn,
+            respawn=respawn, touch_bits=touch_bits,
         )
         fp_v, fp_i = counts.fp.values, counts.fp.indices
         moves, dropped = counts.moves, counts.fp_dropped
-    return normalize_sketch_to_index_rows(fp_v, fp_i, moves, dropped, l)
+        touch = counts.touch
+    out = normalize_sketch_to_index_rows(fp_v, fp_i, moves, dropped, l)
+    return out + (touch,) if touch_bits else out
 
 
 def build_index(
@@ -183,6 +223,7 @@ def build_index(
     compact_every: int = 8,
     r_splits: int = 1,
     respawn: bool = False,
+    touch_bits: int = 0,
 ) -> Tuple[PPRIndex, dict]:
     """Offline preprocessing: MCFP for every vertex, truncated to top-L.
 
@@ -223,14 +264,15 @@ def build_index(
             graph, r, l, key, c=c, max_steps=max_steps,
             source_batch=source_batch, sources=sources,
             compact_every=compact_every, r_splits=r_splits, respawn=respawn,
+            touch_bits=touch_bits,
         )
         stats["duplicate_sources"] = duplicate_sources
         return index, stats
     if engine != "legacy":
         raise ValueError(f"unknown engine {engine!r}")
-    if r_splits != 1 or respawn:
+    if r_splits != 1 or respawn or touch_bits:
         raise ValueError(
-            "r_splits/respawn apply to the sparse engine only"
+            "r_splits/respawn/touch_bits apply to the sparse engine only"
         )
 
     values = np.zeros((n, l), dtype=np.float32)
@@ -296,10 +338,14 @@ def _build_index_sparse(
     compact_every: int,
     r_splits: int = 1,
     respawn: bool = False,
+    touch_bits: int = 0,
 ) -> Tuple[PPRIndex, dict]:
     """Streaming sparse build: ``SparseWalkCounts -> PPRIndex`` on device.
 
-    ``sources`` must be unique (``build_index`` dedups before dispatch)."""
+    ``sources`` must be unique (``build_index`` dedups before dispatch).
+    ``touch_bits > 0`` additionally returns the per-row walks-through Bloom
+    filter as ``stats["touch"]`` (``bool[n, touch_bits]``, zero rows for
+    unswept sources) — the invalidation sketch of ``core/updates.py``."""
     n = graph.n
     l = min(l, n)
     # sketch headroom over the index width keeps the running top-L honest:
@@ -315,30 +361,39 @@ def _build_index_sparse(
     idxs_chunks = []
     kept_parts = []
     dropped_parts = []
+    touch_chunks = []
     for i in range(0, len(padded), source_batch):
         chunk = jnp.asarray(padded[i : i + source_batch])
         real = min(source_batch, n_src - i)
         sub_key = jax.random.fold_in(key, i)
-        vals, idxs, kept, dropped = sparse_chunk_estimates(
+        out = sparse_chunk_estimates(
             graph, chunk, sub_key, r=r, l=l, sketch_l=sketch_l, c=c,
             max_steps=max_steps, compact_every=compact_every,
-            r_splits=r_splits, respawn=respawn,
+            r_splits=r_splits, respawn=respawn, touch_bits=touch_bits,
         )
+        vals, idxs, kept, dropped = out[:4]
         # device-level slicing of the ragged tail: no host sync, pad rows
         # never reach the index or the stats
         vals_chunks.append(vals[:real])
         idxs_chunks.append(idxs[:real])
         kept_parts.append(jnp.sum(kept[:real]))
         dropped_parts.append(jnp.sum(dropped[:real]))
+        if touch_bits:
+            touch_chunks.append(out[4][:real])
 
+    touch = None
     if not n_src:  # empty sources: a valid all-zero index
         values = jnp.zeros((n, l), jnp.float32)
         indices = jnp.zeros((n, l), jnp.int32)
+        if touch_bits:
+            touch = jnp.zeros((n, touch_bits), bool)
     elif n_src == n and np.array_equal(
         sources, np.arange(n, dtype=np.int32)
     ):
         values = jnp.concatenate(vals_chunks, axis=0)
         indices = jnp.concatenate(idxs_chunks, axis=0)
+        if touch_bits:
+            touch = jnp.concatenate(touch_chunks, axis=0)
     else:  # subset build: one scatter into the zero index
         src_dev = jnp.asarray(sources)
         values = jnp.zeros((n, l), jnp.float32).at[src_dev].set(
@@ -347,6 +402,10 @@ def _build_index_sparse(
         indices = jnp.zeros((n, l), jnp.int32).at[src_dev].set(
             jnp.concatenate(idxs_chunks, axis=0)
         )
+        if touch_bits:
+            touch = jnp.zeros((n, touch_bits), bool).at[src_dev].set(
+                jnp.concatenate(touch_chunks, axis=0)
+            )
     if kept_parts:
         kept, dropped = jax.device_get(
             (jnp.sum(jnp.stack(kept_parts)),
@@ -362,6 +421,7 @@ def _build_index_sparse(
         sketch_l=sketch_l,
         r_splits=r_splits,
         respawn=bool(respawn),
+        source_batch=source_batch,
         pad_rows=pad_rows,
         pad_fraction=pad_rows / max(n_src + pad_rows, 1),
         kept_mass=kept,
@@ -369,13 +429,16 @@ def _build_index_sparse(
         drop_fraction=dropped / max(kept + dropped, 1e-12),
         nbytes=n * l * 8,
     )
+    if touch_bits:
+        stats["touch"] = touch
+        stats["touch_bits"] = touch_bits
     return PPRIndex(values=values, indices=indices, l=l, n=n), stats
 
 
 @functools.lru_cache(maxsize=32)
 def _cached_sharded_build_step(
     cfg, mesh, r, l, sketch_l, real_n, max_steps, compact_every,
-    source_batch, respawn,
+    source_batch, respawn, touch_bits=0,
 ):
     """Jitted sharded-build step, memoized on its static config so repeated
     :func:`build_index_sharded` calls (benchmark sweeps, rebuild loops)
@@ -385,7 +448,7 @@ def _cached_sharded_build_step(
     return jax.jit(make_sparse_index_build_step(
         cfg, mesh, r=r, l=l, sketch_l=sketch_l, real_n=real_n,
         max_steps=max_steps, compact_every=compact_every,
-        source_batch=source_batch, respawn=respawn,
+        source_batch=source_batch, respawn=respawn, touch_bits=touch_bits,
     ))
 
 
@@ -403,6 +466,7 @@ def build_index_sharded(
     respawn: bool = True,
     model_axis: str = "model",
     batch_axes: Tuple[str, ...] = ("data",),
+    touch_bits: int = 0,
 ) -> Tuple[PPRIndex, dict]:
     """Pod-scale offline preprocessing: the full-index build under a mesh.
 
@@ -480,13 +544,15 @@ def build_index_sharded(
         od = np.concatenate([od, np.zeros(n_pad - n, np.int32)])
     step = _cached_sharded_build_step(
         cfg, mesh, r, l, sketch_l, n, max_steps, compact_every,
-        source_batch, respawn,
+        source_batch, respawn, touch_bits,
     )
     with mesh:
-        values, indices, kept_rows, dropped_rows = step(
+        out = step(
             jnp.asarray(rp), jnp.asarray(np.asarray(graph.col_idx, np.int32)),
             jnp.asarray(od), key,
         )
+    values, indices, kept_rows, dropped_rows = out[:4]
+    touch = out[4] if touch_bits else None
     kept, dropped = jax.device_get(
         (jnp.sum(kept_rows), jnp.sum(dropped_rows))
     )
@@ -510,6 +576,9 @@ def build_index_sharded(
         drop_fraction=dropped / max(kept + dropped, 1e-12),
         nbytes=n_pad * l * 8,
     )
+    if touch_bits:
+        stats["touch"] = touch
+        stats["touch_bits"] = touch_bits
     return PPRIndex(values=values, indices=indices, l=l, n=n_pad), stats
 
 
@@ -536,6 +605,58 @@ class IndexPlan:
     t_online: int       # VERD iterations online
     index_bytes: int
     budget_bytes: int
+    walk_state_bytes: int = 0   # per-chunk walk/event state priced in
+    respawn: bool = True        # scheduling mode the plan was priced for
+
+
+# Walk-state pricing per slot: a live slot holds its cursor (int32) + alive
+# flag (bool); each scan round additionally materializes, per slot-step, the
+# two pre-drawn uniforms (2 x f32) and the stacked (af, pos, tf) event
+# columns (f32 + int32 + f32) the sketch folds consume.
+_SLOT_BYTES = 5
+_SLOT_STEP_BYTES = 20
+
+
+def walk_state_cost(
+    r: int,
+    *,
+    c: float = DEFAULT_C,
+    max_steps: int = 64,
+    compact_every: int = 8,
+    source_batch: int = 256,
+    respawn: bool = True,
+) -> dict:
+    """Schedule-derived device cost of one source chunk's walk pass.
+
+    Prices the *actual* static schedule the engine would run — respawn mode
+    (``respawn_schedule``: narrow fixed-width slots at ~100% occupancy) vs
+    decay mode (``compaction_schedule``: width starts at ``r``) — via
+    :func:`repro.core.walks.schedule_slot_area`, the formula
+    ``test_respawn_schedule_halves_device_work`` pins.  Returns per-row
+    ``slot_area`` (device slot-steps), the peak ``max_width``, the pass
+    ``total_steps``, and ``walk_state_bytes`` for a ``source_batch``-row
+    chunk.
+    """
+    if r <= 0:
+        return dict(max_width=0, slot_area=0, total_steps=0,
+                    walk_state_bytes=0)
+    if respawn:
+        widths, total_steps = respawn_schedule(
+            r, c=c, max_steps=max_steps, compact_every=compact_every)
+    else:
+        widths = compaction_schedule(
+            r, c=c, max_steps=max_steps, compact_every=compact_every)
+        total_steps = max_steps
+    area = schedule_slot_area(widths, total_steps, compact_every)
+    w_max = max(widths)
+    per_slot = _SLOT_BYTES + _SLOT_STEP_BYTES * min(compact_every,
+                                                    total_steps)
+    return dict(
+        max_width=w_max,
+        slot_area=area,
+        total_steps=total_steps,
+        walk_state_bytes=int(source_batch * w_max * per_slot),
+    )
 
 
 def plan_for_budget(
@@ -544,14 +665,42 @@ def plan_for_budget(
     *,
     c: float = DEFAULT_C,
     bytes_per_entry: int = 8,
+    max_steps: int = 64,
+    compact_every: int = 8,
+    source_batch: int = 256,
+    respawn: bool = True,
 ) -> IndexPlan:
     """Choose (R, L, T) for a memory budget.
 
-    ``L = budget / (n * 8B)``; an MCFP vector from ``R`` walks has ``<= R/c``
-    support, so ``R = floor(c * L)`` saturates the width; the online
-    iteration count interpolates the paper's measured (R -> T) table.
+    An MCFP vector from ``R`` walks has ``<= R/c`` support, so ``R =
+    floor(c * L)`` saturates the width; the online iteration count
+    interpolates the paper's measured (R -> T) table.  ``L`` is the largest
+    width whose *total* device footprint fits: index bytes ``n * L * 8``
+    plus the walk-state bytes of one build chunk at the schedule the engine
+    would actually run (:func:`walk_state_cost`) — respawn mode's narrow
+    fixed-width slots (the default) afford a larger ``R`` at the same
+    budget than decay-mode pricing, which scales with ``w_max = R``.
     """
-    l = max(int(budget_bytes // (max(n, 1) * bytes_per_entry)), 0)
+    def state_bytes(l: int) -> int:
+        return walk_state_cost(
+            int(c * l), c=c, max_steps=max_steps,
+            compact_every=compact_every, source_batch=source_batch,
+            respawn=respawn,
+        )["walk_state_bytes"]
+
+    def fits(l: int) -> bool:
+        return n * bytes_per_entry * l + state_bytes(l) <= budget_bytes
+
+    # both cost terms are monotone in l: binary-search the largest feasible
+    # width, starting from the index-only cap
+    lo, hi = 0, max(int(budget_bytes // (max(n, 1) * bytes_per_entry)), 0)
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    l = lo
     r = int(c * l)
     t = 7
     for r_ref, t_ref in _PAPER_T_FOR_R:
@@ -560,21 +709,45 @@ def plan_for_budget(
     return IndexPlan(
         r=r, l=l, t_online=t,
         index_bytes=n * l * bytes_per_entry, budget_bytes=budget_bytes,
+        walk_state_bytes=state_bytes(l), respawn=bool(respawn),
     )
 
 
 def preprocessing_cost_model(
-    n: int, r: int, *, c: float = DEFAULT_C, step_rate: float = 5e8
+    n: int,
+    r: int,
+    *,
+    c: float = DEFAULT_C,
+    step_rate: float = 5e8,
+    max_steps: int = 64,
+    compact_every: int = 8,
+    source_batch: int = 256,
+    respawn: bool = True,
 ) -> dict:
     """Analytic preprocessing cost (paper Table 2 extrapolation).
 
     Total walk positions ~ n*R/c; ``step_rate`` is positions/sec for the
     bulk engine (fitted from measured small-graph runs by the benchmark).
-    Index size is n*min(R/c, L)*8 bytes before compression.
+    Index size is n*min(R/c, L)*8 bytes before compression.  Device-side
+    cost is additionally priced at the *schedule* the engine runs
+    (:func:`walk_state_cost`): ``slot_positions`` are the device slot-steps
+    of the full sweep, ``slot_occupancy`` how many of those slot-steps move
+    a live walk (respawn mode ~doubles it), ``walk_state_bytes`` the
+    per-chunk walk/event state the memory planner charges.
     """
     positions = n * r / c
+    sc = walk_state_cost(
+        r, c=c, max_steps=max_steps, compact_every=compact_every,
+        source_batch=source_batch, respawn=respawn,
+    )
+    slot_positions = n * sc["slot_area"]
     return dict(
         walk_positions=positions,
         est_seconds=positions / step_rate,
         index_bytes_uncapped=int(n * (r / c) * 8),
+        respawn=bool(respawn),
+        max_slot_width=sc["max_width"],
+        slot_positions=slot_positions,
+        slot_occupancy=positions / max(slot_positions, 1),
+        walk_state_bytes=sc["walk_state_bytes"],
     )

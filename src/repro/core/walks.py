@@ -200,6 +200,12 @@ class SparseWalkCounts:
     truncated: jax.Array
     fp_dropped: jax.Array
     ep_dropped: jax.Array
+    # bool[rows, touch_bits] per-row "walks-through" Bloom filter over every
+    # *counted* position (None unless ``touch_bits > 0``): the row's walks
+    # only ever step *from* counted positions, so if no member vertex's
+    # out-neighborhood changed, the row re-simulates bit-identically on the
+    # updated graph — the invalidation sketch of ``core/updates.py``.
+    touch: Optional[jax.Array] = None
 
 
 def compaction_schedule(
@@ -313,6 +319,51 @@ def respawn_schedule(
     )
     widths = (w0,) * launch_rounds + drain
     return widths, launch_rounds * compact_every + drain_steps
+
+
+def schedule_slot_area(
+    widths: Tuple[int, ...], total_steps: int, compact_every: int = 8
+) -> int:
+    """Device slot-steps one source row spends on one pass of a schedule.
+
+    Round ``j`` runs at width ``w_j`` for ``min(compact_every, total_steps -
+    t0_j)`` steps (the last round may be ragged), so the area is
+    ``sum_j w_j * steps_j`` — the quantity
+    ``test_respawn_schedule_halves_device_work`` pins and the respawn-aware
+    cost model (``index.preprocessing_cost_model``) prices walk state with.
+    """
+    area, t0 = 0, 0
+    for w in widths:
+        steps = min(compact_every, total_steps - t0)
+        if steps <= 0:
+            break
+        area += w * steps
+        t0 += steps
+    return area
+
+
+TOUCH_HASHES = 4
+
+
+def touch_hash_bits(
+    vertices: jax.Array, n_bits: int, k: int = TOUCH_HASHES
+) -> jax.Array:
+    """Bloom bit positions of each vertex id: ``vertices.shape + (k,)`` int32.
+
+    ``k`` independent streams of a uint32 avalanche mix (fmix32 over the id
+    xor a per-hash odd constant), reduced mod ``n_bits``.  Pure jnp so the
+    walk engine can record bits on-device and ``core/updates.py`` can query
+    membership with the *same* function on host arrays.
+    """
+    v = jnp.asarray(vertices).astype(jnp.uint32)
+    outs = []
+    for j in range(k):
+        h = v ^ jnp.uint32((2 * j + 1) * 0x9E3779B9 & 0xFFFFFFFF)
+        h = (h ^ (h >> 16)) * jnp.uint32(0x85EBCA6B)
+        h = (h ^ (h >> 13)) * jnp.uint32(0xC2B2AE35)
+        h = h ^ (h >> 16)
+        outs.append((h % jnp.uint32(n_bits)).astype(jnp.int32))
+    return jnp.stack(outs, axis=-1)
 
 
 def sample_edge_offsets(u: jax.Array, deg: jax.Array) -> jax.Array:
@@ -446,7 +497,7 @@ class _EventSketch:
     static_argnames=(
         "r", "l", "ep_l", "c", "max_steps", "compact_every", "margin",
         "fold_width", "use_kernel", "kernel_interpret", "respawn",
-        "respawn_width",
+        "respawn_width", "touch_bits",
     ),
 )
 def simulate_walks_sparse(
@@ -466,6 +517,7 @@ def simulate_walks_sparse(
     kernel_interpret: bool = True,
     respawn: bool = False,
     respawn_width: int = 0,
+    touch_bits: int = 0,
 ) -> SparseWalkCounts:
     """Run ``r`` walks per source through the compacted sparse-sketch engine.
 
@@ -502,6 +554,15 @@ def simulate_walks_sparse(
     ``max_steps`` caps the *drain* tail (the per-walk cap is enforced by
     the pass length rather than per slot; the geometric tail beyond it is
     the same ``(1-c)^t`` mass either way).
+
+    ``touch_bits > 0`` additionally records a per-row Bloom filter
+    (``bool[rows, touch_bits]``, :func:`touch_hash_bits` with
+    ``TOUCH_HASHES`` hashes) over every counted position — the reverse
+    "walks-through" sketch incremental index maintenance queries to find
+    the rows an edge update invalidates.  Bloom membership has no false
+    negatives, so a row whose filter misses every touched vertex is
+    provably bit-stable under the update; false positives only cause
+    harmless extra repair.
     """
     rows = sources.shape[0]
     n = graph.n
@@ -537,6 +598,16 @@ def simulate_walks_sparse(
     moves = jnp.zeros((rows,), jnp.float32)
     walks_done = jnp.zeros((rows,), jnp.float32)
     truncated = jnp.zeros((rows,), jnp.float32)
+    track_touch = touch_bits > 0
+    touch = jnp.zeros((rows, touch_bits), bool) if track_touch else None
+    _touch_rows = jnp.arange(rows, dtype=jnp.int32)[:, None, None]
+
+    def record_touch(tch, ev_i, ev_live):
+        # set the k bloom bits of every live event's vertex; dead events are
+        # parked at bit index ``touch_bits`` and dropped by the scatter
+        bits = touch_hash_bits(ev_i, touch_bits)
+        bits = jnp.where(ev_live[..., None], bits, touch_bits)
+        return tch.at[_touch_rows, bits].set(True, mode="drop")
 
     def step_body(carry, xs):
         cursors, alive, quota, moves, walks_done = carry
@@ -603,6 +674,8 @@ def simulate_walks_sparse(
         )
         fp.add(per_row(vis_w), per_row(vis_i))
         ep.add(per_row(term_w), per_row(vis_i))
+        if track_touch:
+            touch = record_touch(touch, per_row(vis_i), per_row(vis_w) > 0)
         t0 += steps
 
     # step-budget cap: survivors' current position is the endpoint (the
@@ -622,6 +695,8 @@ def simulate_walks_sparse(
         truncated = truncated + q_rem
         fp.add(q_rem[:, None], src2d)
         ep.add(q_rem[:, None], src2d)
+        if track_touch:
+            touch = record_touch(touch, src2d, q_rem[:, None] > 0)
     fp.flush()
     ep.flush()
     return SparseWalkCounts(
@@ -636,4 +711,5 @@ def simulate_walks_sparse(
         truncated=truncated,
         fp_dropped=fp.dropped,
         ep_dropped=ep.dropped,
+        touch=touch,
     )

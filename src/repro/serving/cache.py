@@ -96,6 +96,11 @@ class AnswerCache:
         self.stats: Dict[str, int] = dict(
             hits=0, misses=0, evictions=0, invalidated=0,
         )
+        # bumped whenever cached semantics change (invalidate / clear /
+        # an index update): in-flight batches dispatched under an older
+        # epoch must not be absorbed (the invalidate-vs-in-flight race —
+        # see ServingPipeline's epoch stamping and PPRService._absorb)
+        self.epoch: int = 0
 
     @property
     def enabled(self) -> bool:
@@ -148,15 +153,50 @@ class AnswerCache:
         doomed: Set[CacheKey] = set()
         for v in vertices:
             doomed |= self._by_vertex.get(int(v), set())
+        removed = 0
         for key in doomed:
-            self._data.pop(key, None)
+            # count only entries actually live in the LRU map: a reverse-
+            # index entry without a live answer (were the index ever to
+            # drift) must not inflate the staleness ledger
+            if self._data.pop(key, None) is not None:
+                removed += 1
             self._unindex(key)
-        self.stats["invalidated"] += len(doomed)
-        return len(doomed)
+        self.stats["invalidated"] += removed
+        self.epoch += 1
+        return removed
 
     def clear(self) -> None:
         self._data.clear()
         self._by_vertex.clear()
+        self.epoch += 1
+
+    def reverse_index_entries(self) -> int:
+        """Total ``(vertex -> key)`` links — must equal the live entries'
+        seed-set sizes (see :meth:`check_integrity`)."""
+        return sum(len(ks) for ks in self._by_vertex.values())
+
+    def check_integrity(self) -> None:
+        """Assert the reverse index exactly mirrors the live entries.
+
+        Every live key contributes one bucket link per seed vertex and
+        nothing else: ``sum(len(bucket)) == sum(len(key.seeds))``, no
+        empty buckets linger, and every bucket link points at a live
+        entry that really contains the bucket's vertex.  O(entries * S);
+        called from ``PPRService.snapshot_stats`` so churn regressions
+        (eviction or invalidation leaving stale links) fail loudly.
+        """
+        live_links = sum(len(key[0]) for key in self._data)
+        got = self.reverse_index_entries()
+        assert got == live_links, (
+            f"reverse index holds {got} links, live entries imply "
+            f"{live_links}")
+        for v, ks in self._by_vertex.items():
+            assert ks, f"empty bucket left behind for vertex {v}"
+            for key in ks:
+                assert key in self._data, (
+                    f"stale bucket link {key} for vertex {v}")
+                assert v in key[0], (
+                    f"bucket {v} links key {key} that does not seed it")
 
     def _unindex(self, key: CacheKey) -> None:
         for v in key[0]:

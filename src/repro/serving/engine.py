@@ -61,13 +61,25 @@ class PPRService:
     """
 
     def __init__(self, graph: Graph, index: Optional[PPRIndex],
-                 cfg: Optional[ServiceConfig] = None, clock=None):
+                 cfg: Optional[ServiceConfig] = None, clock=None,
+                 maintainer=None):
         self.cfg = cfg or ServiceConfig()
+        # maintainer: a core.updates.MaintainableIndex — enables
+        # apply_updates() (incremental index repair + exact cache
+        # invalidation).  With index=None the maintainer's index serves.
+        self.maintainer = maintainer
+        if index is None and maintainer is not None:
+            index = maintainer.index
+        self.graph = graph
         self.engine = BatchQueryEngine(graph, index, self.cfg.query)
         self.buffer = RequestBuffer(self.cfg.batching, clock=clock)
         self.clock = clock or time.monotonic
+        # the cache exists before the pipeline so dispatches can stamp its
+        # epoch onto their tickets (invalidate-vs-in-flight fencing)
+        self.cache = AnswerCache(self.cfg.cache)
         self.pipeline = ServingPipeline(
-            self.engine, self.buffer, self.cfg.pipeline, clock=self.clock
+            self.engine, self.buffer, self.cfg.pipeline, clock=self.clock,
+            epoch_fn=lambda: self.cache.epoch,
         )
         # which execution the engine routed to (docs/query_path.md): part of
         # the serving telemetry so capacity planning can see Q x K vs Q x n
@@ -86,12 +98,12 @@ class PPRService:
         self.stats: Dict[str, float] = dict(
             served=0, batches=0, total_latency=0.0, max_latency=0.0,
             pad_rows=0, first_batch_service_s=0.0, cache_served=0,
+            updates_applied=0, rows_repaired=0, cache_stale_drops=0,
         )
         # answer cache (serving/cache.py): consulted at submit, filled at
         # absorb.  _pending_cached holds hit answers awaiting the next
         # poll(); _inflight_keys maps computed requests back to their
         # canonical key so their answers populate the cache.
-        self.cache = AnswerCache(self.cfg.cache)
         self._pending_cached: List[Tuple[int, int, str, float, Tuple]] = []
         self._inflight_keys: Dict[int, Tuple] = {}
 
@@ -148,8 +160,47 @@ class PPRService:
 
     def invalidate(self, vertices: Iterable[int]) -> int:
         """Drop cached answers whose seed sets touch ``vertices`` (the hook
-        an index/graph update calls); returns entries removed."""
+        an index/graph update calls); returns entries removed.  Also bumps
+        the cache epoch, so in-flight batches dispatched before this call
+        are not absorbed into the cache when harvested."""
         return self.cache.invalidate(vertices)
+
+    def apply_updates(self, inserts=None, deletes=None) -> dict:
+        """Apply an edge-update batch to the live graph + index.
+
+        Requires the service to have been constructed with a
+        ``maintainer`` (``core.updates.build_maintainable_index``).  Runs
+        incremental repair (``core.updates.apply_updates``), swaps the
+        engine onto the updated graph/index, then invalidates exactly the
+        dirtied fingerprint rows in the answer cache — which also bumps
+        the cache epoch, fencing out any batch still in flight on the old
+        index.  Returns the repair report plus ``cache_invalidated``.
+        """
+        if self.maintainer is None:
+            raise ValueError(
+                "apply_updates requires a maintainer "
+                "(build the index via core.updates.build_maintainable_index "
+                "and pass it to PPRService(..., maintainer=...))")
+        from repro.core import updates as updates_mod
+
+        new_graph, new_m, report = updates_mod.apply_updates(
+            self.maintainer, self.graph, inserts=inserts, deletes=deletes)
+        self.graph = new_graph
+        self.maintainer = new_m
+        self.engine = BatchQueryEngine(new_graph, new_m.index, self.cfg.query)
+        self.pipeline.engine = self.engine
+        self.frontier_path = (
+            "sparse" if self.engine.uses_sparse_path() else "dense")
+        self.answer_k = self.engine.effective_top_k
+        self.index_rows = new_m.index.n
+        # exact invalidation: an answer is stale iff one of its seeds' rows
+        # was repaired.  Always runs (even for an empty dirty set) so the
+        # epoch bump fences in-flight batches computed on the old index.
+        report["cache_invalidated"] = self.cache.invalidate(
+            report["dirty_row_ids"])
+        self.stats["updates_applied"] += 1
+        self.stats["rows_repaired"] += report["dirty_rows"]
+        return report
 
     @property
     def in_flight(self) -> int:
@@ -219,7 +270,16 @@ class PPRService:
                 ))
                 key = self._inflight_keys.pop(r.request_id, None)
                 if key is not None:
-                    self.cache.put(key, batch.indices[i], batch.values[i])
+                    # invalidate-vs-in-flight fence: a batch dispatched
+                    # before an invalidate/apply_updates carries an older
+                    # cache epoch — its answer was computed on the old
+                    # index, so it is returned to the client (the request
+                    # predates the update) but never written into the
+                    # cache, where it would outlive the invalidation.
+                    if batch.epoch == self.cache.epoch:
+                        self.cache.put(key, batch.indices[i], batch.values[i])
+                    else:
+                        self.stats["cache_stale_drops"] += 1
                 self.stats["served"] += 1
                 self.stats["total_latency"] += lat
                 self.stats["max_latency"] = max(self.stats["max_latency"], lat)
@@ -263,6 +323,12 @@ class PPRService:
         s["cache_hit_rate"] = self.cache.stats["hits"] / max(
             self.cache.stats["hits"] + self.cache.stats["misses"], 1
         )
+        s["cache_epoch"] = self.cache.epoch
+        s["cache_reverse_entries"] = self.cache.reverse_index_entries()
+        # eviction/invalidation hygiene: the reverse index must exactly
+        # mirror the live entries — asserts here so any churn regression
+        # surfaces in every stats snapshot, not just dedicated tests
+        self.cache.check_integrity()
         return s
 
     def run_closed_loop(self, vertices: Sequence[int]) -> Tuple[List[Answer], dict]:

@@ -68,6 +68,12 @@ class PendingBatch:
     values: jax.Array             # [padded, k] f32, possibly unfinished
     indices: jax.Array            # [padded, k] i32
     dispatched_at: float
+    # cache epoch at dispatch time (AnswerCache.epoch via the pipeline's
+    # epoch_fn).  A ticket computed under an older epoch predates some
+    # invalidate()/apply_updates() and must not be absorbed into the cache
+    # — the invalidate-vs-in-flight race fix.  Answers are still correct to
+    # *return* (the request was accepted before the update).
+    epoch: int = 0
 
     def is_ready(self) -> bool:
         """Non-blocking completion probe via ``jax.Array.is_ready``."""
@@ -87,6 +93,7 @@ class CompletedBatch:
     indices: np.ndarray           # [n_real, k]
     dispatched_at: float
     completed_at: float
+    epoch: int = 0                # cache epoch stamped at dispatch
 
 
 class CompletionQueue:
@@ -132,11 +139,14 @@ class ServingPipeline:
     """
 
     def __init__(self, engine, buffer: RequestBuffer, cfg: PipelineConfig,
-                 clock: Optional[Callable[[], float]] = None):
+                 clock: Optional[Callable[[], float]] = None,
+                 epoch_fn: Optional[Callable[[], int]] = None):
         self.engine = engine
         self.buffer = buffer
         self.cfg = cfg
         self.clock = clock or time.monotonic
+        # reads the cache epoch at dispatch time (None = always epoch 0)
+        self.epoch_fn = epoch_fn
         self.queue = CompletionQueue(cfg.depth)
         self._seq = 0
         self.stats: Dict[str, float] = dict(
@@ -240,7 +250,8 @@ class ServingPipeline:
                 verts, key=self.engine.dispatch_key(self._seq), **kwargs
             )
         ticket = PendingBatch(
-            self._seq, requests, padded, vals, idx, self.clock()
+            self._seq, requests, padded, vals, idx, self.clock(),
+            epoch=self.epoch_fn() if self.epoch_fn is not None else 0,
         )
         self._seq += 1
         self.queue.push(ticket)
@@ -290,5 +301,5 @@ class ServingPipeline:
             ).append((ticket.values, ticket.indices))
         return CompletedBatch(
             ticket.seq, ticket.requests, ticket.padded, vals, idx,
-            ticket.dispatched_at, self.clock(),
+            ticket.dispatched_at, self.clock(), epoch=ticket.epoch,
         )

@@ -294,3 +294,156 @@ def test_cache_off_by_default(graph, index):
     assert not a[0].cached
     s = svc.snapshot_stats()
     assert s["cache_served"] == 0 and s["cache_capacity"] == 0
+
+
+# ---------------------------------------------------------------------------
+# reverse-index hygiene + epoch fencing (ISSUE 8 satellites)
+# ---------------------------------------------------------------------------
+
+def test_epoch_bumps_on_invalidate_and_clear():
+    c = AnswerCache(CacheConfig(capacity=4))
+    assert c.epoch == 0
+    c.put(_key(1), *_ans(1))
+    c.get(_key(1))
+    assert c.epoch == 0                       # reads/writes never fence
+    assert c.invalidate([1]) == 1
+    assert c.epoch == 1
+    assert c.invalidate([99]) == 0            # nothing removed...
+    assert c.epoch == 2                       # ...but the fence still moves
+    c.clear()
+    assert c.epoch == 3
+
+
+def test_invalidate_counts_only_live_entries():
+    c = AnswerCache(CacheConfig(capacity=4))
+    c.put(_key(1, 2), *_ans(1))
+    c.put(_key(2, 3), *_ans(2))
+    assert c.invalidate([2]) == 2             # both entries seed vertex 2
+    assert c.stats["invalidated"] == 2
+    assert c.invalidate([2]) == 0             # idempotent: nothing doubles
+    assert c.stats["invalidated"] == 2
+    c.check_integrity()
+
+
+def test_reverse_index_integrity_under_churn():
+    """Random put/get/invalidate churn against a tiny capacity (so LRU
+    eviction fires constantly): after every operation the reverse index
+    must exactly mirror the live entries — the eviction/invalidation
+    hygiene assertion snapshot_stats runs in production."""
+    rng = np.random.default_rng(3)
+    c = AnswerCache(CacheConfig(capacity=6))
+    c.check_integrity()
+    for step in range(400):
+        verts = rng.integers(0, 10, size=int(rng.integers(1, 4)))
+        op = int(rng.integers(0, 6))
+        if op <= 2:
+            c.put(_key(*verts), *_ans(step))
+        elif op == 3:
+            c.get(_key(*verts))
+        elif op == 4:
+            c.invalidate(verts)
+        else:
+            c.put(_key(*verts), *_ans(step))  # refresh an existing key
+        c.check_integrity()
+    assert c.stats["evictions"] > 0
+    assert c.stats["invalidated"] > 0
+    assert c.reverse_index_entries() == sum(len(k[0]) for k in c._data)
+
+
+def test_check_integrity_detects_injected_corruption():
+    c = AnswerCache(CacheConfig(capacity=4))
+    c.put(_key(1, 2), *_ans(1))
+    c.check_integrity()
+    c._by_vertex[5] = {_key(1, 2)}            # bucket for a non-seed vertex
+    with pytest.raises(AssertionError):
+        c.check_integrity()
+
+
+# ---------------------------------------------------------------------------
+# invalidate-vs-in-flight race (epoch fencing through the pipeline)
+# ---------------------------------------------------------------------------
+
+class _LatchArr:
+    """Numpy result wrapper whose readiness is an injected latch: lets a
+    test hold a dispatched batch 'on the device' while the cache mutates,
+    then release it — deterministic completion-order injection."""
+
+    def __init__(self, arr, latch):
+        self._arr = np.asarray(arr)
+        self._latch = latch
+
+    def is_ready(self):
+        return self._latch["ready"]
+
+    def __getitem__(self, s):
+        return self._arr[s]
+
+
+class _LatchEngine:
+    def __init__(self, k, latch):
+        self.k, self.latch = k, latch
+
+    def dispatch_key(self, seq):
+        return seq
+
+    def query_topk_async(self, verts, *, key=None, **kw):
+        q = len(verts)
+        vals = np.tile(np.linspace(1.0, 0.1, self.k, dtype=np.float32),
+                       (q, 1))
+        idx = np.tile(np.arange(self.k, dtype=np.int32), (q, 1))
+        return _LatchArr(vals, self.latch), _LatchArr(idx, self.latch)
+
+
+def _latched_service(graph, index, latch):
+    cfg = ServiceConfig(
+        query=QueryConfig(mode="powerwalk", t_iterations=2, top_k=4,
+                          frontier_k=16, max_seeds=4),
+        batching=BatchingConfig(max_batch=1),
+        pipeline=PipelineConfig(depth=2, reuse_buffers=False),
+        cache=CacheConfig(capacity=8),
+    )
+    svc = PPRService(graph, index, cfg, clock=lambda: 0.0)
+    svc.pipeline.engine = _LatchEngine(4, latch)
+    return svc
+
+
+def test_invalidate_while_in_flight_drops_stale_absorb(graph, index):
+    """The race: a batch is dispatched, then the entry's vertices are
+    invalidated *before* the batch completes.  The harvested answer (which
+    was computed on the pre-update index) must be returned to its client
+    but never absorbed into the cache, where it would outlive the
+    invalidation as a stale hit."""
+    latch = {"ready": False}
+    svc = _latched_service(graph, index, latch)
+    svc.submit(7)
+    assert svc.poll() == [] and svc.in_flight == 1  # held on the "device"
+    svc.invalidate([7])                   # epoch 0 -> 1 while in flight
+    latch["ready"] = True
+    ans = svc.poll(force=True)
+    assert len(ans) == 1 and not ans[0].cached      # client still answered
+    assert svc.stats["cache_stale_drops"] == 1
+    assert len(svc.cache) == 0                      # stale bytes not cached
+    # recomputation under the new epoch caches normally again
+    svc.submit(7)
+    assert not svc.poll(force=True)[0].cached
+    assert len(svc.cache) == 1
+    svc.submit(7)
+    assert svc.poll(force=True)[0].cached
+    s = svc.snapshot_stats()
+    assert s["cache_epoch"] == 1 and s["cache_stale_drops"] == 1
+
+
+def test_in_flight_batch_absorbed_without_invalidate(graph, index):
+    """Control path: same injected completion order, no invalidate — the
+    late-completing batch is absorbed normally."""
+    latch = {"ready": False}
+    svc = _latched_service(graph, index, latch)
+    svc.submit(7)
+    assert svc.poll() == [] and svc.in_flight == 1
+    latch["ready"] = True
+    ans = svc.poll(force=True)
+    assert len(ans) == 1
+    assert svc.stats["cache_stale_drops"] == 0
+    assert len(svc.cache) == 1
+    svc.submit(7)
+    assert svc.poll(force=True)[0].cached
