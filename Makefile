@@ -3,17 +3,25 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-parity test-kernels bench bench-smoke bench-walks \
-	bench-preprocess-dist bench-serving bench-serving-smoke bench-cache \
-	bench-cache-smoke bench-updates bench-updates-smoke
+.PHONY: test test-fast test-faults test-parity test-kernels bench bench-smoke \
+	bench-walks bench-preprocess-dist bench-serving bench-serving-smoke \
+	bench-cache bench-cache-smoke bench-updates bench-updates-smoke
 
 # tier-1 verify: the full suite (ROADMAP.md)
 test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
-# quick subset: skips tests marked `slow` (see pytest.ini)
+# quick subset: skips tests marked `slow` (see pytest.ini) — still includes
+# the fast half of the crash-safety suite (in-process fault injection)
 test-fast:
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+# crash-safety suite: checkpoint store unit tests + resumable-build bitwise
+# parity, incl. the slow subprocess SIGKILL sweep (docs/indexing_path.md,
+# "Crash safety & resume")
+test-faults:
+	PYTHONPATH=src $(PY) -m pytest -x -q \
+		tests/test_checkpoint.py tests/test_checkpoint_resume.py
 
 # cross-path parity: distributed-sparse vs single-device-sparse vs dense
 # oracle, incl. the slow 4-shard subprocess half (docs/query_path.md)

@@ -695,6 +695,8 @@ def make_sparse_index_build_step(
     source_batch: int = 256,
     respawn: bool = False,
     touch_bits: int = 0,
+    chunk_start: int = 0,
+    chunk_count: Optional[int] = None,
 ):
     """The whole offline index build as one sharded device computation.
 
@@ -728,6 +730,14 @@ def make_sparse_index_build_step(
     Bloom filter ``bool[n, touch_bits]`` (``P(model, None)`` like the index
     rows), OR-merged across data replicas with a psum and zeroed on pad
     rows — the invalidation sketch ``core/updates.py`` consumes.
+
+    ``chunk_start``/``chunk_count`` restrict the sweep to a contiguous
+    *per-shard* chunk range (defaults: the whole grid) — the checkpointed
+    ``build_index_sharded`` segments the scan at commit boundaries with
+    these, and because each chunk's key is positional
+    (``fold_in(key, offset)``) a segmented sweep reproduces the full sweep
+    bit for bit.  Outputs then cover ``chunk_count * source_batch`` rows
+    per shard (``P(model, None)`` as before).
     """
     from repro.core.index import normalize_sketch_to_index_rows
     from repro.core.walks import simulate_walks_sparse
@@ -748,6 +758,16 @@ def make_sparse_index_build_step(
         )
     r_local = r // n_split
     n_chunks = ns // source_batch
+    if chunk_count is None:
+        chunk_count = n_chunks - chunk_start
+    if not (0 <= chunk_start
+            and chunk_count >= 1
+            and chunk_start + chunk_count <= n_chunks):
+        raise ValueError(
+            f"chunk range [{chunk_start}, {chunk_start + chunk_count}) "
+            f"outside the [0, {n_chunks}) per-shard chunk grid"
+        )
+    rows_out = chunk_count * source_batch
 
     def local_fn(row_ptr, col_idx, out_deg, key):
         me = jax.lax.axis_index(model)
@@ -800,15 +820,16 @@ def make_sparse_index_build_step(
             return carry, out
 
         _, scanned = jax.lax.scan(
-            chunk_body, 0, jnp.arange(n_chunks, dtype=jnp.int32)
+            chunk_body, 0,
+            chunk_start + jnp.arange(chunk_count, dtype=jnp.int32),
         )
         vals, idxs, kept, dropped = scanned[:4]
         out = (
-            vals.reshape(ns, l), idxs.reshape(ns, l),
-            kept.reshape(ns), dropped.reshape(ns),
+            vals.reshape(rows_out, l), idxs.reshape(rows_out, l),
+            kept.reshape(rows_out), dropped.reshape(rows_out),
         )
         if touch_bits:
-            out = out + (scanned[4].reshape(ns, touch_bits),)
+            out = out + (scanned[4].reshape(rows_out, touch_bits),)
         return out
 
     in_specs = (P(None), P(None), P(None), P())   # graph + key replicated

@@ -115,6 +115,23 @@ class Graph:
         return a
 
 
+def graph_fingerprint(graph: Graph) -> int:
+    """crc32 over the CSR topology (``row_ptr`` + ``col_idx`` bytes).
+
+    The resume guard of the crash-safe index build: a checkpoint commits
+    this fingerprint, and a resumed build refuses to continue on a graph
+    whose adjacency differs — per-chunk RNG streams replay bit-identically
+    only on the exact topology they were drawn for.
+    """
+    import zlib
+
+    crc = zlib.crc32(np.ascontiguousarray(
+        np.asarray(graph.row_ptr, np.int64)).tobytes())
+    crc = zlib.crc32(np.ascontiguousarray(
+        np.asarray(graph.col_idx, np.int64)).tobytes(), crc)
+    return crc & 0xFFFFFFFF
+
+
 def _edge_pairs(edges) -> np.ndarray:
     """Coerce an edge batch to an int64 ``[k, 2]`` array (empty ok)."""
     if edges is None:

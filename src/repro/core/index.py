@@ -18,7 +18,8 @@ import dataclasses
 import functools
 import math
 import warnings
-from typing import Iterable, Optional, Tuple
+import zlib
+from typing import Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -26,10 +27,11 @@ import numpy as np
 
 from repro.core import frontier as frontier_mod
 from repro.core import mcfp
-from repro.core.graph import Graph
-from repro.core.walks import (DEFAULT_C, compaction_schedule,
+from repro.core.graph import Graph, graph_fingerprint
+from repro.core.walks import (DEFAULT_C, BuildLedger, compaction_schedule,
                               respawn_schedule, schedule_slot_area,
                               simulate_walks_sparse)
+from repro.distributed.checkpoint import (Checkpointer, serialize_key)
 
 
 @jax.tree_util.register_dataclass
@@ -224,6 +226,11 @@ def build_index(
     r_splits: int = 1,
     respawn: bool = False,
     touch_bits: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 8,
+    resume: bool = False,
+    checkpoint_keep: int = 3,
+    fault_plan=None,
 ) -> Tuple[PPRIndex, dict]:
     """Offline preprocessing: MCFP for every vertex, truncated to top-L.
 
@@ -243,12 +250,28 @@ def build_index(
     ``stats["duplicate_sources"]`` and the build runs over the sorted
     unique set.
 
+    **Crash safety** (sparse engine only): with ``checkpoint_dir`` set the
+    build commits, every ``checkpoint_every`` source chunks, the partial
+    index rows, the conservation ledger, the touch filters, and the
+    completed-chunk frontier through
+    :class:`repro.distributed.checkpoint.Checkpointer` (atomic rename,
+    per-shard checksums).  ``resume=True`` restores the newest *committed*
+    step — mid-write ``.tmp`` dirs are ignored, checksum-corrupted steps
+    fall back to the prior commit — verifies the build signature (graph
+    topology, key, chunk grid), and continues from the first incomplete
+    chunk.  Because per-chunk keys are positional (``fold_in(key, chunk
+    offset)``), a resumed build equals an uninterrupted one **bitwise**
+    (``tests/test_checkpoint_resume.py``).  ``fault_plan`` is the testing
+    seam of :mod:`repro.testing.faults`.
+
     Returns (index, stats) where stats reports the truncated tail mass —
     the accuracy cost of the memory budget.  All host syncs are deferred to
     one ``device_get`` at the end.
     """
     n = graph.n
     l = min(l, n)  # a row holds at most n entries (both engines rely on it)
+    if checkpoint_dir is not None and engine != "sparse":
+        raise ValueError("checkpointing requires engine='sparse'")
     if sources is None:
         # the default full sweep is unique by construction: skip the
         # O(n log n) host sort + copies the dedup would cost at scale
@@ -264,7 +287,9 @@ def build_index(
             graph, r, l, key, c=c, max_steps=max_steps,
             source_batch=source_batch, sources=sources,
             compact_every=compact_every, r_splits=r_splits, respawn=respawn,
-            touch_bits=touch_bits,
+            touch_bits=touch_bits, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every, resume=resume,
+            checkpoint_keep=checkpoint_keep, fault_plan=fault_plan,
         )
         stats["duplicate_sources"] = duplicate_sources
         return index, stats
@@ -325,6 +350,55 @@ def build_index(
     )
 
 
+def _make_build_checkpointer(
+    checkpoint_dir: Optional[str], checkpoint_every: int,
+    checkpoint_keep: int, fault_plan,
+) -> Optional[Checkpointer]:
+    if checkpoint_dir is None:
+        return None
+    if checkpoint_every < 1:
+        raise ValueError(f"checkpoint_every must be >= 1, got {checkpoint_every}")
+    return Checkpointer(
+        checkpoint_dir, keep=checkpoint_keep,
+        pre_commit=None if fault_plan is None else fault_plan.pre_commit,
+    )
+
+
+def _resume_build_state(
+    ckpt: Checkpointer, signature: dict,
+) -> Optional[Tuple[int, dict, dict]]:
+    """Restore the newest committed, checksum-verified build checkpoint.
+
+    Returns ``(next_chunk, tree, extra)`` or ``None`` (no usable step:
+    start from scratch).  A committed step whose *signature* differs is an
+    error — resuming a different build into this directory would splice
+    incompatible RNG streams; corrupted/mid-write steps were already
+    filtered by ``restore_latest``.
+    """
+    hit = ckpt.restore_latest()
+    if hit is None:
+        return None
+    step, tree, extra = hit
+    if extra.get("signature") != signature:
+        raise ValueError(
+            f"checkpoint at {ckpt.root} step {step} was written by a "
+            "different build (graph/key/chunk-grid signature mismatch); "
+            "refusing to resume"
+        )
+    return int(extra["next_chunk"]), tree, extra
+
+
+def _complete_stats(extra: dict, tree: dict, touch_bits: int) -> dict:
+    """Stats of a restored *complete* build checkpoint (json round-trip of
+    the floats is exact in Python 3)."""
+    stats = dict(extra["stats"])
+    stats["resumed_complete"] = True
+    if touch_bits:
+        stats["touch"] = jnp.asarray(tree["touch"])
+        stats["touch_bits"] = touch_bits
+    return stats
+
+
 def _build_index_sparse(
     graph: Graph,
     r: int,
@@ -339,13 +413,24 @@ def _build_index_sparse(
     r_splits: int = 1,
     respawn: bool = False,
     touch_bits: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 8,
+    resume: bool = False,
+    checkpoint_keep: int = 3,
+    fault_plan=None,
 ) -> Tuple[PPRIndex, dict]:
     """Streaming sparse build: ``SparseWalkCounts -> PPRIndex`` on device.
 
     ``sources`` must be unique (``build_index`` dedups before dispatch).
     ``touch_bits > 0`` additionally returns the per-row walks-through Bloom
     filter as ``stats["touch"]`` (``bool[n, touch_bits]``, zero rows for
-    unswept sources) — the invalidation sketch of ``core/updates.py``."""
+    unswept sources) — the invalidation sketch of ``core/updates.py``.
+
+    With ``checkpoint_dir`` the chunk loop commits its partial state every
+    ``checkpoint_every`` chunks (step number == chunks completed) and a
+    final ``complete=True`` step holding the assembled index; see
+    :func:`build_index` for the resume contract.
+    """
     n = graph.n
     l = min(l, n)
     # sketch headroom over the index width keeps the running top-L honest:
@@ -357,12 +442,74 @@ def _build_index_sparse(
     padded = np.concatenate(
         [sources, np.zeros(pad_rows, np.int32)]
     ) if pad_rows else sources
-    vals_chunks = []
-    idxs_chunks = []
-    kept_parts = []
-    dropped_parts = []
-    touch_chunks = []
-    for i in range(0, len(padded), source_batch):
+    n_chunks = len(padded) // source_batch
+
+    ckpt = _make_build_checkpointer(
+        checkpoint_dir, checkpoint_every, checkpoint_keep, fault_plan)
+    signature = None
+    if ckpt is not None:
+        signature = dict(
+            kind="build_index_sparse",
+            r=int(r), l=int(l), sketch_l=int(sketch_l), c=float(c),
+            max_steps=int(max_steps), compact_every=int(compact_every),
+            r_splits=int(r_splits), respawn=bool(respawn),
+            touch_bits=int(touch_bits), source_batch=int(source_batch),
+            n=int(n), n_src=int(n_src),
+            sources_crc=zlib.crc32(sources.tobytes()) & 0xFFFFFFFF,
+            graph_crc=graph_fingerprint(graph),
+            key=serialize_key(key),
+        )
+
+    vals_chunks: List = []
+    idxs_chunks: List = []
+    touch_chunks: List = []
+    ledger = BuildLedger()
+    start_chunk = 0
+    commits = 0
+    if ckpt is not None and resume:
+        restored = _resume_build_state(ckpt, signature)
+        if restored is not None:
+            start_chunk, tree, extra = restored
+            if extra.get("complete"):
+                index = PPRIndex(
+                    values=jnp.asarray(tree["vals"]),
+                    indices=jnp.asarray(tree["idxs"]), l=l, n=n,
+                )
+                return index, _complete_stats(extra, tree, touch_bits)
+            vals_chunks.append(tree["vals"])
+            idxs_chunks.append(tree["idxs"])
+            ledger = BuildLedger.restore(tree["kept"], tree["dropped"])
+            if touch_bits:
+                touch_chunks.append(tree["touch"])
+
+    def commit_partial(done: int) -> None:
+        nonlocal ledger, commits
+        kept_arr, dropped_arr = ledger.export()
+        tree = dict(
+            vals=np.asarray(jnp.concatenate(vals_chunks, axis=0)),
+            idxs=np.asarray(jnp.concatenate(idxs_chunks, axis=0)),
+            kept=kept_arr, dropped=dropped_arr,
+        )
+        if touch_bits:
+            tree["touch"] = np.asarray(jnp.concatenate(touch_chunks, axis=0))
+        ckpt.save(done, tree, dict(
+            signature=signature, complete=False,
+            next_chunk=done, n_chunks=n_chunks,
+        ))
+        commits += 1
+        # consolidate: the committed host arrays replace the per-chunk
+        # device arrays (concatenation is pure layout, so the final
+        # assembly stays bitwise identical) and cap the lists' growth
+        vals_chunks[:] = [tree["vals"]]
+        idxs_chunks[:] = [tree["idxs"]]
+        if touch_bits:
+            touch_chunks[:] = [tree["touch"]]
+        ledger = BuildLedger.restore(kept_arr, dropped_arr)
+
+    for ci in range(start_chunk, n_chunks):
+        if fault_plan is not None:
+            fault_plan.chunk_boundary(ci)
+        i = ci * source_batch
         chunk = jnp.asarray(padded[i : i + source_batch])
         real = min(source_batch, n_src - i)
         sub_key = jax.random.fold_in(key, i)
@@ -376,10 +523,13 @@ def _build_index_sparse(
         # never reach the index or the stats
         vals_chunks.append(vals[:real])
         idxs_chunks.append(idxs[:real])
-        kept_parts.append(jnp.sum(kept[:real]))
-        dropped_parts.append(jnp.sum(dropped[:real]))
+        ledger.append(jnp.sum(kept[:real]), jnp.sum(dropped[:real]))
         if touch_bits:
             touch_chunks.append(out[4][:real])
+        done = ci + 1
+        if ckpt is not None and done < n_chunks \
+                and done % checkpoint_every == 0:
+            commit_partial(done)
 
     touch = None
     if not n_src:  # empty sources: a valid all-zero index
@@ -406,14 +556,7 @@ def _build_index_sparse(
             touch = jnp.zeros((n, touch_bits), bool).at[src_dev].set(
                 jnp.concatenate(touch_chunks, axis=0)
             )
-    if kept_parts:
-        kept, dropped = jax.device_get(
-            (jnp.sum(jnp.stack(kept_parts)),
-             jnp.sum(jnp.stack(dropped_parts)))
-        )
-        kept, dropped = float(kept), float(dropped)
-    else:
-        kept = dropped = 0.0
+    kept, dropped = ledger.totals()
     stats = dict(
         r=r,
         l=l,
@@ -429,6 +572,21 @@ def _build_index_sparse(
         drop_fraction=dropped / max(kept + dropped, 1e-12),
         nbytes=n * l * 8,
     )
+    if ckpt is not None:
+        stats["checkpoint_commits"] = commits
+        stats["resumed_at_chunk"] = start_chunk
+        kept_arr, dropped_arr = ledger.export()
+        tree = dict(
+            vals=np.asarray(values), idxs=np.asarray(indices),
+            kept=kept_arr, dropped=dropped_arr,
+        )
+        if touch_bits:
+            tree["touch"] = np.asarray(touch)
+        ckpt.save(n_chunks, tree, dict(
+            signature=signature, complete=True,
+            next_chunk=n_chunks, n_chunks=n_chunks,
+            stats={k: v for k, v in stats.items() if k != "touch"},
+        ))
     if touch_bits:
         stats["touch"] = touch
         stats["touch_bits"] = touch_bits
@@ -438,17 +596,20 @@ def _build_index_sparse(
 @functools.lru_cache(maxsize=32)
 def _cached_sharded_build_step(
     cfg, mesh, r, l, sketch_l, real_n, max_steps, compact_every,
-    source_batch, respawn, touch_bits=0,
+    source_batch, respawn, touch_bits=0, chunk_start=0, chunk_count=None,
 ):
     """Jitted sharded-build step, memoized on its static config so repeated
     :func:`build_index_sharded` calls (benchmark sweeps, rebuild loops)
-    reuse one compilation instead of re-tracing the whole sweep."""
+    reuse one compilation instead of re-tracing the whole sweep.
+    ``chunk_start``/``chunk_count`` select a per-shard chunk segment (the
+    checkpointed build); the defaults sweep the whole grid."""
     from repro.core.distributed_engine import make_sparse_index_build_step
 
     return jax.jit(make_sparse_index_build_step(
         cfg, mesh, r=r, l=l, sketch_l=sketch_l, real_n=real_n,
         max_steps=max_steps, compact_every=compact_every,
         source_batch=source_batch, respawn=respawn, touch_bits=touch_bits,
+        chunk_start=chunk_start, chunk_count=chunk_count,
     ))
 
 
@@ -467,6 +628,11 @@ def build_index_sharded(
     model_axis: str = "model",
     batch_axes: Tuple[str, ...] = ("data",),
     touch_bits: int = 0,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 8,
+    resume: bool = False,
+    checkpoint_keep: int = 3,
+    fault_plan=None,
 ) -> Tuple[PPRIndex, dict]:
     """Pod-scale offline preprocessing: the full-index build under a mesh.
 
@@ -500,6 +666,19 @@ def build_index_sharded(
     (consumers only ever gather real rows; ``BatchQueryEngine`` accepts
     ``index.n >= graph.n``).  Stats mirror :func:`build_index` plus
     ``n``/``n_pad``/``shards``/``r_splits``.
+
+    **Crash safety.**  With ``checkpoint_dir`` the one-scan sweep is
+    segmented at per-shard chunk granularity: every ``checkpoint_every``
+    chunks the completed shard blocks (index rows, kept/dropped ledgers,
+    touch Bloom filters) commit atomically through
+    :class:`repro.distributed.checkpoint.Checkpointer`, and a final
+    ``complete=True`` step stores the assembled ``[n_pad, l]`` index.
+    Because chunk keys are positional (``fold_in(key, offset)``), the
+    segmented sweep — and any ``resume=True`` restart from the newest
+    committed, checksum-verified step — reproduces the uninterrupted build
+    bit for bit.  Restarting onto a different graph/key/mesh/chunk-grid is
+    refused (signature mismatch).  ``fault_plan`` fires its
+    ``chunk_boundary`` hook at each segment's first chunk index.
     """
     from repro.core.distributed_engine import DistConfig
 
@@ -542,21 +721,131 @@ def build_index_sharded(
     if n_pad > n:
         rp = np.concatenate([rp, np.full(n_pad - n, rp[-1], np.int32)])
         od = np.concatenate([od, np.zeros(n_pad - n, np.int32)])
-    step = _cached_sharded_build_step(
-        cfg, mesh, r, l, sketch_l, n, max_steps, compact_every,
-        source_batch, respawn, touch_bits,
-    )
-    with mesh:
-        out = step(
-            jnp.asarray(rp), jnp.asarray(np.asarray(graph.col_idx, np.int32)),
-            jnp.asarray(od), key,
+    rp_j = jnp.asarray(rp)
+    col_j = jnp.asarray(np.asarray(graph.col_idx, np.int32))
+    od_j = jnp.asarray(od)
+    n_chunks = ns // source_batch
+    ckpt = _make_build_checkpointer(
+        checkpoint_dir, checkpoint_every, checkpoint_keep, fault_plan)
+    extra_stats: dict = {}
+    if ckpt is None:
+        step = _cached_sharded_build_step(
+            cfg, mesh, r, l, sketch_l, n, max_steps, compact_every,
+            source_batch, respawn, touch_bits,
         )
-    values, indices, kept_rows, dropped_rows = out[:4]
-    touch = out[4] if touch_bits else None
-    kept, dropped = jax.device_get(
-        (jnp.sum(kept_rows), jnp.sum(dropped_rows))
-    )
-    kept, dropped = float(kept), float(dropped)
+        with mesh:
+            out = step(rp_j, col_j, od_j, key)
+        values, indices, kept_rows, dropped_rows = out[:4]
+        touch = out[4] if touch_bits else None
+        kept, dropped = jax.device_get(
+            (jnp.sum(kept_rows), jnp.sum(dropped_rows))
+        )
+        kept, dropped = float(kept), float(dropped)
+    else:
+        signature = dict(
+            kind="build_index_sharded",
+            r=int(r), l=int(l), sketch_l=int(sketch_l), c=float(c),
+            max_steps=int(max_steps), compact_every=int(compact_every),
+            source_batch=int(source_batch), respawn=bool(respawn),
+            touch_bits=int(touch_bits), n=int(n), n_pad=int(n_pad),
+            shards=int(ep), r_splits=int(n_split),
+            model_axis=str(model_axis), batch_axes=list(batch_axes),
+            mesh_shape={str(ax): int(sz) for ax, sz in mesh.shape.items()},
+            graph_crc=graph_fingerprint(graph),
+            key=serialize_key(key),
+        )
+        from jax.sharding import NamedSharding, PartitionSpec
+        sh_rows = NamedSharding(mesh, PartitionSpec(model_axis, None))
+        # per-shard-major blocks: [ep, done * source_batch, ...] host arrays
+        seg_vals: List = []
+        seg_idxs: List = []
+        seg_kept: List = []
+        seg_dropped: List = []
+        seg_touch: List = []
+        start_chunk = 0
+        commits = 0
+        if resume:
+            restored = _resume_build_state(ckpt, signature)
+            if restored is not None:
+                start_chunk, tree, extra = restored
+                if extra.get("complete"):
+                    stats = dict(extra["stats"])
+                    stats["resumed_complete"] = True
+                    values = jax.device_put(np.asarray(tree["vals"]), sh_rows)
+                    indices = jax.device_put(np.asarray(tree["idxs"]), sh_rows)
+                    if touch_bits:
+                        stats["touch"] = jax.device_put(
+                            np.asarray(tree["touch"]), sh_rows)
+                        stats["touch_bits"] = touch_bits
+                    return (
+                        PPRIndex(values=values, indices=indices,
+                                 l=l, n=n_pad),
+                        stats,
+                    )
+                seg_vals.append(np.asarray(tree["vals"]))
+                seg_idxs.append(np.asarray(tree["idxs"]))
+                seg_kept.append(np.asarray(tree["kept"]))
+                seg_dropped.append(np.asarray(tree["dropped"]))
+                if touch_bits:
+                    seg_touch.append(np.asarray(tree["touch"]))
+        ci = start_chunk
+        while ci < n_chunks:
+            if fault_plan is not None:
+                fault_plan.chunk_boundary(ci)
+            cnt = min(checkpoint_every, n_chunks - ci)
+            seg_step = _cached_sharded_build_step(
+                cfg, mesh, r, l, sketch_l, n, max_steps, compact_every,
+                source_batch, respawn, touch_bits, ci, cnt,
+            )
+            with mesh:
+                out = seg_step(rp_j, col_j, od_j, key)
+            rows = cnt * source_batch
+            host = jax.device_get(out)
+            seg_vals.append(np.asarray(host[0]).reshape(ep, rows, l))
+            seg_idxs.append(np.asarray(host[1]).reshape(ep, rows, l))
+            seg_kept.append(np.asarray(host[2]).reshape(ep, rows))
+            seg_dropped.append(np.asarray(host[3]).reshape(ep, rows))
+            if touch_bits:
+                seg_touch.append(
+                    np.asarray(host[4]).reshape(ep, rows, touch_bits))
+            ci += cnt
+            if ci < n_chunks:
+                tree = dict(
+                    vals=np.concatenate(seg_vals, axis=1),
+                    idxs=np.concatenate(seg_idxs, axis=1),
+                    kept=np.concatenate(seg_kept, axis=1),
+                    dropped=np.concatenate(seg_dropped, axis=1),
+                )
+                if touch_bits:
+                    tree["touch"] = np.concatenate(seg_touch, axis=1)
+                ckpt.save(ci, tree, dict(
+                    signature=signature, complete=False,
+                    next_chunk=ci, n_chunks=n_chunks,
+                ))
+                commits += 1
+                seg_vals[:] = [tree["vals"]]
+                seg_idxs[:] = [tree["idxs"]]
+                seg_kept[:] = [tree["kept"]]
+                seg_dropped[:] = [tree["dropped"]]
+                if touch_bits:
+                    seg_touch[:] = [tree["touch"]]
+        # shard-major reassembly: concat segments per shard, then stack
+        # shards — exactly the [n_pad, l] row order of the one-scan sweep
+        vals_h = np.concatenate(seg_vals, axis=1).reshape(n_pad, l)
+        idxs_h = np.concatenate(seg_idxs, axis=1).reshape(n_pad, l)
+        kept_h = np.concatenate(seg_kept, axis=1).reshape(n_pad)
+        dropped_h = np.concatenate(seg_dropped, axis=1).reshape(n_pad)
+        values = jax.device_put(vals_h, sh_rows)
+        indices = jax.device_put(idxs_h, sh_rows)
+        touch = None
+        if touch_bits:
+            touch_h = np.concatenate(
+                seg_touch, axis=1).reshape(n_pad, touch_bits)
+            touch = jax.device_put(touch_h, sh_rows)
+        kept = float(jnp.sum(jnp.asarray(kept_h)))
+        dropped = float(jnp.sum(jnp.asarray(dropped_h)))
+        extra_stats = dict(
+            checkpoint_commits=commits, resumed_at_chunk=start_chunk)
     stats = dict(
         r=r,
         l=l,
@@ -576,10 +865,53 @@ def build_index_sharded(
         drop_fraction=dropped / max(kept + dropped, 1e-12),
         nbytes=n_pad * l * 8,
     )
+    stats.update(extra_stats)
+    if ckpt is not None:
+        tree = dict(vals=vals_h, idxs=idxs_h,
+                    kept=kept_h, dropped=dropped_h)
+        if touch_bits:
+            tree["touch"] = touch_h
+        ckpt.save(n_chunks, tree, dict(
+            signature=signature, complete=True,
+            next_chunk=n_chunks, n_chunks=n_chunks,
+            stats={k: v for k, v in stats.items() if k != "touch"},
+        ))
     if touch_bits:
         stats["touch"] = touch
         stats["touch_bits"] = touch_bits
     return PPRIndex(values=values, indices=indices, l=l, n=n_pad), stats
+
+
+def load_index_checkpoint(
+    checkpoint_dir: str,
+) -> Tuple[PPRIndex, dict]:
+    """Load the newest *complete* committed index from a build checkpoint.
+
+    The serving boot path: after a (possibly resumed) build finishes, its
+    final ``complete=True`` step holds the assembled index rows plus the
+    json-safe build stats — a server restart reloads them without
+    re-simulating a single walk.  Partial (mid-build) steps and ``.tmp``
+    dirs are never candidates; corrupted steps fall back to the prior
+    complete step; no usable step raises ``FileNotFoundError``.
+    """
+    ckpt = Checkpointer(checkpoint_dir)
+    hit = ckpt.restore_latest(
+        predicate=lambda extra: bool(extra.get("complete")))
+    if hit is None:
+        raise FileNotFoundError(
+            f"no complete committed index checkpoint under {checkpoint_dir}"
+        )
+    _, tree, extra = hit
+    stats = dict(extra["stats"])
+    values = jnp.asarray(tree["vals"])
+    indices = jnp.asarray(tree["idxs"])
+    n, l = values.shape
+    if "touch" in tree:
+        touch = jnp.asarray(tree["touch"])
+        stats["touch"] = touch
+        stats["touch_bits"] = int(touch.shape[1])
+    return PPRIndex(values=values, indices=indices,
+                    l=int(l), n=int(n)), stats
 
 
 def index_from_dense(estimates: jax.Array, l: int) -> PPRIndex:

@@ -160,6 +160,11 @@ def build_maintainable_index(
     compact_every: int = 8,
     r_splits: int = 1,
     respawn: bool = False,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 8,
+    resume: bool = False,
+    checkpoint_keep: int = 3,
+    fault_plan=None,
     **sharded_kwargs,
 ) -> Tuple[MaintainableIndex, dict]:
     """Full-sweep index build that also records the maintenance state.
@@ -170,21 +175,33 @@ def build_maintainable_index(
     ``touch_bits=0`` auto-sizes the Bloom width from ``r``
     (:func:`default_touch_bits`).  Returns ``(maintainable, stats)`` with
     the touch filter popped out of ``stats`` into the result.
+
+    ``checkpoint_dir``/``checkpoint_every``/``resume`` make the build
+    crash-safe (see :func:`repro.core.index.build_index`); the touch
+    filter rides in every commit, so an index resumed from a checkpoint
+    repairs identically to an uninterrupted one
+    (:func:`load_maintainable_index` is the reload path).
     """
     if touch_bits <= 0:
         touch_bits = default_touch_bits(r, c)
+    ckpt_kwargs = dict(
+        checkpoint_dir=checkpoint_dir, checkpoint_every=checkpoint_every,
+        resume=resume, checkpoint_keep=checkpoint_keep,
+        fault_plan=fault_plan,
+    )
     if mesh is None:
         index, stats = build_index(
             graph, r, l, key, c=c, max_steps=max_steps,
             source_batch=source_batch, engine="sparse",
             compact_every=compact_every, r_splits=r_splits,
-            respawn=respawn, touch_bits=touch_bits,
+            respawn=respawn, touch_bits=touch_bits, **ckpt_kwargs,
         )
     else:
         index, stats = build_index_sharded(
             graph, r, l, key, mesh=mesh, c=c, max_steps=max_steps,
             source_batch=source_batch, compact_every=compact_every,
-            respawn=respawn, touch_bits=touch_bits, **sharded_kwargs,
+            respawn=respawn, touch_bits=touch_bits,
+            **ckpt_kwargs, **sharded_kwargs,
         )
     touch = TouchSketch(bits=stats.pop("touch"))
     params = BuildParams(
@@ -195,6 +212,48 @@ def build_maintainable_index(
     )
     m = MaintainableIndex(
         index=index, touch=touch, key=key, params=params, real_n=graph.n)
+    return m, stats
+
+
+def load_maintainable_index(checkpoint_dir: str) -> Tuple[
+        MaintainableIndex, dict]:
+    """Rebuild a :class:`MaintainableIndex` from a *complete* build
+    checkpoint — no walk is re-simulated.
+
+    The final ``complete=True`` step a checkpointed
+    :func:`build_maintainable_index` commits carries everything repair
+    needs: the index rows, the touch Bloom filter, and (in the build
+    signature) the PRNG key plus the exact chunk-grid parameters.  The
+    reloaded index therefore repairs bit-identically to the one the build
+    returned in-process.  Requires the build to have run with
+    ``touch_bits > 0`` (``build_maintainable_index`` always does).
+    """
+    from repro.core.index import load_index_checkpoint
+    from repro.distributed.checkpoint import Checkpointer, deserialize_key
+
+    index, stats = load_index_checkpoint(checkpoint_dir)
+    if "touch" not in stats:
+        raise ValueError(
+            f"checkpoint under {checkpoint_dir} has no touch sketch — not "
+            "a maintainable-index build")
+    ckpt = Checkpointer(checkpoint_dir)
+    hit = ckpt.restore_latest(
+        predicate=lambda extra: bool(extra.get("complete")))
+    assert hit is not None  # load_index_checkpoint already found it
+    sig = hit[2]["signature"]
+    key = deserialize_key(sig["key"])
+    params = BuildParams(
+        r=int(sig["r"]), l=int(stats["l"]), sketch_l=int(sig["sketch_l"]),
+        c=float(sig["c"]), max_steps=int(sig["max_steps"]),
+        compact_every=int(sig["compact_every"]),
+        source_batch=int(sig["source_batch"]),
+        r_splits=int(sig["r_splits"]), respawn=bool(sig["respawn"]),
+        engine=str(stats["engine"]),
+    )
+    touch = TouchSketch(bits=stats.pop("touch"))
+    m = MaintainableIndex(
+        index=index, touch=touch, key=key, params=params,
+        real_n=int(sig["n"]))
     return m, stats
 
 

@@ -713,3 +713,74 @@ def simulate_walks_sparse(
         ep_dropped=ep.dropped,
         touch=touch,
     )
+
+
+# ---------------------------------------------------------------------------
+# Conservation-ledger export (crash-safe index builds)
+# ---------------------------------------------------------------------------
+
+
+class BuildLedger:
+    """Host-side conservation ledger of a streaming index build.
+
+    The builders (``index._build_index_sparse`` and the sharded segment
+    loop) accumulate one kept/dropped estimate-mass entry per swept chunk
+    and sum them once at the end.  Checkpointed builds additionally need
+    the ledger *exportable* mid-sweep — committed with the partial index
+    rows so a resumed run reproduces the uninterrupted run's final sums
+    bitwise (same per-chunk f32 entries, same order, same one reduction).
+
+    Entries may be device scalars (``jnp.sum`` per chunk), device vectors
+    (per-row ledgers of a sharded segment), or restored numpy arrays — the
+    export normalizes everything to one flat f32 host array per side.
+    """
+
+    def __init__(self):
+        self._kept = []
+        self._dropped = []
+
+    def append(self, kept, dropped) -> None:
+        self._kept.append(kept)
+        self._dropped.append(dropped)
+
+    def __len__(self) -> int:
+        return len(self._kept)
+
+    @property
+    def empty(self) -> bool:
+        return not self._kept
+
+    def _flat(self, parts) -> jnp.ndarray:
+        return jnp.concatenate(
+            [jnp.asarray(p, jnp.float32).reshape(-1) for p in parts]
+        )
+
+    def export(self):
+        """``(kept f32[entries], dropped f32[entries])`` host arrays — the
+        checkpoint payload.  Exact: f32 values round-trip ``np.save``
+        bit-for-bit."""
+        import numpy as np
+        if self.empty:
+            z = np.zeros(0, np.float32)
+            return z, z
+        return (np.asarray(self._flat(self._kept)),
+                np.asarray(self._flat(self._dropped)))
+
+    @classmethod
+    def restore(cls, kept, dropped) -> "BuildLedger":
+        """Rebuild from exported arrays: one vector entry per side, so a
+        resumed ledger's flattened stream equals the uninterrupted one."""
+        led = cls()
+        led.append(kept, dropped)
+        return led
+
+    def totals(self):
+        """``(kept, dropped)`` floats: one ``jnp.sum`` over the flattened
+        entry stream per side, a single host sync."""
+        if self.empty:
+            return 0.0, 0.0
+        kept, dropped = jax.device_get(
+            (jnp.sum(self._flat(self._kept)),
+             jnp.sum(self._flat(self._dropped)))
+        )
+        return float(kept), float(dropped)

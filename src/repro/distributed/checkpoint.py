@@ -1,9 +1,10 @@
-"""Sharded checkpointing with atomic commit and async writes.
+"""Sharded checkpointing with atomic commit, checksums, and async writes.
 
 Layout (one directory per step)::
 
     <root>/step_<n>.tmp/            # written first
-        meta.json                   # step, tree structure, shapes, dtypes
+        meta.json                   # step, tree structure, shapes, dtypes,
+                                    # per-leaf crc32 checksums
         arr_<i>.npy                 # one file per leaf (host-gathered)
         extra.json                  # data-iterator state, rng, mesh shape
     <root>/step_<n>/                # atomic rename on success
@@ -11,6 +12,11 @@ Layout (one directory per step)::
 Fault-tolerance contract:
   * a crash mid-write leaves only a ``.tmp`` dir -> ignored on restore,
   * ``latest_step`` returns the newest *committed* checkpoint,
+  * every leaf's crc32 is recorded in ``meta.json`` at save time and
+    verified at restore time — a torn or bit-rotted shard raises
+    :class:`CheckpointCorruptionError` instead of restoring silently-wrong
+    state, and :meth:`Checkpointer.restore_latest` falls back to the prior
+    committed step,
   * restore re-shards onto whatever mesh the caller provides (elastic
     restart onto fewer/more devices re-uses the same files — see
     :mod:`repro.distributed.elastic`),
@@ -18,6 +24,11 @@ Fault-tolerance contract:
     is awaited (or re-raised) on the next save / explicit ``wait()``.
 
 bf16 leaves are stored via a uint16 view (npy has no native bfloat16).
+
+Flat ``dict`` payloads (the index-build checkpoints of
+``core/index.py``) additionally record their key list in ``meta.json``, so
+they can be restored without a ``like`` tree — the partial-restore API a
+resuming build uses before it knows how far the crashed run got.
 """
 
 from __future__ import annotations
@@ -26,11 +37,16 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+class CheckpointCorruptionError(RuntimeError):
+    """A committed checkpoint failed checksum / structural verification."""
 
 
 def _flatten(tree: Any):
@@ -51,10 +67,46 @@ def _from_numpy(x: np.ndarray, dtype: str):
     return jnp.asarray(x)
 
 
+def _crc(arr: np.ndarray) -> int:
+    """crc32 over the array's raw bytes — cheap relative to the np.save IO
+    it guards, and enough to catch torn writes / bit rot (this is an
+    integrity check, not an authenticity one)."""
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def serialize_key(key: jax.Array) -> dict:
+    """JSON-safe fingerprint of a PRNG key (raw ``uint32`` or typed)."""
+    if jnp.issubdtype(key.dtype, jax.dtypes.prng_key):
+        impl = str(jax.random.key_impl(key))
+        data = np.asarray(jax.random.key_data(key))
+    else:
+        impl = None
+        data = np.asarray(key)
+    return dict(impl=impl, data=data.astype(np.uint32).tolist())
+
+
+def deserialize_key(fp: dict) -> jax.Array:
+    """Inverse of :func:`serialize_key` — bit-exact key reconstruction."""
+    data = jnp.asarray(np.asarray(fp["data"], np.uint32))
+    if fp.get("impl"):
+        return jax.random.wrap_key_data(data, impl=fp["impl"])
+    return data
+
+
 class Checkpointer:
-    def __init__(self, root: str, *, keep: int = 3):
+    """Atomic-commit checkpoint store.
+
+    ``pre_commit(step)`` is an instrumentation seam invoked after a step's
+    files are fully written but *before* the atomic rename — fault-injection
+    tests (``repro.testing.faults``) raise there to simulate a crash
+    mid-write, which must leave only an ignored ``.tmp`` dir behind.
+    """
+
+    def __init__(self, root: str, *, keep: int = 3,
+                 pre_commit: Optional[Callable[[int], None]] = None):
         self.root = root
         self.keep = keep
+        self.pre_commit = pre_commit
         os.makedirs(root, exist_ok=True)
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
@@ -69,7 +121,12 @@ class Checkpointer:
             treedef=str(treedef),
             dtypes=[d for _, d in host_leaves],
             shapes=[list(a.shape) for a, _ in host_leaves],
+            checksums=[_crc(a) for a, _ in host_leaves],
         )
+        if isinstance(tree, dict) and all(isinstance(k, str) for k in tree):
+            # flat dict payloads restore without a `like` tree: record the
+            # key order tree_flatten used (sorted) so arr_<i> maps back
+            meta["keys"] = sorted(tree.keys())
         extra = extra or {}
 
         def write():
@@ -83,6 +140,8 @@ class Checkpointer:
                 json.dump(meta, f)
             with open(os.path.join(tmp, "extra.json"), "w") as f:
                 json.dump(extra, f)
+            if self.pre_commit is not None:
+                self.pre_commit(step)
             shutil.rmtree(final, ignore_errors=True)
             os.rename(tmp, final)  # atomic commit
             self._gc()
@@ -128,30 +187,110 @@ class Checkpointer:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, step: int, like: Any,
+    def read_meta(self, step: int) -> dict:
+        with open(os.path.join(self.root, f"step_{step}", "meta.json")) as f:
+            return json.load(f)
+
+    def read_extra(self, step: int) -> dict:
+        with open(os.path.join(self.root, f"step_{step}", "extra.json")) as f:
+            return json.load(f)
+
+    def verify_step(self, step: int) -> bool:
+        """True iff the committed step's every shard matches its recorded
+        checksum (pre-checksum checkpoints verify structurally only)."""
+        try:
+            self._load_leaves(step)
+        except (CheckpointCorruptionError, OSError, ValueError, KeyError):
+            return False
+        return True
+
+    def _load_leaves(self, step: int) -> Tuple[dict, List[np.ndarray]]:
+        d = os.path.join(self.root, f"step_{step}")
+        with open(os.path.join(d, "meta.json")) as f:
+            meta = json.load(f)
+        checksums = meta.get("checksums")
+        arrs: List[np.ndarray] = []
+        for i in range(len(meta["dtypes"])):
+            path = os.path.join(d, f"arr_{i}.npy")
+            try:
+                arr = np.load(path)
+            except (OSError, ValueError) as e:
+                raise CheckpointCorruptionError(
+                    f"step {step}: shard arr_{i}.npy unreadable: {e}"
+                ) from e
+            if list(arr.shape) != meta["shapes"][i]:
+                raise CheckpointCorruptionError(
+                    f"step {step}: shard arr_{i}.npy shape {arr.shape} != "
+                    f"recorded {meta['shapes'][i]}"
+                )
+            if checksums is not None and _crc(arr) != checksums[i]:
+                raise CheckpointCorruptionError(
+                    f"step {step}: shard arr_{i}.npy failed its checksum"
+                )
+            arrs.append(arr)
+        return meta, arrs
+
+    def restore(self, step: int, like: Any = None,
                 shard_fn: Optional[Callable[[Any], Any]] = None,
                 ) -> Tuple[Any, dict]:
         """Restore into the structure of ``like``.
+
+        ``like=None`` restores a flat-dict payload by the key list recorded
+        at save time (the partial-restore path: a resuming build does not
+        know the crashed run's array shapes up front).  Every shard is
+        checksum-verified; corruption raises
+        :class:`CheckpointCorruptionError`.
 
         ``shard_fn(tree) -> tree`` optionally re-places leaves onto a mesh
         (e.g. ``lambda t: jax.device_put(t, shardings)``) — the elastic
         restart path.
         """
-        d = os.path.join(self.root, f"step_{step}")
-        with open(os.path.join(d, "meta.json")) as f:
-            meta = json.load(f)
-        with open(os.path.join(d, "extra.json")) as f:
-            extra = json.load(f)
-        leaves_like, treedef = _flatten(like)
-        assert len(leaves_like) == len(meta["dtypes"]), (
-            "checkpoint/model structure mismatch"
-        )
+        meta, arrs = self._load_leaves(step)
+        extra = self.read_extra(step)
         leaves = [
-            _from_numpy(np.load(os.path.join(d, f"arr_{i}.npy")),
-                        meta["dtypes"][i])
-            for i in range(len(leaves_like))
+            _from_numpy(a, meta["dtypes"][i]) for i, a in enumerate(arrs)
         ]
-        tree = jax.tree_util.tree_unflatten(treedef, leaves)
+        if like is None:
+            keys = meta.get("keys")
+            if keys is None:
+                raise ValueError(
+                    f"step {step} was not saved as a flat dict; pass `like`"
+                )
+            tree = dict(zip(keys, leaves))
+        else:
+            leaves_like, treedef = _flatten(like)
+            assert len(leaves_like) == len(meta["dtypes"]), (
+                "checkpoint/model structure mismatch"
+            )
+            tree = jax.tree_util.tree_unflatten(treedef, leaves)
         if shard_fn is not None:
             tree = shard_fn(tree)
         return tree, extra
+
+    def restore_latest(
+        self, like: Any = None,
+        shard_fn: Optional[Callable[[Any], Any]] = None,
+        predicate: Optional[Callable[[dict], bool]] = None,
+    ) -> Optional[Tuple[int, Any, dict]]:
+        """Restore the newest committed step that verifies.
+
+        Walks committed steps newest-first (``.tmp`` dirs are never
+        candidates), skips any whose ``extra`` fails ``predicate``, and on
+        a checksum/structure failure *falls back to the prior committed
+        step* instead of raising — the resume contract of the crash-safe
+        index build.  Returns ``(step, tree, extra)`` or ``None`` when no
+        step survives.
+        """
+        for step in reversed(self.all_steps()):
+            if predicate is not None:
+                try:
+                    if not predicate(self.read_extra(step)):
+                        continue
+                except (OSError, ValueError):
+                    continue
+            try:
+                tree, extra = self.restore(step, like, shard_fn=shard_fn)
+            except (CheckpointCorruptionError, OSError, ValueError):
+                continue
+            return step, tree, extra
+        return None

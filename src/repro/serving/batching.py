@@ -26,6 +26,13 @@ import numpy as np
 TIERS = ("interactive", "bulk")
 
 
+class BufferOverloadError(RuntimeError):
+    """Raised by :meth:`RequestBuffer.submit` when admission control is on
+    (``BatchingConfig.max_queue_depth``) and the buffer is full.  The
+    service layer turns this into a *rejected* answer instead of queueing
+    the request into a latency cliff (``PPRService.submit``)."""
+
+
 @dataclasses.dataclass
 class Request:
     request_id: int
@@ -60,6 +67,11 @@ class BatchingConfig:
                                   # of batch capacity near saturation)
     min_pad: int = 1              # floor for the padded width (bounds the
                                   # set of jit shapes a service can compile)
+    max_queue_depth: Optional[int] = None  # admission control: pending
+                                  # requests beyond this are *shed*
+                                  # (BufferOverloadError) instead of queued
+                                  # — bounds worst-case queueing delay under
+                                  # overload.  None = unbounded (legacy).
     # per-request-class overrides; by default both tiers inherit the
     # top-level deadline/batch so single-tier callers see one policy
     interactive: TierPolicy = dataclasses.field(default_factory=TierPolicy)
@@ -111,6 +123,7 @@ class RequestBuffer:
         self.clock = clock or time.monotonic
         self._pending: Dict[str, List[Request]] = {t: [] for t in TIERS}
         self._next_id = 0
+        self.stats: Dict[str, int] = dict(shed=0)
 
     def allocate_id(self) -> int:
         """Reserve a request id without enqueuing anything — cache-served
@@ -130,6 +143,12 @@ class RequestBuffer:
 
         Either ``vertex`` (single-vertex query) or ``seeds`` (weighted
         seed-set query; ``weights`` defaults to uniform) must be given.
+
+        With ``cfg.max_queue_depth`` set, a submit that would push the
+        pending count past the bound is shed: nothing is enqueued, the
+        ``shed`` counter bumps, and :class:`BufferOverloadError` is raised
+        (argument validation still runs first — a malformed request is a
+        caller bug, not overload).
         """
         if tier not in TIERS:
             raise ValueError(f"unknown tier {tier!r} (expected one of {TIERS})")
@@ -150,6 +169,12 @@ class RequestBuffer:
                 vertex = int(s_arr[0])
         elif vertex is None:
             raise ValueError("submit() needs a vertex or a seed set")
+        depth = self.cfg.max_queue_depth
+        if depth is not None and len(self) >= depth:
+            self.stats["shed"] += 1
+            raise BufferOverloadError(
+                f"request buffer at max_queue_depth={depth}; request shed"
+            )
         rid = self.allocate_id()
         t = self.clock() if arrival is None else arrival
         self._pending[tier].append(

@@ -24,7 +24,8 @@ import numpy as np
 from repro.core.graph import Graph
 from repro.core.index import PPRIndex
 from repro.core.query import BatchQueryEngine, QueryConfig
-from repro.serving.batching import BatchingConfig, RequestBuffer
+from repro.serving.batching import (BatchingConfig, BufferOverloadError,
+                                    RequestBuffer)
 from repro.serving.cache import AnswerCache, CacheConfig, canonicalize_seed_set
 from repro.serving.pipeline import CompletedBatch, PipelineConfig, ServingPipeline
 
@@ -46,6 +47,8 @@ class Answer:
     latency_s: float
     tier: str = "interactive"
     cached: bool = False          # served from the answer cache (no dispatch)
+    rejected: bool = False        # shed by admission control: empty top-k,
+                                  # never dispatched (client should back off)
 
 
 class PPRService:
@@ -99,6 +102,7 @@ class PPRService:
             served=0, batches=0, total_latency=0.0, max_latency=0.0,
             pad_rows=0, first_batch_service_s=0.0, cache_served=0,
             updates_applied=0, rows_repaired=0, cache_stale_drops=0,
+            shed=0, update_rollbacks=0,
         )
         # answer cache (serving/cache.py): consulted at submit, filled at
         # absorb.  _pending_cached holds hit answers awaiting the next
@@ -106,6 +110,38 @@ class PPRService:
         # canonical key so their answers populate the cache.
         self._pending_cached: List[Tuple[int, int, str, float, Tuple]] = []
         self._inflight_keys: Dict[int, Tuple] = {}
+        # requests shed by admission control awaiting their rejected answer
+        self._pending_rejected: List[Tuple[int, int, str, float]] = []
+
+    @classmethod
+    def from_checkpoint(cls, graph: Graph, checkpoint_dir: str,
+                        cfg: Optional[ServiceConfig] = None,
+                        clock=None) -> "PPRService":
+        """Boot a service from a *complete* committed build checkpoint.
+
+        The crash-safe restart path: after a (possibly resumed) build, the
+        final ``complete=True`` step under ``checkpoint_dir`` holds the
+        assembled index, so a server restart reloads it without
+        re-simulating any walks.  A maintainable build (touch sketch in
+        the checkpoint) reloads with a full ``maintainer`` — so
+        ``apply_updates`` keeps working across the restart; a plain build
+        serves read-only.  Mid-build partial steps, ``.tmp`` dirs, and
+        checksum-corrupted steps are never booted from
+        (:func:`repro.core.index.load_index_checkpoint`).
+        """
+        from repro.core.index import load_index_checkpoint
+        from repro.core.updates import load_maintainable_index
+
+        try:
+            m, _ = load_maintainable_index(checkpoint_dir)
+        except ValueError:  # no touch sketch: not a maintainable build
+            index, _ = load_index_checkpoint(checkpoint_dir)
+            return cls(graph, index, cfg, clock=clock)
+        if m.real_n != graph.n:
+            raise ValueError(
+                f"checkpoint was built on {m.real_n} vertices but the "
+                f"graph has {graph.n}")
+        return cls(graph, None, cfg, clock=clock, maintainer=m)
 
     # -- client API ----------------------------------------------------------
     def submit(self, vertex: Optional[int] = None, tier: str = "interactive",
@@ -117,6 +153,12 @@ class PPRService:
         ``query.max_seeds`` seeds).  With the answer cache enabled, a
         request whose canonical seed set is cached never reaches the
         request buffer — its answer is delivered by the next ``poll()``.
+
+        Under admission control (``batching.max_queue_depth``) a submit
+        against a full buffer is *shed*: it still gets a request id, but
+        the next ``poll()`` delivers an empty answer with
+        ``rejected=True`` instead of queueing the request into a latency
+        cliff.  Cache hits bypass the buffer and are never shed.
         """
         if seeds is not None:
             s_arr = np.asarray(seeds, dtype=np.int64).reshape(-1)
@@ -147,16 +189,36 @@ class PPRService:
                 # key then computes byte-identical answers, so the cached
                 # answer is exact for all of them, not just the first
                 quantum = self.cfg.cache.weight_quantum
-                rid = self.buffer.submit(
-                    primary, tier=tier, arrival=arrival,
-                    seeds=list(key[0]),
-                    weights=[q * quantum for q in key[1]],
-                )
+                try:
+                    rid = self.buffer.submit(
+                        primary, tier=tier, arrival=arrival,
+                        seeds=list(key[0]),
+                        weights=[q * quantum for q in key[1]],
+                    )
+                except BufferOverloadError:
+                    return self._reject(primary, tier, arrival)
                 self._inflight_keys[rid] = key
                 return rid
-        return self.buffer.submit(
-            vertex, tier=tier, arrival=arrival, seeds=seeds, weights=weights
-        )
+        try:
+            return self.buffer.submit(
+                vertex, tier=tier, arrival=arrival, seeds=seeds,
+                weights=weights,
+            )
+        except BufferOverloadError:
+            primary = (
+                int(vertex) if seeds is None
+                else int(np.asarray(seeds).reshape(-1)[0])
+            )
+            return self._reject(primary, tier, arrival)
+
+    def _reject(self, vertex: int, tier: str, arrival: Optional[float]) -> int:
+        """Record a shed request; its ``rejected=True`` answer (empty
+        top-k) is delivered by the next ``poll()``."""
+        rid = self.buffer.allocate_id()
+        t = self.clock() if arrival is None else arrival
+        self._pending_rejected.append((rid, int(vertex), tier, t))
+        self.stats["shed"] += 1
+        return rid
 
     def invalidate(self, vertices: Iterable[int]) -> int:
         """Drop cached answers whose seed sets touch ``vertices`` (the hook
@@ -175,6 +237,14 @@ class PPRService:
         dirtied fingerprint rows in the answer cache — which also bumps
         the cache epoch, fencing out any batch still in flight on the old
         index.  Returns the repair report plus ``cache_invalidated``.
+
+        The swap is atomic: every piece of replacement state (repaired
+        index, new engine) is constructed *before* any service attribute
+        changes, so a failure anywhere — repair or engine construction —
+        leaves the service exactly as it was, still serving the old
+        graph/index (``stats["update_rollbacks"]`` counts these).  A
+        half-applied update (new graph, old engine) would silently serve
+        wrong answers, which is strictly worse than failing the update.
         """
         if self.maintainer is None:
             raise ValueError(
@@ -183,12 +253,20 @@ class PPRService:
                 "and pass it to PPRService(..., maintainer=...))")
         from repro.core import updates as updates_mod
 
-        new_graph, new_m, report = updates_mod.apply_updates(
-            self.maintainer, self.graph, inserts=inserts, deletes=deletes)
+        try:
+            new_graph, new_m, report = updates_mod.apply_updates(
+                self.maintainer, self.graph, inserts=inserts, deletes=deletes)
+            new_engine = BatchQueryEngine(
+                new_graph, new_m.index, self.cfg.query)
+        except BaseException:
+            self.stats["update_rollbacks"] += 1
+            raise
+        # commit point: plain attribute assignments only — nothing below
+        # this line can raise halfway through the swap
         self.graph = new_graph
         self.maintainer = new_m
-        self.engine = BatchQueryEngine(new_graph, new_m.index, self.cfg.query)
-        self.pipeline.engine = self.engine
+        self.engine = new_engine
+        self.pipeline.engine = new_engine
         self.frontier_path = (
             "sparse" if self.engine.uses_sparse_path() else "dense")
         self.answer_k = self.engine.effective_top_k
@@ -216,7 +294,7 @@ class PPRService:
         matching the pre-pipeline blocking ``poll()``.  Cache-hit answers
         pending since ``submit`` are always delivered, pipeline or not.
         """
-        cached = self._drain_cached()
+        cached = self._drain_cached() + self._drain_rejected()
         if (not len(self.buffer) or not (self.buffer.ready() or force)) \
                 and not self.pipeline.in_flight:
             return cached
@@ -250,6 +328,25 @@ class PPRService:
             self.stats["max_latency"] = max(self.stats["max_latency"], lat)
         self._pending_cached.clear()
         return out
+
+    def _drain_rejected(self) -> List[Answer]:
+        """Materialize ``rejected=True`` answers for shed requests.  Shed
+        traffic never occupied a batch row, so it stays out of the
+        served/latency metrics — ``stats["shed"]`` is its ledger."""
+        if not self._pending_rejected:
+            return []
+        out: List[Answer] = []
+        now = self.clock()
+        empty_v = np.zeros(0, dtype=np.int64)
+        empty_s = np.zeros(0, dtype=np.float32)
+        for rid, vertex, tier, arrival in self._pending_rejected:
+            out.append(Answer(
+                rid, vertex, empty_v, empty_s, now - arrival, tier,
+                rejected=True,
+            ))
+        self._pending_rejected.clear()
+        return out
+
     def _absorb(self, completed: List[CompletedBatch]) -> List[Answer]:
         out: List[Answer] = []
         for batch in completed:
@@ -292,6 +389,8 @@ class PPRService:
         for k in self.pipeline.stats:
             self.pipeline.stats[k] = 0
         self.pipeline.batch_hist.clear()
+        for k in self.buffer.stats:
+            self.buffer.stats[k] = 0
         for k in self.cache.stats:  # counters only; cached entries persist
             self.cache.stats[k] = 0
 
@@ -304,6 +403,8 @@ class PPRService:
         s["index_sharded"] = self.index_sharded
         s["pipeline_depth"] = self.cfg.pipeline.depth
         s["dispatch_path"] = self.cfg.pipeline.dispatch
+        s["max_queue_depth"] = self.cfg.batching.max_queue_depth
+        s["buffer_shed"] = self.buffer.stats["shed"]
         s["combine_path"] = (
             "scatter" if self.engine.uses_scatter_combine(
                 self.cfg.batching.max_batch) else "sparse"

@@ -31,6 +31,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
+import warnings
 from typing import Callable, Deque, Dict, List, Optional
 
 import jax
@@ -49,12 +50,21 @@ class PipelineConfig:
                                   # dispatch (donated to the fused query),
                                   # so a steady-state loop allocates no new
                                   # per-dispatch result arrays
+    stall_timeout_s: Optional[float] = None  # stuck-ticket watchdog: a
+                                  # head-of-queue batch still not ready this
+                                  # long after dispatch counts as stalled
+                                  # (stats["stalled"] + one warning per
+                                  # ticket).  None disables the watchdog.
 
     def __post_init__(self):
         if self.depth < 1:
             raise ValueError(f"pipeline depth must be >= 1, got {self.depth}")
         if self.dispatch not in ("fused", "legacy"):
             raise ValueError(f"unknown dispatch {self.dispatch!r}")
+        if self.stall_timeout_s is not None and self.stall_timeout_s <= 0:
+            raise ValueError(
+                f"stall_timeout_s must be positive, got {self.stall_timeout_s}"
+            )
 
 
 @dataclasses.dataclass
@@ -74,6 +84,8 @@ class PendingBatch:
     # — the invalidate-vs-in-flight race fix.  Answers are still correct to
     # *return* (the request was accepted before the update).
     epoch: int = 0
+    stall_warned: bool = False    # watchdog fired for this ticket (each
+                                  # stuck batch counts/warns exactly once)
 
     def is_ready(self) -> bool:
         """Non-blocking completion probe via ``jax.Array.is_ready``."""
@@ -129,6 +141,10 @@ class CompletionQueue:
         self._q.popleft()
         return head
 
+    def head(self) -> Optional[PendingBatch]:
+        """Peek the oldest in-flight ticket (watchdog probe; no pop)."""
+        return self._q[0] if self._q else None
+
 
 class ServingPipeline:
     """Glue between a :class:`RequestBuffer` and a query engine.
@@ -151,7 +167,7 @@ class ServingPipeline:
         self._seq = 0
         self.stats: Dict[str, float] = dict(
             dispatched=0, harvested=0, queue_full_stalls=0, in_flight_peak=0,
-            buffers_allocated=0, buffers_reused=0,
+            buffers_allocated=0, buffers_reused=0, stalled=0,
         )
         # padded batch width -> count; the benchmark's batch-size histogram
         self.batch_hist: Dict[int, int] = collections.Counter()
@@ -271,9 +287,36 @@ class ServingPipeline:
         while len(self.queue):
             ticket = self.queue.pop(block=drain)
             if ticket is None:
+                self._watch_stall()
                 break
             out.append(self._complete(ticket))
         return out
+
+    def _watch_stall(self) -> None:
+        """Stuck-ticket watchdog: the head batch has had the device stream
+        to itself since dispatch, so an age past ``stall_timeout_s`` means
+        the stream is wedged (deadlocked collective, runaway kernel, host
+        callback hang) — surface it instead of polling forever silently.
+        Detection only: the ticket stays in flight (harvest with
+        ``drain=True`` still blocks on it), but the counter/warning give
+        load harnesses and operators a tripwire."""
+        if self.cfg.stall_timeout_s is None:
+            return
+        head = self.queue.head()
+        if head is None or head.stall_warned:
+            return
+        age = self.clock() - head.dispatched_at
+        if age >= self.cfg.stall_timeout_s:
+            head.stall_warned = True
+            self.stats["stalled"] += 1
+            warnings.warn(
+                f"serving pipeline batch seq={head.seq} "
+                f"({len(head.requests)} requests) has been in flight for "
+                f"{age:.3f}s (stall_timeout_s="
+                f"{self.cfg.stall_timeout_s}) — device stream may be stuck",
+                RuntimeWarning,
+                stacklevel=3,
+            )
 
     def flush(self) -> List[CompletedBatch]:
         """Dispatch whatever is buffered, then block for all of it."""

@@ -1,0 +1,5 @@
+"""Test-support utilities shipped with the library (fault injection)."""
+
+from repro.testing.faults import FaultPlan, InjectedFault
+
+__all__ = ["FaultPlan", "InjectedFault"]

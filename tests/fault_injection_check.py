@@ -1,0 +1,161 @@
+"""Crash-safety end-to-end check: SIGKILL the index build, resume, compare.
+
+Runs as a plain subprocess (``tests/test_checkpoint_resume.py`` drives it;
+``make test-faults`` runs it via pytest).  Two process roles:
+
+* **victim** (``build`` / ``build-sharded`` argv modes) — runs one
+  checkpointed build of a fixed deterministic workload; a
+  ``--kill-chunk N`` / ``--kill-commit N`` flag arms a
+  :class:`repro.testing.faults.FaultPlan` that SIGKILLs the process at
+  that chunk boundary / mid-checkpoint-write (no ``finally`` blocks, no
+  atexit — real preemption).  On completion it prints the index digest
+  and where it resumed from.
+* **driver** (no argv) — for each engine: builds the uninterrupted
+  reference in-process, then SIGKILLs a victim mid-build, SIGKILLs a
+  second victim mid-commit (leaving a ``.tmp``), corrupts the newest
+  committed step's shard bytes, and finally resumes a third victim to
+  completion.  Asserts: the ``.tmp`` dir is never restored, the
+  corrupted step fails verification and restore falls back past it, and
+  the resumed index digest equals the uninterrupted one **bitwise**.
+  Prints ``ALL OK`` iff everything held.
+"""
+
+import hashlib
+import os
+import signal
+import subprocess
+import sys
+
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+
+N = 48
+SOURCE_BATCH = 8          # -> 6 chunks both single-device and 1-shard mesh
+BUILD = dict(c=0.25, max_steps=24, compact_every=4, touch_bits=16)
+R, L = 2, 4
+CHECKPOINT_EVERY = 1      # commit every chunk: every boundary is resumable
+
+
+def make_graph():
+    from repro.core.graph import Graph
+
+    rng = np.random.default_rng(1234)
+    m = 6 * N
+    return Graph.from_edges(
+        rng.integers(0, N, m), rng.integers(0, N, m), n=N
+    )
+
+
+def digest(index, stats) -> str:
+    h = hashlib.sha256()
+    h.update(np.asarray(index.values).tobytes())
+    h.update(np.asarray(index.indices).tobytes())
+    h.update(np.asarray(stats["touch"]).tobytes())
+    return h.hexdigest()
+
+
+def run_build(sharded: bool, ckpt_dir, fault_plan=None, resume=False):
+    from repro.core.index import build_index, build_index_sharded
+
+    g = make_graph()
+    key = jax.random.PRNGKey(99)
+    kwargs = dict(
+        checkpoint_dir=ckpt_dir, checkpoint_every=CHECKPOINT_EVERY,
+        resume=resume, fault_plan=fault_plan,
+        source_batch=SOURCE_BATCH, **BUILD,
+    )
+    if sharded:
+        mesh = jax.make_mesh((1, 1), ("data", "model"))
+        return build_index_sharded(g, R, L, key, mesh=mesh, **kwargs)
+    return build_index(g, R, L, key, engine="sparse", **kwargs)
+
+
+def victim(argv):
+    from repro.testing import FaultPlan
+
+    mode, ckpt_dir = argv[0], argv[1]
+    plan = None
+    resume = False
+    args = argv[2:]
+    while args:
+        flag = args.pop(0)
+        if flag == "--kill-chunk":
+            plan = FaultPlan(kill_at_chunks=(int(args.pop(0)),))
+        elif flag == "--kill-commit":
+            plan = FaultPlan(kill_mid_commit=(int(args.pop(0)),))
+        elif flag == "--resume":
+            resume = True
+        else:
+            raise SystemExit(f"unknown flag {flag}")
+    index, stats = run_build(
+        mode == "build-sharded", ckpt_dir, fault_plan=plan, resume=resume)
+    print(f"DIGEST {digest(index, stats)}")
+    print(f"RESUMED_AT {stats.get('resumed_at_chunk', 0)}")
+
+
+def spawn(args):
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return subprocess.run(
+        [sys.executable, os.path.abspath(__file__)] + args,
+        env=env, capture_output=True, text=True, timeout=600,
+    )
+
+
+def driver():
+    import tempfile
+
+    from repro.distributed.checkpoint import Checkpointer
+
+    for mode in ("build", "build-sharded"):
+        # uninterrupted reference, no checkpointing at all
+        with tempfile.TemporaryDirectory() as d:
+            ref_index, ref_stats = run_build(mode == "build-sharded", d)
+            ref = digest(ref_index, ref_stats)
+        with tempfile.TemporaryDirectory() as d:
+            # 1) SIGKILL before chunk 3: committed progress survives
+            res = spawn([mode, d, "--kill-chunk", "3"])
+            assert res.returncode == -signal.SIGKILL, (
+                f"{mode}: expected SIGKILL death, got rc={res.returncode}\n"
+                f"{res.stdout}\n{res.stderr}")
+            ck = Checkpointer(d)
+            steps = ck.all_steps()
+            assert steps and max(steps) == 3, (mode, steps)
+
+            # 2) SIGKILL mid-commit of step 4: only a .tmp appears
+            res = spawn([mode, d, "--resume", "--kill-commit", "4"])
+            assert res.returncode == -signal.SIGKILL, (mode, res.returncode)
+            names = sorted(os.listdir(d))
+            assert "step_4.tmp" in names, (mode, names)
+            assert "step_4" not in names, (mode, names)
+            assert max(Checkpointer(d).all_steps()) == 3, mode
+
+            # 3) corrupt the newest committed step's first shard: restore
+            #    must reject it by checksum and fall back to step 2
+            with open(os.path.join(d, "step_3", "arr_0.npy"), "r+b") as f:
+                f.seek(120)
+                f.write(b"\xff" * 32)
+            assert not Checkpointer(d).verify_step(3), mode
+
+            # 4) resume to completion: .tmp ignored, corrupt step skipped,
+            #    final index bitwise equal to the uninterrupted build
+            res = spawn([mode, d, "--resume"])
+            assert res.returncode == 0, (
+                f"{mode}: resume failed\n{res.stdout}\n{res.stderr}")
+            lines = dict(
+                ln.split(" ", 1) for ln in res.stdout.splitlines()
+                if " " in ln)
+            assert lines["DIGEST"] == ref, f"{mode}: resumed digest differs"
+            assert int(lines["RESUMED_AT"]) == 2, (mode, lines)
+        print(f"{mode}: kill/kill-mid-commit/corrupt/resume OK")
+    print("ALL OK")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) > 1:
+        victim(sys.argv[1:])
+    else:
+        driver()

@@ -1,0 +1,186 @@
+"""Unit coverage for ``repro.distributed.checkpoint``: atomic commit,
+checksums, dtype round-trips, pruning, and the async-writer error path.
+
+The build-level resume contract (bitwise resumed == uninterrupted) lives
+in ``tests/test_checkpoint_resume.py``; this file pins the store itself.
+"""
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.checkpoint import (
+    CheckpointCorruptionError, Checkpointer, deserialize_key, serialize_key,
+)
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return dict(
+        vals=jnp.asarray(rng.normal(size=(6, 4)).astype(np.float32)),
+        idxs=jnp.asarray(rng.integers(0, 100, size=(6, 4)).astype(np.int32)),
+        mask=jnp.asarray(rng.integers(0, 2, size=(6,)).astype(bool)),
+    )
+
+
+def test_save_restore_roundtrip_flat_dict(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    tree = _tree()
+    ck.save(3, tree, dict(note="x"))
+    got, extra = ck.restore(3)          # no `like`: restored by meta keys
+    assert extra == dict(note="x")
+    assert sorted(got) == sorted(tree)
+    for k in tree:
+        assert np.array_equal(np.asarray(got[k]), np.asarray(tree[k]))
+        assert got[k].dtype == tree[k].dtype
+
+
+def test_bf16_uint16_view_roundtrip(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    x = jnp.asarray(
+        np.linspace(-3, 3, 16, dtype=np.float32)).astype(jnp.bfloat16)
+    ck.save(0, dict(x=x))
+    got, _ = ck.restore(0)
+    assert got["x"].dtype == jnp.bfloat16
+    assert np.array_equal(
+        np.asarray(got["x"]).view(np.uint16),
+        np.asarray(x).view(np.uint16),
+    )
+    # the on-disk shard is the uint16 view (npy has no native bfloat16) but
+    # meta records the logical dtype, and its checksum still verifies
+    meta = ck.read_meta(0)
+    assert meta["dtypes"] == ["bfloat16"]
+    assert ck.verify_step(0)
+
+
+def test_tmp_dirs_invisible_to_latest_step(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree())
+    # a crash mid-write leaves a .tmp dir; it must never be a candidate
+    os.makedirs(tmp_path / "step_9.tmp")
+    (tmp_path / "step_9.tmp" / "meta.json").write_text("{}")
+    assert ck.all_steps() == [1]
+    assert ck.latest_step() == 1
+    assert ck.restore_latest()[0] == 1
+
+
+def test_keep_prunes_old_steps(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in range(5):
+        ck.save(s, _tree(s))
+    assert ck.all_steps() == [3, 4]
+    got, _ = ck.restore(4)
+    assert np.array_equal(
+        np.asarray(got["vals"]), np.asarray(_tree(4)["vals"]))
+
+
+def test_checksum_corruption_detected_and_fallback(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1), dict(step=1))
+    ck.save(2, _tree(2), dict(step=2))
+    # flip committed shard bytes of the newest step (past the npy header)
+    shard = tmp_path / "step_2" / "arr_0.npy"
+    raw = bytearray(shard.read_bytes())
+    raw[-8:] = b"\x55" * 8
+    shard.write_bytes(bytes(raw))
+    assert not ck.verify_step(2)
+    assert ck.verify_step(1)
+    with pytest.raises(CheckpointCorruptionError):
+        ck.restore(2)
+    # restore_latest falls back to the prior committed step
+    step, got, extra = ck.restore_latest()
+    assert step == 1 and extra == dict(step=1)
+    assert np.array_equal(
+        np.asarray(got["vals"]), np.asarray(_tree(1)["vals"]))
+
+
+def test_shape_mismatch_is_corruption(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(0, dict(a=jnp.zeros((4, 3))))
+    np.save(tmp_path / "step_0" / "arr_0.npy", np.zeros((2, 3), np.float32))
+    assert not ck.verify_step(0)
+    with pytest.raises(CheckpointCorruptionError):
+        ck.restore(0)
+
+
+def test_restore_with_like_tree(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    like = (jnp.zeros((3, 2)), dict(b=jnp.zeros(5, jnp.int32)))
+    tree = (jnp.ones((3, 2)), dict(b=jnp.arange(5, dtype=jnp.int32)))
+    ck.save(7, tree)
+    got, _ = ck.restore(7, like=like)
+    assert np.array_equal(np.asarray(got[0]), np.ones((3, 2)))
+    assert np.array_equal(np.asarray(got[1]["b"]), np.arange(5))
+
+
+def test_restore_latest_predicate_skips_steps(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    ck.save(1, _tree(1), dict(complete=True))
+    ck.save(2, _tree(2), dict(complete=False))
+    step, _, extra = ck.restore_latest(
+        predicate=lambda e: e.get("complete"))
+    assert step == 1 and extra["complete"] is True
+
+
+def test_async_writer_error_reraised_on_next_save_and_wait(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    boom = RuntimeError("disk full")
+
+    def exploding_pre_commit(step):
+        raise boom
+
+    ck.pre_commit = exploding_pre_commit
+    ck.save(0, _tree(), blocking=False)   # error lands on the writer thread
+    ck._thread.join()
+    ck.pre_commit = None
+    # surfaced on the *next* save (which first waits on the writer) …
+    with pytest.raises(RuntimeError, match="disk full"):
+        ck.save(1, _tree(), blocking=False)
+    # … and the error is consumed, not raised forever
+    ck.wait()
+    ck.save(1, _tree(), blocking=False)
+    ck.wait()
+    assert ck.latest_step() == 1
+    # the failed step 0 never committed (only its .tmp remains)
+    assert 0 not in ck.all_steps()
+
+
+def test_async_save_overlaps_and_commits(tmp_path):
+    ck = Checkpointer(str(tmp_path))
+    gate = threading.Event()
+    ck.pre_commit = lambda step: gate.wait(5)
+    ck.save(0, _tree(), blocking=False)
+    assert ck.latest_step() is None       # still mid-write
+    gate.set()
+    ck.wait()
+    ck.pre_commit = None
+    assert ck.latest_step() == 0
+    assert ck.verify_step(0)
+
+
+def test_key_serialization_roundtrip_raw_and_typed():
+    raw = jax.random.PRNGKey(42)
+    fp = serialize_key(raw)
+    json.dumps(fp)                        # must be JSON-safe
+    back = deserialize_key(fp)
+    assert np.array_equal(np.asarray(back), np.asarray(raw))
+
+    typed = jax.random.key(42)
+    fp_t = serialize_key(typed)
+    json.dumps(fp_t)
+    back_t = deserialize_key(fp_t)
+    assert jnp.issubdtype(back_t.dtype, jax.dtypes.prng_key)
+    assert np.array_equal(
+        np.asarray(jax.random.key_data(back_t)),
+        np.asarray(jax.random.key_data(typed)),
+    )
+    # identical streams after reconstruction
+    assert np.array_equal(
+        np.asarray(jax.random.uniform(back_t, (4,))),
+        np.asarray(jax.random.uniform(typed, (4,))),
+    )

@@ -1,0 +1,311 @@
+"""Crash-safe build contract: a resumed build equals an uninterrupted one
+**bitwise** — values, indices, touch filters, and conservation ledgers —
+single-device and sharded/padded, with ``.tmp`` dirs and checksum-corrupted
+steps never restored.
+
+In-process halves inject clean Python faults (``repro.testing.faults``);
+the ``slow`` half drives real SIGKILLs through a subprocess
+(``tests/fault_injection_check.py``).
+"""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.graph import Graph
+from repro.core.index import (build_index, build_index_sharded,
+                              load_index_checkpoint)
+from repro.core.updates import (apply_updates, build_maintainable_index,
+                                load_maintainable_index)
+from repro.distributed.checkpoint import Checkpointer
+from repro.graphs import synthetic
+from repro.testing import FaultPlan, InjectedFault
+
+BUILD = dict(c=0.25, max_steps=24, source_batch=8, touch_bits=16)
+R, L = 2, 4
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return synthetic.erdos_renyi(48, 5.0, seed=7)
+
+
+@pytest.fixture(scope="module")
+def reference(graph):
+    """Uninterrupted, checkpoint-free single-device build."""
+    return build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse", **BUILD)
+
+
+def _assert_index_equal(index, stats, ref_index, ref_stats):
+    assert np.array_equal(
+        np.asarray(index.values), np.asarray(ref_index.values))
+    assert np.array_equal(
+        np.asarray(index.indices), np.asarray(ref_index.indices))
+    assert np.array_equal(
+        np.asarray(stats["touch"]), np.asarray(ref_stats["touch"]))
+    assert stats["kept_mass"] == ref_stats["kept_mass"]
+    assert stats["dropped_mass"] == ref_stats["dropped_mass"]
+
+
+def test_checkpointed_build_matches_plain_build(graph, reference, tmp_path):
+    ref_index, ref_stats = reference
+    index, stats = build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+        checkpoint_dir=str(tmp_path), checkpoint_every=2, **BUILD)
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+    assert stats["checkpoint_commits"] == 2      # 6 chunks, partials at 2,4
+    assert Checkpointer(str(tmp_path)).latest_step() == 6  # final commit
+
+
+@pytest.mark.parametrize("crash_chunk", [1, 3, 5])
+def test_resume_after_crash_is_bitwise(graph, reference, tmp_path,
+                                       crash_chunk):
+    ref_index, ref_stats = reference
+    with pytest.raises(InjectedFault):
+        build_index(
+            graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+            checkpoint_dir=str(tmp_path), checkpoint_every=1,
+            fault_plan=FaultPlan(raise_at_chunks=(crash_chunk,)), **BUILD)
+    index, stats = build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+        checkpoint_dir=str(tmp_path), checkpoint_every=1, resume=True,
+        **BUILD)
+    assert stats["resumed_at_chunk"] == crash_chunk
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+
+
+def test_mid_commit_crash_leaves_only_tmp(graph, reference, tmp_path):
+    """A crash between write-out and the atomic rename must leave a ``.tmp``
+    dir that restore ignores, falling back to the prior committed step."""
+    ref_index, ref_stats = reference
+    with pytest.raises(InjectedFault):
+        build_index(
+            graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+            checkpoint_dir=str(tmp_path), checkpoint_every=1,
+            fault_plan=FaultPlan(raise_mid_commit=(3,)), **BUILD)
+    names = sorted(os.listdir(tmp_path))
+    assert "step_3.tmp" in names and "step_3" not in names
+    index, stats = build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+        checkpoint_dir=str(tmp_path), checkpoint_every=1, resume=True,
+        **BUILD)
+    assert stats["resumed_at_chunk"] == 2        # step 3 never committed
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+
+
+def test_corrupted_step_falls_back_never_restores(graph, reference,
+                                                  tmp_path):
+    ref_index, ref_stats = reference
+    with pytest.raises(InjectedFault):
+        build_index(
+            graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+            checkpoint_dir=str(tmp_path), checkpoint_every=1,
+            fault_plan=FaultPlan(raise_at_chunks=(4,)), **BUILD)
+    # bit-rot the newest committed step's shard bytes
+    shard = tmp_path / "step_4" / "arr_0.npy"
+    raw = bytearray(shard.read_bytes())
+    raw[-16:] = b"\xaa" * 16
+    shard.write_bytes(bytes(raw))
+    assert not Checkpointer(str(tmp_path)).verify_step(4)
+    index, stats = build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+        checkpoint_dir=str(tmp_path), checkpoint_every=1, resume=True,
+        **BUILD)
+    assert stats["resumed_at_chunk"] == 3        # fell back past step 4
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+
+
+def test_resume_refuses_foreign_signature(graph, tmp_path):
+    """Resuming a different build (other key, other graph) into the same
+    directory must fail loudly, not splice RNG streams."""
+    with pytest.raises(InjectedFault):
+        build_index(
+            graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+            checkpoint_dir=str(tmp_path), checkpoint_every=1,
+            fault_plan=FaultPlan(raise_at_chunks=(2,)), **BUILD)
+    with pytest.raises(ValueError, match="signature mismatch"):
+        build_index(
+            graph, R, L, jax.random.PRNGKey(6), engine="sparse",
+            checkpoint_dir=str(tmp_path), checkpoint_every=1, resume=True,
+            **BUILD)
+    other = synthetic.erdos_renyi(48, 5.0, seed=8)
+    with pytest.raises(ValueError, match="signature mismatch"):
+        build_index(
+            other, R, L, jax.random.PRNGKey(5), engine="sparse",
+            checkpoint_dir=str(tmp_path), checkpoint_every=1, resume=True,
+            **BUILD)
+
+
+def test_resume_of_complete_build_short_circuits(graph, reference, tmp_path):
+    ref_index, ref_stats = reference
+    build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+        checkpoint_dir=str(tmp_path), checkpoint_every=2, **BUILD)
+    index, stats = build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+        checkpoint_dir=str(tmp_path), resume=True, **BUILD)
+    assert stats.get("resumed_complete") is True
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+    # and the serving boot path reads the same bits
+    lindex, lstats = load_index_checkpoint(str(tmp_path))
+    assert np.array_equal(
+        np.asarray(lindex.values), np.asarray(ref_index.values))
+    assert np.array_equal(
+        np.asarray(lstats["touch"]), np.asarray(ref_stats["touch"]))
+    assert lstats["touch_bits"] == BUILD["touch_bits"]
+
+
+# -- sharded / padded --------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sharded_setup():
+    # 50 vertices on a 1-shard model axis pads to 56 (7 chunks of 8): the
+    # padded tail exercises the pad-row zeroing through commit/resume
+    g = synthetic.erdos_renyi(50, 5.0, seed=11)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    kw = dict(mesh=mesh, c=0.25, max_steps=24, source_batch=8,
+              touch_bits=16)
+    ref = build_index_sharded(g, R, L, jax.random.PRNGKey(5), **kw)
+    return g, mesh, kw, ref
+
+
+def test_sharded_checkpointed_matches_plain(sharded_setup, tmp_path):
+    g, mesh, kw, (ref_index, ref_stats) = sharded_setup
+    index, stats = build_index_sharded(
+        g, R, L, jax.random.PRNGKey(5),
+        checkpoint_dir=str(tmp_path), checkpoint_every=2, **kw)
+    assert index.n == ref_index.n == 56          # padded row space
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+    # the index comes back device-placed equivalently to the plain build
+    assert index.values.sharding.is_equivalent_to(
+        ref_index.values.sharding, 2)
+
+
+def test_sharded_resume_is_bitwise(sharded_setup, tmp_path):
+    g, mesh, kw, (ref_index, ref_stats) = sharded_setup
+    with pytest.raises(InjectedFault):
+        build_index_sharded(
+            g, R, L, jax.random.PRNGKey(5), checkpoint_dir=str(tmp_path),
+            checkpoint_every=2,
+            fault_plan=FaultPlan(raise_at_chunks=(4,)), **kw)
+    index, stats = build_index_sharded(
+        g, R, L, jax.random.PRNGKey(5), checkpoint_dir=str(tmp_path),
+        checkpoint_every=2, resume=True, **kw)
+    assert stats["resumed_at_chunk"] == 4
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+    # resumed-of-complete short circuit, still bitwise
+    index2, stats2 = build_index_sharded(
+        g, R, L, jax.random.PRNGKey(5), checkpoint_dir=str(tmp_path),
+        resume=True, **kw)
+    assert stats2.get("resumed_complete") is True
+    assert np.array_equal(
+        np.asarray(index2.values), np.asarray(ref_index.values))
+
+
+def test_sharded_mid_commit_tmp_ignored(sharded_setup, tmp_path):
+    g, mesh, kw, (ref_index, ref_stats) = sharded_setup
+    with pytest.raises(InjectedFault):
+        build_index_sharded(
+            g, R, L, jax.random.PRNGKey(5), checkpoint_dir=str(tmp_path),
+            checkpoint_every=1,
+            fault_plan=FaultPlan(raise_mid_commit=(3,)), **kw)
+    names = sorted(os.listdir(tmp_path))
+    assert "step_3.tmp" in names and "step_3" not in names
+    index, stats = build_index_sharded(
+        g, R, L, jax.random.PRNGKey(5), checkpoint_dir=str(tmp_path),
+        checkpoint_every=1, resume=True, **kw)
+    assert stats["resumed_at_chunk"] == 2
+    _assert_index_equal(index, stats, ref_index, ref_stats)
+
+
+# -- maintainable index / repair on a resumed index --------------------------
+
+def test_maintainable_resume_and_repair_parity(graph, tmp_path):
+    key = jax.random.PRNGKey(13)
+    kw = dict(c=0.25, max_steps=24, source_batch=8, touch_bits=64)
+    ref_m, _ = build_maintainable_index(graph, R, L, key, **kw)
+    ins = np.array([[1, 5], [7, 2]])
+    _, ref_m2, _ = apply_updates(ref_m, graph, inserts=ins)
+
+    with pytest.raises(InjectedFault):
+        build_maintainable_index(
+            graph, R, L, key, checkpoint_dir=str(tmp_path),
+            checkpoint_every=1,
+            fault_plan=FaultPlan(raise_at_chunks=(3,)), **kw)
+    m, stats = build_maintainable_index(
+        graph, R, L, key, checkpoint_dir=str(tmp_path),
+        checkpoint_every=1, resume=True, **kw)
+    assert stats["resumed_at_chunk"] == 3
+    assert np.array_equal(
+        np.asarray(m.touch.bits), np.asarray(ref_m.touch.bits))
+    # repair on the resumed index replays the same chunks bit-identically
+    _, m2, _ = apply_updates(m, graph, inserts=ins)
+    assert np.array_equal(
+        np.asarray(m2.index.values), np.asarray(ref_m2.index.values))
+    assert np.array_equal(
+        np.asarray(m2.index.indices), np.asarray(ref_m2.index.indices))
+
+    # the reload path reconstructs key + chunk grid and repairs identically
+    mL, _ = load_maintainable_index(str(tmp_path))
+    assert mL.params == ref_m.params
+    assert np.array_equal(np.asarray(mL.key), np.asarray(ref_m.key))
+    _, m2L, _ = apply_updates(mL, graph, inserts=ins)
+    assert np.array_equal(
+        np.asarray(m2L.index.values), np.asarray(ref_m2.index.values))
+
+
+def test_load_maintainable_requires_touch(graph, tmp_path):
+    build_index(
+        graph, R, L, jax.random.PRNGKey(5), engine="sparse",
+        checkpoint_dir=str(tmp_path), c=0.25, max_steps=24, source_batch=8)
+    with pytest.raises(ValueError, match="touch"):
+        load_maintainable_index(str(tmp_path))
+
+
+def test_service_boots_from_checkpoint(graph, tmp_path):
+    from repro.serving.engine import PPRService
+
+    key = jax.random.PRNGKey(13)
+    m, _ = build_maintainable_index(
+        graph, R, L, key, c=0.25, max_steps=24, source_batch=8,
+        touch_bits=64, checkpoint_dir=str(tmp_path))
+    svc = PPRService.from_checkpoint(graph, str(tmp_path))
+    assert svc.maintainer is not None
+    svc.submit(3)
+    answers = svc.poll(force=True)
+    assert len(answers) == 1 and not answers[0].rejected
+    # updates keep working across the restart boundary
+    report = svc.apply_updates(inserts=np.array([[0, 5]]))
+    assert report["dirty_rows"] >= 1
+    assert svc.stats["updates_applied"] == 1
+
+
+def test_checkpointing_requires_sparse_engine(graph, tmp_path):
+    with pytest.raises(ValueError, match="sparse"):
+        build_index(
+            graph, R, L, jax.random.PRNGKey(5), engine="dense",
+            checkpoint_dir=str(tmp_path))
+
+
+@pytest.mark.slow  # several subprocess JAX startups + SIGKILL round-trips
+def test_sigkill_crash_resume_suite():
+    """Real preemption: the subprocess driver SIGKILLs builds at chunk
+    boundaries and mid-commit, corrupts a committed shard, resumes, and
+    asserts bitwise parity with the uninterrupted build (both engines)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    script = os.path.join(
+        os.path.dirname(__file__), "fault_injection_check.py")
+    res = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True,
+        timeout=900,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}"
+    assert "ALL OK" in res.stdout

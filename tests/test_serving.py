@@ -7,6 +7,9 @@ arrays as the depth=1 blocking path, on the dense and sparse frontier
 routes and against a padded (sharded-build-shaped) index.
 """
 
+import types
+import warnings
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -18,7 +21,8 @@ from repro.core.query import BatchQueryEngine, QueryConfig
 from repro.graphs import synthetic
 from repro.serving import (PipelineConfig, PPRService, ServiceConfig,
                            run_closed_loop, run_open_loop)
-from repro.serving.batching import BatchingConfig, RequestBuffer, TierPolicy
+from repro.serving.batching import (BatchingConfig, BufferOverloadError,
+                                    RequestBuffer, TierPolicy)
 from repro.serving.pipeline import CompletionQueue, PendingBatch, ServingPipeline
 
 
@@ -254,6 +258,60 @@ def test_drain_order_keeps_interactive_first_when_nothing_fired():
 
 
 # ---------------------------------------------------------------------------
+# satellite: admission control — bounded queue depth, shed counter,
+# rejected-answer path (injected clock throughout)
+# ---------------------------------------------------------------------------
+
+def test_buffer_admission_control_sheds_at_depth():
+    buf = RequestBuffer(BatchingConfig(max_batch=16, max_queue_depth=2),
+                        clock=lambda: 0.0)
+    buf.submit(0)
+    buf.submit(1)
+    with pytest.raises(BufferOverloadError):
+        buf.submit(2)
+    assert buf.stats["shed"] == 1
+    assert len(buf) == 2                # the overload submit enqueued nothing
+    reqs, _ = buf.drain()
+    assert [r.vertex for r in reqs] == [0, 1]
+    buf.submit(3)                       # drain freed the queue: admitted again
+    assert len(buf) == 1
+    # unbounded by default: no depth configured, nothing ever sheds
+    unb = RequestBuffer(BatchingConfig(max_batch=4), clock=lambda: 0.0)
+    for v in range(100):
+        unb.submit(v)
+    assert unb.stats["shed"] == 0 and len(unb) == 100
+
+
+def test_service_sheds_overload_with_rejected_answers(graph, index):
+    t = [0.0]
+    svc = _service(graph, index, clock=lambda: t[0], max_batch=16,
+                   max_wait_s=10.0, max_queue_depth=3)
+    rids = [svc.submit(v) for v in range(5)]       # last 2 shed
+    assert len(set(rids)) == 5                     # shed requests keep an id
+    assert svc.stats["shed"] == 2 and len(svc.buffer) == 3
+    t[0] = 0.25
+    answers = svc.poll(force=True)
+    assert len(answers) == 5
+    rej = {a.request_id: a for a in answers if a.rejected}
+    assert set(rej) == set(rids[3:])
+    for a in rej.values():
+        # empty top-k, never dispatched, latency still measured from arrival
+        assert a.top_vertices.size == 0 and a.top_scores.size == 0
+        assert a.latency_s == pytest.approx(0.25)
+    served = [a for a in answers if not a.rejected]
+    assert {a.request_id for a in served} == set(rids[:3])
+    assert all(a.top_scores.size > 0 for a in served)
+    s = svc.snapshot_stats()
+    # shed traffic never occupied a batch row: out of the served ledger
+    assert s["served"] == 3
+    assert s["shed"] == 2 and s["buffer_shed"] == 2
+    assert s["max_queue_depth"] == 3
+    # the drain freed the buffer: traffic is admitted again
+    svc.submit(7)
+    assert svc.stats["shed"] == 2 and len(svc.buffer) == 1
+
+
+# ---------------------------------------------------------------------------
 # pipeline mechanics (stub engine: no device work)
 # ---------------------------------------------------------------------------
 
@@ -351,6 +409,140 @@ def test_deadline_dispatch_deferred_while_busy():
     pl.harvest(drain=True)
     pl.dispatch()                                # idle again -> deferred goes
     assert pl.stats["dispatched"] == 3 and len(buf) == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: stuck-ticket watchdog (injected clock, never-ready tickets)
+# ---------------------------------------------------------------------------
+
+class _NeverReady:
+    """Device-array stand-in whose ticket never reports ready — a wedged
+    device stream as far as the completion queue can tell."""
+
+    def is_ready(self):
+        return False
+
+
+class _StuckEngine:
+    def dispatch_key(self, seq):
+        return seq
+
+    def query_topk_async(self, verts, *, key=None, out=None):
+        return _NeverReady(), _NeverReady()
+
+
+def test_stall_watchdog_counts_and_warns_once():
+    t = [0.0]
+    buf = RequestBuffer(BatchingConfig(max_batch=4, pad_to_power_of_two=False),
+                        clock=lambda: t[0])
+    pl = ServingPipeline(_StuckEngine(), buf,
+                         PipelineConfig(depth=2, stall_timeout_s=1.0),
+                         clock=lambda: t[0])
+    for v in range(4):
+        buf.submit(v)
+    pl.dispatch()
+    assert pl.in_flight == 1
+    # young ticket: harvest returns nothing and stays silent
+    t[0] = 0.5
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert pl.harvest() == []
+    assert pl.stats["stalled"] == 0
+    # past the deadline: counted + warned
+    t[0] = 1.5
+    with pytest.warns(RuntimeWarning, match="in flight for"):
+        assert pl.harvest() == []
+    assert pl.stats["stalled"] == 1
+    # detection only — the ticket stays in flight, and each stuck batch
+    # warns exactly once however often harvest polls it
+    assert pl.in_flight == 1
+    t[0] = 50.0
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert pl.harvest() == []
+    assert pl.stats["stalled"] == 1
+
+
+def test_stall_watchdog_disabled_by_default():
+    t = [0.0]
+    buf = RequestBuffer(BatchingConfig(max_batch=2, pad_to_power_of_two=False),
+                        clock=lambda: t[0])
+    pl = ServingPipeline(_StuckEngine(), buf, PipelineConfig(depth=2),
+                         clock=lambda: t[0])
+    buf.submit(0), buf.submit(1)
+    pl.dispatch()
+    t[0] = 1e6                          # ancient ticket, watchdog off
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert pl.harvest() == []
+    assert pl.stats["stalled"] == 0
+    with pytest.raises(ValueError, match="stall_timeout_s"):
+        PipelineConfig(stall_timeout_s=0.0)
+
+
+def test_stalled_counter_in_service_snapshot(graph, index):
+    svc = _service(graph, index)
+    s = svc.snapshot_stats()
+    assert s["pipeline_stalled"] == 0
+
+
+# ---------------------------------------------------------------------------
+# satellite: apply_updates is atomic — failure leaves the service untouched
+# ---------------------------------------------------------------------------
+
+def test_apply_updates_rolls_back_on_repair_failure(graph, index, monkeypatch):
+    from repro.core import updates as updates_mod
+
+    svc = _service(graph, index)
+    svc.maintainer = object()           # sentinel; repair fails before use
+
+    def boom(*a, **k):
+        raise RuntimeError("injected repair failure")
+
+    monkeypatch.setattr(updates_mod, "apply_updates", boom)
+    before = (svc.graph, svc.engine, svc.maintainer, svc.pipeline.engine)
+    with pytest.raises(RuntimeError, match="injected repair failure"):
+        svc.apply_updates(inserts=[[0, 1]])
+    # nothing swapped: same graph, same engine, same maintainer
+    assert (svc.graph, svc.engine, svc.maintainer,
+            svc.pipeline.engine) == before
+    assert svc.stats["update_rollbacks"] == 1
+    assert svc.stats["updates_applied"] == 0
+    assert svc.cache.epoch == 0         # no invalidation happened either
+    # the rolled-back service still serves
+    svc.submit(3)
+    answers = svc.poll(force=True)
+    assert len(answers) == 1 and not answers[0].rejected
+
+
+def test_apply_updates_rolls_back_on_engine_failure(graph, index, monkeypatch):
+    """Repair succeeds but the replacement engine fails to construct —
+    the dangerous half-applied window (new graph, old engine) must not
+    exist: everything is built before anything is assigned."""
+    import repro.serving.engine as engine_mod
+    from repro.core import updates as updates_mod
+
+    svc = _service(graph, index)
+    old_maintainer = object()
+    svc.maintainer = old_maintainer
+    fake_m = types.SimpleNamespace(index=index)
+    monkeypatch.setattr(
+        updates_mod, "apply_updates",
+        lambda *a, **k: (graph, fake_m,
+                         dict(dirty_rows=0, dirty_row_ids=[])))
+
+    def bad_engine(*a, **k):
+        raise ValueError("injected engine failure")
+
+    monkeypatch.setattr(engine_mod, "BatchQueryEngine", bad_engine)
+    old_engine = svc.engine
+    with pytest.raises(ValueError, match="injected engine failure"):
+        svc.apply_updates(inserts=[[0, 1]])
+    assert svc.maintainer is old_maintainer     # not fake_m
+    assert svc.engine is old_engine
+    assert svc.pipeline.engine is old_engine
+    assert svc.stats["update_rollbacks"] == 1
+    assert svc.stats["updates_applied"] == 0
 
 
 # ---------------------------------------------------------------------------
