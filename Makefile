@@ -3,7 +3,8 @@
 
 PY ?= python
 
-.PHONY: test test-fast test-faults test-parity test-kernels bench bench-smoke \
+.PHONY: test test-fast test-faults test-parity test-kernels lint-contracts \
+	bench bench-smoke \
 	bench-walks bench-preprocess-dist bench-serving bench-serving-smoke \
 	bench-cache bench-cache-smoke bench-updates bench-updates-smoke
 
@@ -12,9 +13,18 @@ test:
 	PYTHONPATH=src $(PY) -m pytest -x -q
 
 # quick subset: skips tests marked `slow` (see pytest.ini) — still includes
-# the fast half of the crash-safety suite (in-process fault injection)
-test-fast:
+# the fast half of the crash-safety suite (in-process fault injection).
+# Runs the contract auditor first: a layout/sync regression fails in
+# seconds, before any test executes.
+test-fast: lint-contracts
 	PYTHONPATH=src $(PY) -m pytest -x -q -m "not slow"
+
+# contract auditor (docs/static_analysis.md): jaxpr rules (hbm-residency,
+# no-replicated-index, dense-state-bound, retrace-guard) + AST lint
+# (host-sync, rng-discipline, bare-time).  Nonzero exit on any unsuppressed
+# finding; `--only <rule>` / `--json` for CI annotation.
+lint-contracts:
+	PYTHONPATH=src $(PY) -m repro.analysis
 
 # crash-safety suite: checkpoint store unit tests + resumable-build bitwise
 # parity, incl. the slow subprocess SIGKILL sweep (docs/indexing_path.md,

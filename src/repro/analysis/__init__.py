@@ -1,0 +1,40 @@
+"""Contract auditor: static analysis that enforces the performance and
+determinism invariants the scaling PRs rest on.
+
+Two engines under one rule registry:
+
+* **jaxpr auditor** (:mod:`repro.analysis.jaxpr`) — traces registered
+  entry points on tiny synthetic graphs and checks the traced program:
+  ``hbm-residency``, ``no-replicated-index``, ``dense-state-bound``,
+  ``retrace-guard``.
+* **AST lint** (:mod:`repro.analysis.lint`) — parses hot-path modules for
+  contracts tracing can't see: ``host-sync``, ``rng-discipline``,
+  ``bare-time``.
+
+Run with ``python -m repro.analysis`` (``make lint-contracts``); suppress
+an intentional violation in source with
+``# contract: allow(<rule>): <justification>``.  See
+``docs/static_analysis.md`` for the rule catalog and how to register a
+new entry point.
+
+This package root stays import-light (registry only): kernel modules
+import :mod:`repro.analysis.registry` at definition time to register
+their entry points, and must not pay for (or cycle into) the rule
+implementations, which import the kernels back.
+"""
+
+from repro.analysis.registry import (    # noqa: F401
+    EntryPoint,
+    Finding,
+    clear_entry_points,
+    entry_points,
+    register_entry_point,
+)
+
+__all__ = [
+    "EntryPoint",
+    "Finding",
+    "clear_entry_points",
+    "entry_points",
+    "register_entry_point",
+]

@@ -1,0 +1,63 @@
+"""Contract auditor CLI: ``python -m repro.analysis [--only RULE] [--json]``.
+
+Exit code is nonzero on any unsuppressed finding.  The environment is
+prepared *before* jax is imported: the ``no-replicated-index`` rule needs
+a multi-device mesh to be meaningful (with one device a shard's legal
+block IS ``[n, L]``), so the runner forces a 4-way host-platform split the
+same way ``tests/dist_engine_check.py`` does.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _prepare_env() -> None:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=4"
+        ).strip()
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Run the performance/determinism contract auditor.",
+    )
+    parser.add_argument(
+        "--only", action="append", metavar="RULE",
+        help="run only this rule (repeatable); default: all rules",
+    )
+    parser.add_argument(
+        "--json", action="store_true", help="emit the JSON report"
+    )
+    parser.add_argument(
+        "--list-rules", action="store_true",
+        help="list known rules and exit",
+    )
+    args = parser.parse_args(argv)
+
+    _prepare_env()
+    # Deferred: rules imports jax (and traces kernels); env must be set first.
+    from repro.analysis import report as report_mod
+    from repro.analysis import rules as rules_mod
+
+    if args.list_rules:
+        for name, runner in rules_mod.RULES.items():
+            print(name)
+        return 0
+
+    results = rules_mod.run_rules(only=args.only)
+    if args.json:
+        print(report_mod.render_json(results))
+    else:
+        print(report_mod.render_text(results))
+    return report_mod.exit_code(results)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

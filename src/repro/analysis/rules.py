@@ -1,0 +1,289 @@
+"""The contract-rule catalog: what the auditor checks and where.
+
+Jaxpr rules run over *registered entry points* — kernel and build modules
+call :func:`repro.analysis.registry.register_entry_point` at import time
+with a lazy spec builder, and importing the modules in ``_HOOK_MODULES``
+below is what populates the registry.  Lint rules run over explicit module
+scope lists (the "hot-path allowlist" &c.), resolved relative to
+``src/repro``.
+
+Spec schemas returned by entry-point ``build()`` thunks (any builder may
+instead return ``{"skip": reason}``):
+
+    hbm-residency        {"fn", "args", "kwargs"?, "hbm_shapes", "vmem_budget"}
+    no-replicated-index  {"jaxpr", "n", "l"}
+    dense-state-bound    {"jaxpr", "budget", "floor"}
+    retrace-guard        {"jit_fn", "widths", "variants", "call"}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from pathlib import Path
+from typing import Callable, Dict, List, Optional, Sequence
+
+from repro.analysis import jaxpr as jx
+from repro.analysis import lint
+from repro.analysis.registry import Finding, entry_points
+
+# Importing these modules registers the traced entry points the jaxpr
+# rules audit (each module's registration block sits at its bottom).
+_HOOK_MODULES = (
+    "repro.kernels.frontier_push",
+    "repro.kernels.index_combine",
+    "repro.kernels.walk_step",
+    "repro.core.index",
+    "repro.core.query",
+    "repro.core.distributed_engine",
+)
+
+_SRC_REPRO = Path(__file__).resolve().parents[1]   # .../src/repro
+
+# Hot-path allowlist for the host-sync rule: dispatch and harvest code
+# where one stray sync serializes the whole pipeline.
+HOST_SYNC_SCOPE = (
+    "serving/pipeline.py",
+    "serving/engine.py",
+    "core/query.py",
+    "core/verd.py",
+    "core/walks.py",
+)
+
+# Build/repair code where RNG keys must stay positional for bitwise
+# resume (PR 9) and bitwise repair (PR 8).
+RNG_SCOPE = (
+    "core/index.py",
+    "core/walks.py",
+    "core/updates.py",
+    "core/distributed_engine.py",
+    "distributed/checkpoint.py",
+)
+
+# Modules allowed to read wall clocks / global randomness: the load
+# generator exists to model wall-clock arrival processes.
+BARE_TIME_EXEMPT = ("serving/loadgen.py",)
+
+
+def load_entry_points() -> None:
+    for mod in _HOOK_MODULES:
+        importlib.import_module(mod)
+
+
+@dataclasses.dataclass
+class RuleResult:
+    rule: str
+    kind: str                     # "jaxpr" | "lint"
+    description: str
+    findings: List[Finding]
+    skipped: List[str] = dataclasses.field(default_factory=list)
+    audited: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def unsuppressed(self) -> List[Finding]:
+        return [f for f in self.findings if not f.suppressed]
+
+    @property
+    def status(self) -> str:
+        if self.unsuppressed:
+            return "FAIL"
+        if not self.audited and self.skipped:
+            return "SKIP"
+        return "PASS"
+
+
+def _anchor_for(module: str) -> str:
+    return module
+
+
+# -- jaxpr rules -------------------------------------------------------------
+
+def _run_hbm_residency() -> RuleResult:
+    res = RuleResult(
+        rule="hbm-residency", kind="jaxpr",
+        description="CSR / [n, L] index operands stay HBM-resident "
+                    "(memory_space=ANY) in every Pallas kernel; VMEM blocks "
+                    "respect the per-tile budget",
+        findings=[],
+    )
+    for ep in entry_points("hbm-residency"):
+        spec = ep.build()
+        if "skip" in spec:
+            res.skipped.append(f"{ep.name}: {spec['skip']}")
+            continue
+        blocks = jx.pallas_block_specs(
+            spec["fn"], *spec.get("args", ()), **spec.get("kwargs", {})
+        )
+        res.findings.extend(jx.hbm_contract_findings(
+            blocks,
+            hbm_shapes=spec["hbm_shapes"],
+            vmem_budget=spec["vmem_budget"],
+            anchor=_anchor_for(ep.module),
+        ))
+        res.audited.append(ep.name)
+    return res
+
+
+def _run_no_replicated_index() -> RuleResult:
+    res = RuleResult(
+        rule="no-replicated-index", kind="jaxpr",
+        description="no per-device array >= [n, L] inside the sharded "
+                    "build's shard_map bodies (the index must stay "
+                    "model-sharded, never replicated)",
+        findings=[],
+    )
+    for ep in entry_points("no-replicated-index"):
+        spec = ep.build()
+        if "skip" in spec:
+            res.skipped.append(f"{ep.name}: {spec['skip']}")
+            continue
+        res.findings.extend(jx.replicated_index_findings(
+            spec["jaxpr"], n=spec["n"], l=spec["l"],
+            anchor=_anchor_for(ep.module),
+        ))
+        res.audited.append(ep.name)
+    return res
+
+
+def _run_dense_state_bound() -> RuleResult:
+    res = RuleResult(
+        rule="dense-state-bound", kind="jaxpr",
+        description="no f32[rows, n] intermediate in the sparse walk chunk "
+                    "and no f32[Q, n] in the sparse query path (budget must "
+                    "stay below the dense floor)",
+        findings=[],
+    )
+    for ep in entry_points("dense-state-bound"):
+        spec = ep.build()
+        if "skip" in spec:
+            res.skipped.append(f"{ep.name}: {spec['skip']}")
+            continue
+        res.findings.extend(jx.dense_state_findings(
+            spec["jaxpr"], budget=spec["budget"], floor=spec["floor"],
+            anchor=_anchor_for(ep.module),
+        ))
+        res.audited.append(ep.name)
+    return res
+
+
+def _run_retrace_guard() -> RuleResult:
+    res = RuleResult(
+        rule="retrace-guard", kind="jaxpr",
+        description="jitted serving entry points compile exactly one cache "
+                    "entry per bucketed pad width (no weak-type/dtype "
+                    "retraces)",
+        findings=[],
+    )
+    for ep in entry_points("retrace-guard"):
+        spec = ep.build()
+        if "skip" in spec:
+            res.skipped.append(f"{ep.name}: {spec['skip']}")
+            continue
+        jit_fn = spec["jit_fn"]
+        if not (hasattr(jit_fn, "_clear_cache")
+                and hasattr(jit_fn, "_cache_size")):
+            res.skipped.append(
+                f"{ep.name}: jit function exposes no cache introspection "
+                f"on this jax version"
+            )
+            continue
+        widths: Sequence[int] = spec["widths"]
+        variants: int = spec.get("variants", 1)
+        call: Callable[[int, int], None] = spec["call"]
+        jit_fn._clear_cache()
+        for width in widths:
+            for variant in range(variants):
+                call(width, variant)
+        n_entries = jit_fn._cache_size()
+        if n_entries != len(widths):
+            res.findings.append(Finding(
+                rule="retrace-guard", file=_anchor_for(ep.module), line=0,
+                message=f"{ep.name}: {n_entries} compile-cache entries for "
+                        f"{len(widths)} pad-width buckets {list(widths)} "
+                        f"x {variants} input spellings — a width or input "
+                        f"spelling is retracing",
+            ))
+        res.audited.append(ep.name)
+    return res
+
+
+# -- lint rules --------------------------------------------------------------
+
+def _lint_paths(scope: Sequence[str]) -> List[Path]:
+    return [_SRC_REPRO / rel for rel in scope]
+
+
+def _run_lint_rule(rule: str, description: str,
+                   paths: Sequence[Path]) -> RuleResult:
+    res = RuleResult(rule=rule, kind="lint", description=description,
+                     findings=[])
+    for path in paths:
+        anchor = "src/repro/" + str(path.relative_to(_SRC_REPRO))
+        if not path.exists():
+            res.skipped.append(f"{anchor}: file not found")
+            continue
+        res.findings.extend(lint.lint_file(path, anchor, [rule]))
+        res.audited.append(anchor)
+    return res
+
+
+def _run_host_sync() -> RuleResult:
+    return _run_lint_rule(
+        lint.HOST_SYNC,
+        "no host syncs (float()/bool() on device values, .item(), "
+        "np.asarray, block_until_ready, device truthiness) in hot "
+        "dispatch/harvest modules",
+        _lint_paths(HOST_SYNC_SCOPE),
+    )
+
+
+def _run_rng_discipline() -> RuleResult:
+    return _run_lint_rule(
+        lint.RNG_DISCIPLINE,
+        "build/repair RNG keys stay positional: no split() stored into "
+        "mutable state, no fold_in with non-literal non-offset data",
+        _lint_paths(RNG_SCOPE),
+    )
+
+
+def _run_bare_time() -> RuleResult:
+    paths = [
+        p for p in sorted(_SRC_REPRO.rglob("*.py"))
+        if str(p.relative_to(_SRC_REPRO)) not in BARE_TIME_EXEMPT
+    ]
+    return _run_lint_rule(
+        lint.BARE_TIME,
+        "no bare time.time() / stdlib random.* outside loadgen and "
+        "benchmarks",
+        paths,
+    )
+
+
+RULES: Dict[str, Callable[[], RuleResult]] = {
+    "hbm-residency": _run_hbm_residency,
+    "no-replicated-index": _run_no_replicated_index,
+    "dense-state-bound": _run_dense_state_bound,
+    "retrace-guard": _run_retrace_guard,
+    "host-sync": _run_host_sync,
+    "rng-discipline": _run_rng_discipline,
+    "bare-time": _run_bare_time,
+}
+
+
+def run_rules(only: Optional[Sequence[str]] = None) -> List[RuleResult]:
+    """Run the catalog (or the ``only`` subset) and return per-rule results.
+
+    Jaxpr entry points are loaded first; lint rules need no tracing and run
+    even when jax-level tracing is unavailable.
+    """
+    names = list(RULES) if not only else list(only)
+    unknown = [n for n in names if n not in RULES]
+    if unknown:
+        raise ValueError(
+            f"unknown rule(s) {unknown}; known: {sorted(RULES)}"
+        )
+    if any(RULES[n] in (_run_hbm_residency, _run_no_replicated_index,
+                        _run_dense_state_bound, _run_retrace_guard)
+           for n in names):
+        load_entry_points()
+    return [RULES[name]() for name in names]

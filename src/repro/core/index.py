@@ -1083,3 +1083,34 @@ def preprocessing_cost_model(
         slot_occupancy=positions / max(slot_positions, 1),
         walk_state_bytes=sc["walk_state_bytes"],
     )
+
+
+# ---------------------------------------------------------------------------
+# Contract-auditor entry point (repro.analysis): the sparse build's
+# per-chunk computation holds no f32[rows, n] intermediate — peak device
+# memory is O(rows * sketch_l), independent of n beyond the CSR itself.
+# Mirrors tests/test_walks_sparse.py::test_build_index_sparse_memory_contract.
+# ---------------------------------------------------------------------------
+
+from repro.analysis.registry import register_entry_point as _register_ep
+
+
+def _contract_spec_sparse_walk_chunk():
+    from repro.graphs import synthetic
+
+    g = synthetic.rmat(12, avg_deg=6.0, seed=5)      # n = 4096
+    rows, r, l = 64, 16, 32
+    sketch_l = max(2 * l, l + 32)
+    chunk = jnp.arange(rows, dtype=jnp.int32)
+    fn = functools.partial(
+        sparse_chunk_estimates, r=r, l=l, sketch_l=sketch_l
+    )
+    jaxpr = jax.make_jaxpr(fn)(g, chunk, jax.random.PRNGKey(0))
+    # widest fold candidate row: sketch + a full pending buffer + the last
+    # event segment that tipped it over (<= compact_every * r wide)
+    budget = rows * (sketch_l + max(4 * sketch_l, 512) + 8 * r + 8)
+    return dict(jaxpr=jaxpr, budget=budget, floor=rows * g.n)
+
+
+_register_ep("sparse-walk-chunk", "dense-state-bound",
+             "src/repro/core/index.py", _contract_spec_sparse_walk_chunk)

@@ -176,6 +176,7 @@ class BatchQueryEngine:
             + math.log(max(cfg.max_seeds, 1))
         )
         if log_support >= math.log(max(n, 1)):
+            # contract: allow(host-sync): n is a static python int
             support = float(n)
         else:
             support = math.exp(log_support)
@@ -423,8 +424,11 @@ class BatchQueryEngine:
         seed) reproduces every chunk bit for bit.  ``weights f32[N, S]``
         switches ``sources int32[N, S]`` to seed-set rows.
         """
+        # contract: allow(host-sync): run() is the offline batched driver —
+        # it normalizes host inputs and materializes every chunk by design
         sources = np.asarray(sources, dtype=np.int32)
         weights = (
+            # contract: allow(host-sync): host input normalization
             None if weights is None else np.asarray(weights, dtype=np.float32)
         )
         k = self.effective_top_k
@@ -441,9 +445,9 @@ class BatchQueryEngine:
                 chunk, key=jax.random.fold_in(self._base_key, i),
                 weights=w_chunk,
             )
-            v.block_until_ready()
-            vals[i : i + len(chunk)] = np.asarray(v)
-            idxs[i : i + len(chunk)] = np.asarray(ix)
+            v.block_until_ready()  # contract: allow(host-sync): offline driver
+            vals[i : i + len(chunk)] = np.asarray(v)  # contract: allow(host-sync): offline driver
+            idxs[i : i + len(chunk)] = np.asarray(ix)  # contract: allow(host-sync): offline driver
         elapsed = time.perf_counter() - start
         return dict(
             values=vals,
@@ -566,3 +570,85 @@ def _fused_topk_into(
     """
     vals, idx = _fused_topk_impl(graph, index, sources, key, weights, **statics)
     return out_v.at[:].set(vals), out_i.at[:].set(idx.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Contract-auditor entry points (repro.analysis).
+#
+# dense-state-bound: the sparse query path must hold Q x K state, never an
+# f32[Q, n] dense frontier (the scatter combine is budget-gated separately,
+# so the audit pins the comparator combine path).  The widest legal f32
+# intermediate is the combine candidate row (~K*L wide) plus the push
+# gather area (~K*degree_cap), far under the dense floor Q*n.
+#
+# retrace-guard: the fused serving jit must compile exactly one cache entry
+# per bucketed pad width — a weak-type or dtype wobble in the dispatch path
+# (e.g. a python-int seed list vs an np.int32 array) would silently double
+# compile time and jit-cache footprint in production.
+# ---------------------------------------------------------------------------
+
+from repro.analysis.registry import register_entry_point as _register_ep
+
+
+def _contract_spec_sparse_query():
+    import numpy as np
+
+    from repro.graphs import synthetic
+
+    n, q, l = 1 << 14, 8, 16
+    g = synthetic.erdos_renyi(n, 3.0, seed=7)
+    rng = np.random.default_rng(0)
+    index = PPRIndex(
+        values=jnp.asarray(rng.random((n, l)), jnp.float32),
+        indices=jnp.asarray(rng.integers(0, n, (n, l)), jnp.int32),
+        l=l, n=n,
+    )
+    engine = BatchQueryEngine(g, index, QueryConfig(
+        mode="powerwalk", t_iterations=2, top_k=32, frontier_k=128,
+        frontier_path="sparse", combine_path="sparse",
+    ))
+    cap = engine.degree_cap()   # primed outside the trace (host-side max)
+    k = engine.frontier_k
+    sources = jnp.arange(q, dtype=jnp.int32)
+    jaxpr = jax.make_jaxpr(lambda s: engine.query_topk_async(s))(sources)
+    budget = q * (k * (cap + l + 8) + 1024)
+    return dict(jaxpr=jaxpr, budget=budget, floor=q * n)
+
+
+def _retrace_spec_fused_topk():
+    import numpy as np
+
+    from repro.graphs import synthetic
+    from repro.serving.batching import BatchingConfig
+
+    n, l = 256, 8
+    g = synthetic.erdos_renyi(n, 4.0, seed=3)
+    rng = np.random.default_rng(1)
+    index = PPRIndex(
+        values=jnp.asarray(rng.random((n, l)), jnp.float32),
+        indices=jnp.asarray(rng.integers(0, n, (n, l)), jnp.int32),
+        l=l, n=n,
+    )
+    engine = BatchQueryEngine(
+        g, index, QueryConfig(mode="powerwalk", t_iterations=1, top_k=8)
+    )
+    widths = BatchingConfig(max_batch=64).padded_shapes()
+
+    def call(width: int, variant: int) -> None:
+        # three spellings of the same batch a production dispatcher might
+        # produce; all must normalize to one (shape, dtype) cache entry
+        if variant == 0:
+            srcs = np.zeros(width, np.int32)
+        elif variant == 1:
+            srcs = jnp.zeros(width, jnp.int32)
+        else:
+            srcs = [0] * width
+        engine.query_topk_async(srcs, key=engine.dispatch_key(0))
+
+    return dict(jit_fn=_fused_topk, widths=widths, variants=3, call=call)
+
+
+_register_ep("sparse-query-path", "dense-state-bound",
+             "src/repro/core/query.py", _contract_spec_sparse_query)
+_register_ep("fused-topk-serving", "retrace-guard",
+             "src/repro/core/query.py", _retrace_spec_fused_topk)

@@ -191,6 +191,8 @@ def resolve_degree_cap(graph: Graph) -> int:
     exact.  Must run outside jit (it materializes a device scalar)."""
     if graph.n == 0 or graph.m == 0:
         return 1
+    # contract: allow(host-sync): one-time per-graph scalar, cached by every
+    # caller (BatchQueryEngine.degree_cap) — never on the per-query path
     return max(int(jax.device_get(jnp.max(graph.out_deg))), 1)
 
 
@@ -718,6 +720,8 @@ def recursive_decomp(
     the recursion root v itself (p_v = e_v for dangling v).
     """
     if t == 0:
+        # contract: allow(host-sync): recursive_decomp is the float64 host
+        # oracle the device paths are tested against
         return np.asarray(base_vectors[u], dtype=np.float64)
     out_nbrs = graph.out_neighbors(u)
     n = graph.n

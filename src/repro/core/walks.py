@@ -763,8 +763,8 @@ class BuildLedger:
         if self.empty:
             z = np.zeros(0, np.float32)
             return z, z
-        return (np.asarray(self._flat(self._kept)),
-                np.asarray(self._flat(self._dropped)))
+        return (np.asarray(self._flat(self._kept)),  # contract: allow(host-sync): ledger totals, end of build
+                np.asarray(self._flat(self._dropped)))  # contract: allow(host-sync): ledger totals, end of build
 
     @classmethod
     def restore(cls, kept, dropped) -> "BuildLedger":
@@ -779,8 +779,10 @@ class BuildLedger:
         entry stream per side, a single host sync."""
         if self.empty:
             return 0.0, 0.0
+        # contract: allow(host-sync): single end-of-build conservation sync
         kept, dropped = jax.device_get(
             (jnp.sum(self._flat(self._kept)),
              jnp.sum(self._flat(self._dropped)))
         )
+        # contract: allow(host-sync): kept/dropped already on host (above)
         return float(kept), float(dropped)

@@ -335,3 +335,71 @@ def sharded_frontier_push(
         ],
         interpret=interpret,
     )(windows, fv, start, deg, col_idx)
+
+
+# ---------------------------------------------------------------------------
+# Contract-auditor entry points (repro.analysis): register both push kernels
+# under the hbm-residency rule.  The builders are lazy — they construct tiny
+# synthetic fixtures only when `python -m repro.analysis` runs the rule —
+# and mirror tests/test_kernels.py's memory-contract parameters.
+# ---------------------------------------------------------------------------
+
+from repro.analysis.registry import register_entry_point as _register_ep
+
+
+def _contract_spec_frontier_push():
+    import numpy as np
+    from repro.core import verd as verd_mod
+    from repro.graphs import synthetic
+
+    rng = np.random.default_rng(0)
+    n, q, k, q_tile, k_out = 2048, 16, 8, 8, 16
+    g = synthetic.erdos_renyi(n, 6.0, seed=7)
+    cap = verd_mod.resolve_degree_cap(g)
+    srcs = jnp.asarray(rng.integers(0, n, q), jnp.int32)
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, n, (q, k)), jnp.int32)
+    h, s = verd_mod.resolve_hub_splits(cap, 0)
+    return dict(
+        fn=functools.partial(
+            frontier_push, c=0.15, degree_cap=cap, k_out=k_out,
+            q_tile=q_tile, interpret=True,
+        ),
+        args=(fv, fi, srcs, g.row_ptr, g.out_deg, g.col_idx),
+        hbm_shapes=[(g.m,)],
+        vmem_budget=q_tile * k * s * h + q_tile * max(k, k_out),
+    )
+
+
+def _contract_spec_sharded_push():
+    import numpy as np
+    from repro.core import verd as verd_mod
+    from repro.core.distributed_engine import DistConfig, build_sharded_graph
+    from repro.graphs import synthetic
+
+    rng = np.random.default_rng(0)
+    n, q, k, q_tile, wire_k = 2048, 16, 8, 4, 8
+    g = synthetic.erdos_renyi(n, 6.0, seed=7)
+    cap = verd_mod.resolve_degree_cap(g)
+    cfg = DistConfig(n=n, ep=2, degree_cap=cap)
+    slabs = build_sharded_graph(g, cfg)
+    ns = cfg.n_shard
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.clip(jnp.asarray(rng.integers(0, n, (q, k)), jnp.int32), 0, ns - 1)
+    m_shard = slabs.col_idx.shape[1]
+    h, s = verd_mod.resolve_hub_splits(cap, 0)
+    return dict(
+        fn=functools.partial(
+            sharded_frontier_push, c=0.15, degree_cap=cap, ep=2, n_shard=ns,
+            wire_k=wire_k, q_tile=q_tile, interpret=True,
+        ),
+        args=(fv, fi, slabs.row_ptr[0], slabs.col_idx[0]),
+        hbm_shapes=[(m_shard,)],
+        vmem_budget=q_tile * k * s * h + q_tile * 2 * wire_k,
+    )
+
+
+_register_ep("frontier-push", "hbm-residency",
+             "src/repro/kernels/frontier_push.py", _contract_spec_frontier_push)
+_register_ep("sharded-frontier-push", "hbm-residency",
+             "src/repro/kernels/frontier_push.py", _contract_spec_sharded_push)

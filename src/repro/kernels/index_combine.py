@@ -201,3 +201,39 @@ def sparse_vmem_bytes_legacy(
     """Pre-HBM-resident accounting: the same tiles plus both whole ``[n,
     L]`` index arrays resident per step."""
     return sparse_vmem_bytes(q_tile, k, s_w, l, k_out) + 2 * n * l * 4
+
+
+# ---------------------------------------------------------------------------
+# Contract-auditor entry point (repro.analysis): the sparse combine's two
+# [n, L] index arrays must ride as HBM refs, never as VMEM blocks.
+# ---------------------------------------------------------------------------
+
+from repro.analysis.registry import register_entry_point as _register_ep
+
+
+def _contract_spec_index_combine():
+    import functools
+
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    n, l, q, k, s_w = 600, 16, 16, 8, 8
+    q_tile, k_out = 8, 16
+    vals = jnp.asarray(rng.random((n, l)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, n, (n, l)), jnp.int32)
+    sv = jnp.asarray(rng.random((q, s_w)), jnp.float32)
+    si = jnp.asarray(rng.integers(0, n, (q, s_w)), jnp.int32)
+    fv = jnp.asarray(rng.random((q, k)), jnp.float32)
+    fi = jnp.asarray(rng.integers(0, n, (q, k)), jnp.int32)
+    return dict(
+        fn=functools.partial(
+            index_combine_sparse, k_out=k_out, q_tile=q_tile, interpret=True,
+        ),
+        args=(sv, si, fv, fi, vals, idx),
+        hbm_shapes=[(n, l)],
+        vmem_budget=q_tile * k * l + q_tile * max(s_w, k, k_out) * 2,
+    )
+
+
+_register_ep("index-combine-sparse", "hbm-residency",
+             "src/repro/kernels/index_combine.py", _contract_spec_index_combine)

@@ -115,3 +115,35 @@ def walk_step(
         interpret=interpret,
     )(addr, deg2d, src2d, col_idx)
     return out.reshape(w)
+
+
+# ---------------------------------------------------------------------------
+# Contract-auditor entry point (repro.analysis): col_idx rides as an
+# ANY/HBM ref and every VMEM block stays O(w_tile).
+# ---------------------------------------------------------------------------
+
+from repro.analysis.registry import register_entry_point as _register_ep
+
+
+def _contract_spec_walk_step():
+    import functools
+
+    import numpy as np
+    from repro.graphs import synthetic
+
+    rng = np.random.default_rng(0)
+    n, w, w_tile = 4096, 256, 128
+    g = synthetic.erdos_renyi(n, 5.0, seed=13)
+    cur = jnp.asarray(rng.integers(0, n, w), jnp.int32)
+    src = jnp.asarray(rng.integers(0, n, w), jnp.int32)
+    u = jnp.asarray(rng.random(w), jnp.float32)
+    return dict(
+        fn=functools.partial(walk_step, w_tile=w_tile, interpret=True),
+        args=(cur, src, u, g.row_ptr, g.out_deg, g.col_idx),
+        hbm_shapes=[(g.m,)],
+        vmem_budget=vmem_bytes(w_tile) // 4 + w_tile,
+    )
+
+
+_register_ep("walk-step", "hbm-residency",
+             "src/repro/kernels/walk_step.py", _contract_spec_walk_step)

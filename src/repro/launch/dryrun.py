@@ -147,7 +147,7 @@ def lower_cell(arch_id: str, shape_name: str, mesh, *, donate: bool = True,
 
 
 def run_cell(arch_id, shape_name, mesh, out_dir=None, mesh_tag="pod"):
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         lowered, compiled, ctx = lower_cell(arch_id, shape_name, mesh)
         hlo = compiled.as_text()
@@ -158,12 +158,12 @@ def run_cell(arch_id, shape_name, mesh, out_dir=None, mesh_tag="pod"):
         )
         fits, used = roof.fit_check(terms)
         rec = dict(
-            ok=True, seconds=round(time.time() - t0, 1), **ctx,
+            ok=True, seconds=round(time.monotonic() - t0, 1), **ctx,
             roofline=terms.as_dict(), hbm_used=used, hbm_fits=fits,
         )
     except Exception as e:  # recorded, not raised: the sweep must finish
         rec = dict(
-            ok=False, seconds=round(time.time() - t0, 1),
+            ok=False, seconds=round(time.monotonic() - t0, 1),
             arch=arch_id, shape=shape_name, mesh_tag=mesh_tag,
             error=f"{type(e).__name__}: {e}",
             traceback=traceback.format_exc()[-2000:],
@@ -274,7 +274,7 @@ def lower_ppr_cell(name: str, mesh):
 
 
 def run_ppr_cell(name, mesh, out_dir=None, mesh_tag="pod"):
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         lowered, compiled, ctx = lower_ppr_cell(name, mesh)
         hlo = compiled.as_text()
@@ -283,10 +283,10 @@ def run_ppr_cell(name, mesh, out_dir=None, mesh_tag="pod"):
             n_devices=ctx["mesh"]["n_devices"],
         )
         fits, used = roof.fit_check(terms)
-        rec = dict(ok=True, seconds=round(time.time() - t0, 1), **ctx,
+        rec = dict(ok=True, seconds=round(time.monotonic() - t0, 1), **ctx,
                    roofline=terms.as_dict(), hbm_used=used, hbm_fits=fits)
     except Exception as e:
-        rec = dict(ok=False, seconds=round(time.time() - t0, 1),
+        rec = dict(ok=False, seconds=round(time.monotonic() - t0, 1),
                    arch="powerwalk-engine", shape=name, mesh_tag=mesh_tag,
                    error=f"{type(e).__name__}: {e}",
                    traceback=traceback.format_exc()[-2000:])

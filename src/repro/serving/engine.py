@@ -161,6 +161,8 @@ class PPRService:
         cliff.  Cache hits bypass the buffer and are never shed.
         """
         if seeds is not None:
+            # contract: allow(host-sync): validates a host-side seed list
+            # at submit time, before anything touches the device
             s_arr = np.asarray(seeds, dtype=np.int64).reshape(-1)
             if s_arr.size > self.cfg.query.max_seeds:
                 raise ValueError(
@@ -176,6 +178,7 @@ class PPRService:
             if key[0]:  # non-degenerate seed set: cacheable
                 primary = (
                     int(vertex) if seeds is None
+                    # contract: allow(host-sync): host-side seed list
                     else int(np.asarray(seeds).reshape(-1)[0])
                 )
                 hit = self.cache.get(key)
@@ -207,6 +210,7 @@ class PPRService:
         except BufferOverloadError:
             primary = (
                 int(vertex) if seeds is None
+                # contract: allow(host-sync): host-side seed list
                 else int(np.asarray(seeds).reshape(-1)[0])
             )
             return self._reject(primary, tier, arrival)

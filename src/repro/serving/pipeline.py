@@ -218,6 +218,9 @@ class ServingPipeline:
             getattr(self.engine, "config", None), "max_seeds", 1
         )
         if max_seeds <= 1:
+            # contract: allow(host-sync): marshals host-side Request
+            # objects into the dispatch batch; nothing here is a device
+            # array yet
             verts = np.array([r.vertex for r in requests], dtype=np.int32)
             if padded > len(requests):  # pad with vertex 0
                 verts = np.concatenate(
@@ -250,6 +253,8 @@ class ServingPipeline:
                 vals, idx = self.engine.query_topk(
                     jnp.asarray(verts), weights=jnp.asarray(weights)
                 )
+            # contract: allow(host-sync): the legacy dispatch mode IS the
+            # blocking baseline the async pipeline is benchmarked against
             vals.block_until_ready()
         else:
             kwargs = {}
@@ -328,7 +333,11 @@ class ServingPipeline:
         n_real = len(ticket.requests)
         # pad rows never reach answers or stats: slice them off on device so
         # only the real rows' top-k is materialized on the host
+        # contract: allow(host-sync): post-is_ready harvest — the ticket's
+        # arrays are already resident when _complete runs, so these copies
+        # never stall the dispatch thread
         vals = np.asarray(ticket.values[:n_real])
+        # contract: allow(host-sync): post-is_ready harvest (see above)
         idx = np.asarray(ticket.indices[:n_real])
         self.stats["harvested"] += 1
         if (

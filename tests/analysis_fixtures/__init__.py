@@ -1,0 +1,8 @@
+"""Deliberate contract violations for tests/test_analysis.py.
+
+Each module here is a minimal counter-example for one auditor rule —
+imported (jaxpr fixtures) or parsed (lint fixtures) by the analyzer
+tests, never by production code.  Lines carrying a violation are tagged
+with a ``# [viol:<kind>]`` marker so the tests can assert the reported
+file:line anchors without hardcoding line numbers.
+"""

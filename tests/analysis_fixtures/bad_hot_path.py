@@ -1,0 +1,23 @@
+"""host-sync violations in a fake dispatch/harvest loop, plus one
+correctly-suppressed sync and one allow() missing its justification."""
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def drain_and_dispatch(batch):
+    if jnp.any(batch > 0):                       # [viol:truthiness]
+        total = float(batch.sum())               # [viol:float]
+        first = batch[0].item()                  # [viol:item]
+        host = np.asarray(batch)                 # [viol:asarray]
+        ready = bool(jnp.all(batch < 1.0))       # [viol:bool]
+        return total, first, host, ready
+    return 0.0, 0, None, False
+
+
+def harvest(ticket):
+    # contract: allow(host-sync): post-is_ready harvest; already resident
+    good = np.asarray(ticket)                    # [ok:suppressed]
+    # next line: allow() with no justification text -> still a finding
+    bad = np.asarray(ticket)  # contract: allow(host-sync)
+    return good, bad

@@ -1,0 +1,24 @@
+"""rng-discipline + bare-time violations: a builder that reuses a mutable
+key chain (split stored into state), folds in data-dependent values, and
+stamps wall-clock time into build artifacts."""
+
+import time
+
+import jax
+
+
+class StatefulBuilder:
+    def __init__(self, seed: int):
+        self.key = jax.random.PRNGKey(seed)
+
+    def next_key(self):
+        # resume after chunk 7 replays a DIFFERENT key than the original
+        # run saw — bitwise resume/repair silently breaks
+        self.key, sub = jax.random.split(self.key)   # [viol:split-state]
+        return sub
+
+    def chunk_key(self, chunk_ids):
+        return jax.random.fold_in(self.key, chunk_ids.sum())  # [viol:fold-data]
+
+    def stamp(self):
+        return time.time()                           # [viol:bare-time]

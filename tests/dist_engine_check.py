@@ -24,7 +24,7 @@ from repro.core.index import build_index, build_index_sharded, index_from_dense
 from repro.core.power_iteration import exact_ppr_dense
 from repro.graphs import synthetic
 
-from jaxpr_utils import iter_eqns  # shared walker (tests dir is sys.path[0])
+from repro.analysis.jaxpr import assert_no_replicated_index, iter_eqns
 
 
 def densify_rows(values, indices, n):
@@ -80,31 +80,17 @@ def check_sharded_build(mesh):
     ci = jnp.asarray(np.asarray(g.col_idx))
     od = jnp.asarray(np.asarray(g.out_deg))
     jaxpr = jax.make_jaxpr(step)(rp, ci, od, key)
-    shard_bodies = [
-        eqn for eqn in iter_eqns(jaxpr.jaxpr)
+    # an index-shaped per-device block: >= n rows of >= l columns.  The
+    # per-device sweep may hold flattened [q*w, 1] scatter intermediates
+    # (row count is not vertex count there), but never a full-index [n, L]
+    # tile.  The check is the auditor's no-replicated-index rule.
+    assert_no_replicated_index(jaxpr, n=cfg.n, l=16)
+    checked = sum(
+        1 for eqn in iter_eqns(jaxpr.jaxpr)
         if eqn.primitive.name == "shard_map"
-    ]
-    assert shard_bodies, "expected a shard_map eqn in the build step"
-    checked = 0
-    for eqn in shard_bodies:
-        for inner in iter_eqns(eqn.params["jaxpr"]):
-            for var in inner.outvars:
-                aval = var.aval
-                if not hasattr(aval, "shape") or len(aval.shape) < 2:
-                    continue
-                checked += 1
-                # an index-shaped block: >= n rows of >= l columns.  The
-                # per-device sweep may hold flattened [q*w, 1] scatter
-                # intermediates (row count is not vertex count there), but
-                # never a full-index [n, L] tile
-                replicated_index = (
-                    aval.shape[-2] >= cfg.n and aval.shape[-1] >= 16
-                )
-                assert not replicated_index, (
-                    inner.primitive.name, aval.shape,
-                )
+    )
     assert checked > 0
-    print(f"sharded build memory contract OK ({checked} arrays checked)")
+    print(f"sharded build memory contract OK ({checked} shard_map eqns)")
 
     # serving: the model-sharded (and, on g2, row-padded) index answers
     # through the ordinary query engine without re-layout

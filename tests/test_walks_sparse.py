@@ -465,18 +465,13 @@ def test_build_index_sparse_memory_contract(key):
     )
     jaxpr = jax.make_jaxpr(fn)(g, chunk, key)
     # widest fold candidate row: sketch + a full pending buffer + the last
-    # event segment that tipped it over (<= compact_every * r wide)
-    from jaxpr_utils import iter_eqns
+    # event segment that tipped it over (<= compact_every * r wide).  The
+    # check itself is the auditor's dense-state-bound rule (repro.analysis);
+    # the same budget/floor pair also runs under `make lint-contracts`.
+    from repro.analysis.jaxpr import assert_dense_state_bound
 
     budget = rows * (sketch_l + max(4 * sketch_l, 512) + 8 * r + 8)
-    assert budget < rows * g.n                   # the assertion has teeth
-    for eqn in iter_eqns(jaxpr.jaxpr):
-        for var in eqn.outvars:
-            aval = var.aval
-            if not hasattr(aval, "shape") or aval.dtype != jnp.float32:
-                continue
-            size = int(np.prod(aval.shape)) if aval.shape else 1
-            assert size <= budget, (eqn.primitive.name, aval.shape)
+    assert_dense_state_bound(jaxpr, budget=budget, floor=rows * g.n)
 
 
 @pytest.mark.slow
